@@ -1,0 +1,72 @@
+"""Paper Fig. 15 + Fig. 14: early-exit sample savings per pattern and
+quality preservation, on a real (tiny-model) hyperparameter sweep.
+
+Runs the BatchedExecutor twice over the same 12-config search space
+(including genuinely diverging LRs and an overfit-prone setup): once with
+early exit enabled, once without. Reports samples saved per detector and
+the best-val ratio with/without early exit (paper: savings 72-83%, ratio
+~1.0)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_arch
+from repro.core.early_exit import EarlyExitConfig
+from repro.core.executor import BatchedExecutor
+from repro.data.synthetic import make_task_dataset
+from repro.models import model as M
+
+STEPS = 40
+
+
+def build():
+    cfg = dataclasses.replace(
+        get_arch("paper-llama-tiny").reduced(num_layers=2, d_model=128,
+                                             vocab=256),
+        dtype="float32")
+    ds = make_task_dataset("bench", cfg.vocab_size, seq_len=32,
+                           num_train=48, num_val=16, difficulty=0.25)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    jobs = {}
+    for lr in (1e-3, 3e-3, 1e-2, 3e-2, 1.0, 30.0):
+        for rank in (4, 8):
+            tc = TrainConfig(learning_rate=lr, lora_rank=rank,
+                             max_steps=STEPS,
+                             grad_clip=0.0 if lr >= 1.0 else 1.0)
+            jobs[f"lr{lr:g}_r{rank}"] = tc
+    return cfg, ds, params, jobs
+
+
+def run() -> None:
+    cfg, ds, params, jobs = build()
+    results = {}
+    for ee_on in (True, False):
+        ee = EarlyExitConfig(warmup_ratio=0.15, select_ratio=0.34,
+                             enabled=ee_on) if ee_on else \
+            EarlyExitConfig(enabled=False, warmup_ratio=0.15,
+                            select_ratio=1.0)
+        ex = BatchedExecutor(cfg, params, ds, Z=4, per_adapter_batch=4,
+                             ee=ee, eval_every=2, seed=0)
+        results[ee_on] = ex.run_task("bench", dict(jobs), STEPS)
+    with_ee, without = results[True], results[False]
+    emit("fig15/samples_saved_frac", with_ee.wall_time_s,
+         f"{with_ee.samples_saved_frac:.3f}")
+    for reason, count in sorted(with_ee.exit_counts.items()):
+        emit(f"fig15/exits_{reason}", 0.0, str(count))
+    ratio = with_ee.best_val / max(without.best_val, 1e-12)
+    emit("fig15/best_val_ratio_w_vs_wo", 0.0, f"{ratio:.4f}")
+    emit("fig14/best_val_with_ee", with_ee.wall_time_s,
+         f"{with_ee.best_val:.4f}")
+    emit("fig14/best_val_without_ee", without.wall_time_s,
+         f"{without.best_val:.4f}")
+    speedup = without.total_samples / max(with_ee.total_samples, 1)
+    emit("fig15/sample_speedup", 0.0, f"{speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,91 @@
+"""Paper Table 2: fused grouped-LoRA kernels vs per-adapter loops.
+
+Three executions of the same multi-adapter LoRA training workload
+(Llama-1B-class layer scaled to CPU size; 16 adapters, ranks 16/32/64
+mixed, per-adapter BS in {1,2,4}):
+
+  Fused      — slot-stacked grouped path (ONE grouped GEMM pair; the
+               jnp einsum form that XLA compiles exactly like our Pallas
+               schedule, O(1) launches)
+  PerAdapter — the "PyTorch" baseline: base GEMM on the full batch, LoRA
+               path looped per adapter (3N kernel launches)
+  Sequential — each adapter trained alone (base GEMM not amortized)
+
+Reported: wall time per fwd+bwd, and speedups (paper: 1.36-1.91x over
+PyTorch, 2.5-5.1x over Sequential; gains grow as per-adapter BS shrinks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+
+Z = 16
+S = 128
+D_IN = 512
+D_OUT = 1024
+R_MAX = 64
+
+
+def make_inputs(b, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (Z, b * S, D_IN), jnp.float32)
+    A = 0.1 * jax.random.normal(ks[1], (Z, D_IN, R_MAX), jnp.float32)
+    B = 0.1 * jax.random.normal(ks[2], (Z, R_MAX, D_OUT), jnp.float32)
+    W = 0.1 * jax.random.normal(ks[3], (D_IN, D_OUT), jnp.float32)
+    ranks = jnp.asarray([16, 32, 64] * (Z // 3) + [16] * (Z % 3))
+    mask = (jnp.arange(R_MAX)[None] < ranks[:, None]).astype(jnp.float32)
+    return x, A * mask[:, None, :], B * mask[:, :, None], W
+
+
+def fused_step(x, A, B, W):
+    def loss(AB):
+        A_, B_ = AB
+        y = jnp.einsum("ztd,do->zto", x, W)
+        s = jnp.einsum("ztd,zdr->ztr", x, A_)
+        y = y + 2.0 * jnp.einsum("ztr,zro->zto", s, B_)
+        return jnp.sum(y * y)
+    g = jax.grad(loss)((A, B))
+    return g
+
+
+def per_adapter_step(x, A, B, W):
+    def loss(AB):
+        A_, B_ = AB
+        y = jnp.einsum("ztd,do->zto", x, W)       # base amortized
+        outs = []
+        for z in range(Z):                         # 2 launches per adapter
+            s = x[z] @ A_[z]
+            outs.append(y[z] + 2.0 * (s @ B_[z]))
+        return sum(jnp.sum(o * o) for o in outs)
+    return jax.grad(loss)((A, B))
+
+
+def sequential_step(x, A, B, W):
+    def loss(AB):
+        A_, B_ = AB
+        total = 0.0
+        for z in range(Z):                         # base NOT amortized
+            y = x[z] @ W
+            s = x[z] @ A_[z]
+            total = total + jnp.sum((y + 2.0 * (s @ B_[z])) ** 2)
+        return total
+    return jax.grad(loss)((A, B))
+
+
+def run() -> None:
+    for b in (1, 2, 4):
+        x, A, B, W = make_inputs(b)
+        fused = timeit(jax.jit(fused_step), x, A, B, W)
+        per = timeit(jax.jit(per_adapter_step), x, A, B, W)
+        seq = timeit(jax.jit(sequential_step), x, A, B, W)
+        emit(f"table2/fused_bs{b}", fused,
+             f"speedup_vs_peradapter={per / fused:.2f}x")
+        emit(f"table2/peradapter_bs{b}", per, "")
+        emit(f"table2/sequential_bs{b}", seq,
+             f"fused_speedup_vs_sequential={seq / fused:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""§Roofline: emit the per-(arch x shape) roofline terms from the dry-run
+artifacts as CSV (the full table lives in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit
+from repro.roofline.analysis import load_all
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def run() -> None:
+    if not os.path.isdir(DIR):
+        emit("roofline/missing", 0.0,
+             "run: PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    rows = load_all(DIR)
+    for key in sorted(rows):
+        r = rows[key]
+        if r.mesh != "pod16x16":
+            continue
+        emit(f"roofline/{r.arch}/{r.shape}", r.step_time_lb,
+             f"dominant={r.dominant};compute={r.compute_s:.4f};"
+             f"memory={r.memory_s:.4f};collective={r.collective_s:.4f};"
+             f"useful={r.useful_flops_ratio:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Paper Fig. 7 + Fig. 16: warmup-boundary ranking reliability.
+
+Generates a family of synthetic-but-realistic loss trajectories (power-law
+convergence with heterogeneous rates, plateaus, noise, a diverging tail),
+then sweeps the warmup percentage and reports:
+  * Spearman rank correlation between warmup-loss and final-loss ranking,
+  * coverage of the true top-25% by the predicted top-25%,
+  * whether the eventual best configuration lands in the predicted top-25%.
+Paper: correlation stabilizes >0.7 at 5% warmup, best config always in the
+top quartile at 5%."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+
+K = 48          # configs
+T = 400         # steps
+TRIALS = 20
+
+
+def spearman(a, b) -> float:
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = np.sqrt((ra ** 2).sum() * (rb ** 2).sum())
+    return float((ra * rb).sum() / max(denom, 1e-12))
+
+
+def sample_curves(rng) -> np.ndarray:
+    t = np.arange(1, T + 1, dtype=float)
+    curves = []
+    for _ in range(K):
+        floor = rng.uniform(0.3, 2.0)
+        amp = rng.uniform(0.5, 3.0)
+        rate = rng.uniform(0.1, 1.0)
+        noise = rng.normal(0, 0.02 * amp, T)
+        c = floor + amp * t ** (-rate) + noise
+        if rng.random() < 0.15:     # diverging config
+            c = c + np.maximum(t - rng.uniform(0.2, 0.8) * T, 0) * 0.01
+        curves.append(c)
+    return np.asarray(curves)
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    warmups = [0.01, 0.02, 0.05, 0.10, 0.20]
+    for w in warmups:
+        rho, cov, best_in = [], [], []
+        for _ in range(TRIALS):
+            curves = sample_curves(rng)
+            wi = max(int(w * T), 1)
+            early = curves[:, :wi].min(axis=1)
+            final = curves.min(axis=1)
+            rho.append(spearman(early, final))
+            k = max(int(np.ceil(0.25 * K)), 1)
+            pred = set(np.argsort(early)[:k])
+            true = set(np.argsort(final)[:k])
+            cov.append(len(pred & true) / k)
+            best_in.append(int(np.argmin(final)) in pred)
+        emit(f"fig16/warmup{int(w * 100)}pct", 0.0,
+             f"spearman={np.mean(rho):.3f};top25_cov={np.mean(cov):.3f};"
+             f"best_in_top25={np.mean(best_in):.2f}")
+
+
+if __name__ == "__main__":
+    run()

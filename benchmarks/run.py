@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Emits ``name,us_per_call,derived`` CSV rows. Mapping to the paper:
+  bench_kernels             Table 2  (fused grouped GEMM vs loops)
+  bench_adapter_parallelism Fig. 13  (AP vs FSDP, compiled artifacts)
+  bench_early_exit          Figs. 14/15 (savings per pattern, quality)
+  bench_warmup_sensitivity  Figs. 7/16  (warmup ranking reliability)
+  bench_scheduler           Figs. 5/12  (SJF vs CP; B/S/EE ablation)
+  bench_e2e_speedup         Figs. 9/11  (end-to-end ALTO speedup)
+  bench_roofline            §Roofline   (per-arch dry-run terms)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+BENCHES = [
+    "bench_kernels",
+    "bench_warmup_sensitivity",
+    "bench_scheduler",
+    "bench_early_exit",
+    "bench_e2e_speedup",
+    "bench_dpo",
+    "bench_adapter_parallelism",
+    "bench_roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for name in BENCHES:
+        if args.only and args.only != name:
+            continue
+        print(f"# --- {name} ---")
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+        except Exception:  # noqa: BLE001 — keep the harness going
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

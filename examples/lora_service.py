@@ -1,0 +1,77 @@
+"""Multi-tenant LoRA-as-a-Service demo: heterogeneous tasks, inter-task
+scheduling, event-driven replanning (paper §4/§7).
+
+    PYTHONPATH=src python examples/lora_service.py
+
+Three tenants submit tasks over DIFFERENT model families (dense, SSM, MoE)
+with different GPU needs and search spaces. The engine profiles each,
+solves the makespan-optimal placement, executes, and also replays the
+placement through the event-driven cluster simulator to show early-exit
+GPU reclamation."""
+import dataclasses
+
+from repro.configs.registry import get_arch
+from repro.core import engine as alto
+from repro.data.synthetic import make_task_dataset
+from repro.sched.events import ClusterSimulator
+
+
+def tiny(arch: str, vocab=512):
+    return dataclasses.replace(
+        get_arch(arch).reduced(num_layers=2, d_model=128, vocab=vocab),
+        dtype="float32")
+
+
+def main() -> None:
+    engine = alto.Engine(strategy="adapter_parallel", total_gpus=8)
+
+    tenants = [
+        ("tenant-a/dense-chat", tiny("stablelm-3b"), 2,
+         {"lr": [1e-3, 1e-2], "rank": [4, 8]}),
+        ("tenant-b/rwkv-code", tiny("rwkv6-3b"), 1,
+         {"lr": [3e-3, 30.0], "rank": [4]}),
+        ("tenant-c/moe-legal", tiny("granite-moe-1b-a400m"), 4,
+         {"lr": [1e-3, 3e-3], "rank": [4]}),
+    ]
+    tasks = []
+    for name, cfg, gpus, space in tenants:
+        ds = make_task_dataset(name, cfg.vocab_size, seq_len=32,
+                               num_train=64, num_val=16, difficulty=0.3,
+                               seed=hash(name) % 1000)
+        tasks.append(alto.Task(model=cfg, dataset=ds, num_gpus=gpus,
+                               max_steps=25, num_slots=2, name=name,
+                               search_space=space))
+
+    schedule = engine.schedule(tasks, method="cp")
+    print("=== inter-task schedule (makespan-optimal) ===")
+    for p in sorted(schedule.placements, key=lambda p: p.start):
+        print(f"  t={p.start:8.1f}s  {p.task.name:24s} "
+              f"gpus={list(p.gpu_ids)}  d={p.task.duration:.1f}s")
+    print(f"makespan estimate: {schedule.makespan:.1f}s "
+          f"(optimal={schedule.optimal})")
+
+    report = engine.batched_execution(
+        tasks, schedule, alto.EarlyExit(warmup_ratio=0.15,
+                                        select_ratio=0.5))
+    print("\n=== task results ===")
+    for name, tr in report.task_results.items():
+        print(f"  {name:24s} best={tr.best_job.split('/')[-1]:24s} "
+              f"val={tr.best_val:.4f} saved={tr.samples_saved_frac:.0%} "
+              f"exits={tr.exit_counts}")
+
+    # event-driven replanning with early-exit-shortened durations
+    print("\n=== event-driven replanning (early exits reclaim GPUs) ===")
+    sim = ClusterSimulator(G=8, method="cp")
+    for p in schedule.placements:
+        tr = report.task_results[p.task.name]
+        factor = 1.0 - tr.samples_saved_frac
+        sim.submit(p.task, actual_duration=p.task.duration * factor)
+    mk = sim.run_until_idle()
+    print(f"  static plan makespan : {schedule.makespan:.1f}s")
+    print(f"  replanned (with EE)  : {mk:.1f}s  "
+          f"({schedule.makespan / max(mk, 1e-9):.2f}x shorter, "
+          f"{sim.replans} replans)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""End-to-end driver: tune a ~100M-param Llama-class model with ALTO.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300] [--small]
+
+The full run trains a 12L/768d (~98M param) model for a few hundred steps
+across an 8-config search space with batched multi-LoRA execution and
+loss-aware early exit, then greedy-decodes a few tokens from the winning
+adapter through the serve path. ``--small`` shrinks the model for a quick
+functional pass (~2 min).
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LoRAConfig, ModelConfig, TrainConfig
+from repro.core.early_exit import EarlyExitConfig
+from repro.core.executor import BatchedExecutor
+from repro.core.steps import make_serve_step
+from repro.checkpoint.checkpoint import insert_slot, save_pytree
+from repro.core import lora as LORA
+from repro.data.synthetic import make_task_dataset
+from repro.models import model as M
+
+
+def model_100m(small: bool) -> ModelConfig:
+    if small:
+        return ModelConfig(
+            name="llama-10m", family="dense", num_layers=2, d_model=256,
+            num_heads=4, num_kv_heads=2, d_ff=512, vocab_size=2048,
+            dtype="float32", lora=LoRAConfig(r_max=16))
+    return ModelConfig(
+        name="llama-100m", family="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=8192,
+        dtype="float32", lora=LoRAConfig(r_max=16))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = model_100m(args.small)
+    if args.small:
+        args.steps = min(args.steps, 60)
+    print(f"model: {cfg.name} ({cfg.param_count() / 1e6:.1f}M params)")
+    ds = make_task_dataset("domain-corpus", cfg.vocab_size,
+                           seq_len=args.seq, num_train=256, num_val=32,
+                           difficulty=0.3)
+    t0 = time.time()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    ex = BatchedExecutor(
+        cfg, params, ds, Z=4, per_adapter_batch=2,
+        ee=EarlyExitConfig(warmup_ratio=0.05, select_ratio=0.25),
+        eval_every=10, seed=0)
+    jobs = {}
+    for lr in (3e-4, 1e-3, 3e-3, 1e-2):
+        for rank in (8, 16):
+            jobs[f"lr{lr:g}_r{rank}"] = TrainConfig(
+                learning_rate=lr, lora_rank=rank, max_steps=args.steps)
+    res = ex.run_task("train-100m", jobs, args.steps)
+    print(f"\ntuning finished in {time.time() - t0:.0f}s")
+    print(f"best: {res.best_job} val={res.best_val:.4f}")
+    print(f"samples saved by early exit: {res.samples_saved_frac:.0%} "
+          f"exits={res.exit_counts}")
+    for j, r in sorted(res.job_results.items()):
+        print(f"  {j:16s} best_val={r.best_val:7.4f} "
+              f"steps={r.steps_trained:4d} exit={r.exit_reason}")
+
+    # ---- serve the winning adapter: greedy-decode a few tokens
+    best = res.job_results[res.best_job]
+    rank = best.config.lora_rank
+    Z = 1
+    lora = LORA.init_lora_tree(jax.random.PRNGKey(1), cfg, Z,
+                               jnp.array([rank]), M.target_shapes(cfg))
+    lora = insert_slot(lora, 0, best.adapter)
+    save_pytree("experiments/train_100m_best_adapter.npz", best.adapter,
+                {"job": res.best_job, "val": res.best_val})
+    serve = jax.jit(make_serve_step(cfg))
+    cache = M.init_cache(cfg, Z, 1, 64)
+    prompt = jnp.asarray(ds.val[:1, :8]).reshape(1, 1, 8)
+    for t in range(8):
+        logits, cache = serve(params, lora, cache, prompt[:, :, t])
+    toks = [int(jnp.argmax(logits[0, 0]))]
+    for _ in range(8):
+        logits, cache = serve(params, lora, cache,
+                              jnp.asarray([[toks[-1]]], jnp.int32))
+        toks.append(int(jnp.argmax(logits[0, 0])))
+    print(f"\ngreedy continuation of val prompt: {toks}")
+    print("adapter checkpoint: experiments/train_100m_best_adapter.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""ALTO-JAX subsystem."""

@@ -1,0 +1,72 @@
+"""Pytree checkpointing (npz-based, no external deps).
+
+Used by the early-exit controller's "checkpoint best-val model before
+terminating an overfitting job" (paper §5.1 Pattern-2) and by the training
+driver for periodic saves. Slot-level saves extract one adapter from the
+slot-stacked tree.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _encode(arr: np.ndarray) -> np.ndarray:
+    # np.savez cannot serialize ml_dtypes (bfloat16 etc.): store raw bits
+    if arr.dtype == jnp.bfloat16:
+        return arr.view(np.uint16)
+    return arr
+
+
+def save_pytree(path: str, tree: Any, meta: Dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    dtypes = {k: str(v.dtype) for k, v in flat.items()}
+    flat = {k: _encode(v) for k, v in flat.items()}
+    np.savez(path, __meta__=json.dumps(meta or {}),
+             __dtypes__=json.dumps(dtypes), **flat)
+
+
+def load_pytree(path: str, like: Any) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (names must match)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    flat_like = _flatten_with_paths(like)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    restored = []
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    for (path_k, leaf) in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_k)
+        arr = data[key]
+        if arr.dtype == np.uint16 and leaf.dtype == jnp.bfloat16:
+            arr = arr.view(jnp.bfloat16)
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        restored.append(jnp.asarray(arr, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, restored), meta
+
+
+def extract_slot(lora_tree: Dict, slot: int) -> Dict:
+    """Pull one adapter out of a slot-stacked tree: [L,Z,...] -> [L,...]."""
+    return jax.tree_util.tree_map(lambda x: x[:, slot], lora_tree)
+
+
+def insert_slot(lora_tree: Dict, slot: int, adapter: Dict) -> Dict:
+    return jax.tree_util.tree_map(
+        lambda full, one: full.at[:, slot].set(one), lora_tree, adapter)

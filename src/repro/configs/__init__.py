@@ -1,0 +1,9 @@
+"""Config system: dataclasses, assigned architectures, input shapes."""
+from repro.configs.base import (LoRAConfig, MeshConfig, ModelConfig,
+                                MoEConfig, RoPEConfig, ShapeConfig, SSMConfig,
+                                TrainConfig)
+
+__all__ = [
+    "LoRAConfig", "MeshConfig", "ModelConfig", "MoEConfig", "RoPEConfig",
+    "ShapeConfig", "SSMConfig", "TrainConfig",
+]

@@ -1,0 +1,124 @@
+"""Slot-stacked adapter runtime state + host-side slot management.
+
+Fixed ``Z`` device slots hold adapters with static shapes (r_max-padded), so
+the early-exit controller can admit/evict/rotate jobs with pure functional
+array updates — never a recompile. Rotated-out jobs are snapshotted to host
+(params + optimizer moments + step count) and restored bit-exactly when
+they continue training (paper §5.2: survivors "carry over their optimizer
+states and loss histories").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import lora as LORA
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class SlotSnapshot:
+    """Host copy of one job's device state (for warmup rotation)."""
+    job_id: str
+    lora: Dict                    # [L, ...] single-adapter tree
+    mu: Dict
+    nu: Dict
+    count: int
+    rank: int
+
+
+def _x_slot(tree: Dict, slot: int) -> Dict:
+    return jax.tree_util.tree_map(lambda x: np.asarray(x[:, slot]), tree)
+
+
+def _i_slot(tree: Dict, slot: int, sub: Dict) -> Dict:
+    return jax.tree_util.tree_map(
+        lambda full, one: full.at[:, slot].set(jnp.asarray(one)), tree, sub)
+
+
+class SlotManager:
+    """Owns the device arrays for one executor's Z adapter slots."""
+
+    def __init__(self, cfg: ModelConfig, Z: int,
+                 target_shapes: Dict, key: jax.Array):
+        self.cfg = cfg
+        self.Z = Z
+        self.target_shapes = target_shapes
+        self.ranks = jnp.zeros((Z,), jnp.int32)
+        self.active = jnp.zeros((Z,), jnp.int32)
+        self.hp = adamw.SlotHParams.broadcast(Z)
+        self.lora = LORA.init_lora_tree(
+            key, cfg, Z, jnp.zeros((Z,), jnp.int32), target_shapes)
+        self.opt_state = adamw.init_state(self.lora, Z)
+        self.slot_jobs: List[Optional[str]] = [None] * Z
+
+    # ---- admission ---------------------------------------------------------
+    def admit(self, slot: int, job_id: str, tc: TrainConfig,
+              key: jax.Array) -> None:
+        """Fresh job into a slot: new init, zeroed moments, job's hparams."""
+        assert self.slot_jobs[slot] is None, f"slot {slot} occupied"
+        rank = min(tc.lora_rank, self.cfg.lora.r_max)
+        one = LORA.init_lora_tree(
+            key, self.cfg, 1, jnp.array([rank]), self.target_shapes)
+        sub = jax.tree_util.tree_map(lambda x: x[:, 0], one)
+        self.lora = _i_slot(self.lora, slot, sub)
+        self.opt_state = adamw.reset_slot(self.opt_state, slot)
+        self.ranks = self.ranks.at[slot].set(rank)
+        self.active = self.active.at[slot].set(1)
+        self.hp = self.hp.replace_slot(
+            slot, lr=tc.learning_rate, wd=tc.weight_decay,
+            beta1=tc.beta1, beta2=tc.beta2, grad_clip=tc.grad_clip)
+        self.slot_jobs[slot] = job_id
+
+    def restore(self, slot: int, snap: SlotSnapshot, tc: TrainConfig) -> None:
+        """Rotate a snapshotted job back in (bit-exact continuation)."""
+        assert self.slot_jobs[slot] is None, f"slot {slot} occupied"
+        self.lora = _i_slot(self.lora, slot, snap.lora)
+        mu = _i_slot(self.opt_state.mu, slot, snap.mu)
+        nu = _i_slot(self.opt_state.nu, slot, snap.nu)
+        cnt = self.opt_state.count.at[slot].set(snap.count)
+        self.opt_state = adamw.AdamWState(mu, nu, cnt)
+        self.ranks = self.ranks.at[slot].set(snap.rank)
+        self.active = self.active.at[slot].set(1)
+        self.hp = self.hp.replace_slot(
+            slot, lr=tc.learning_rate, wd=tc.weight_decay,
+            beta1=tc.beta1, beta2=tc.beta2, grad_clip=tc.grad_clip)
+        self.slot_jobs[slot] = snap.job_id
+
+    # ---- eviction ----------------------------------------------------------
+    def snapshot(self, slot: int) -> SlotSnapshot:
+        job_id = self.slot_jobs[slot]
+        assert job_id is not None
+        return SlotSnapshot(
+            job_id=job_id,
+            lora=_x_slot(self.lora, slot),
+            mu=_x_slot(self.opt_state.mu, slot),
+            nu=_x_slot(self.opt_state.nu, slot),
+            count=int(self.opt_state.count[slot]),
+            rank=int(self.ranks[slot]),
+        )
+
+    def evict(self, slot: int) -> None:
+        """Drop a job: zero params + moments, deactivate (paper §5.2:
+        'evicted adapters' parameters and optimizer states are discarded')."""
+        self.lora = LORA.zero_slot(self.lora, slot)
+        self.opt_state = adamw.reset_slot(self.opt_state, slot)
+        self.active = self.active.at[slot].set(0)
+        self.ranks = self.ranks.at[slot].set(0)
+        self.slot_jobs[slot] = None
+
+    # ---- queries -----------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, j in enumerate(self.slot_jobs) if j is None]
+
+    def occupied(self) -> Dict[str, int]:
+        return {j: i for i, j in enumerate(self.slot_jobs) if j is not None}
+
+    def adapter_of(self, job_id: str) -> Dict:
+        slot = self.occupied()[job_id]
+        return _x_slot(self.lora, slot)

@@ -1,0 +1,223 @@
+"""Batched multi-LoRA executor: one task, Z concurrent adapter slots.
+
+Implements the full per-task ALTO lifecycle (paper §4-§6):
+
+  1. WARMUP with rotation: all K candidate jobs get ``warmup_steps`` of
+     training, cycling through the Z device slots in waves when K > Z;
+     online pattern detection (divergence) is live during warmup; rotated
+     jobs carry exact optimizer state via host snapshots.
+  2. SELECTION at the warmup boundary: survivors ranked by val loss,
+     top ceil(25% * K) continue (underperformance exits).
+  3. CONTINUE-TRAINING: survivors train to their step budget with online
+     divergence + overfitting detection; overfit exits checkpoint their
+     best-val adapter; freed slots are BACKFILLED from the pending queue
+     (intra-task online scheduling, §7.1) via the admission policy.
+
+The executor is shape-static: (Z, per-adapter batch, seq) never changes, so
+every admit/evict is an array update, not a recompile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import steps as STEPS
+from repro.core.adapter_state import SlotManager, SlotSnapshot
+from repro.core.early_exit import (EarlyExitConfig, ExitDecision, ExitReason,
+                                   JobMonitor, warmup_select)
+from repro.data.synthetic import SlotBatcher, TaskDataset
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class JobResult:
+    job_id: str
+    config: TrainConfig
+    best_val: float
+    best_val_step: int
+    exit_reason: Optional[ExitReason]
+    steps_trained: int
+    samples_trained: int
+    adapter: Optional[Dict] = None          # best checkpoint (winner only)
+
+
+@dataclasses.dataclass
+class TaskResult:
+    task_name: str
+    best_job: str
+    best_val: float
+    job_results: Dict[str, JobResult]
+    wall_time_s: float
+    total_samples: int
+    samples_saved_frac: float
+    exit_counts: Dict[str, int]
+
+
+class BatchedExecutor:
+    def __init__(self, cfg: ModelConfig, params: Dict, dataset: TaskDataset,
+                 *, Z: int, per_adapter_batch: int,
+                 ee: EarlyExitConfig = EarlyExitConfig(),
+                 eval_every: int = 5, seed: int = 0,
+                 loss_kind: str = "sft", batcher=None):
+        self.cfg = cfg
+        self.params = params
+        self.dataset = dataset
+        self.Z = Z
+        self.b = per_adapter_batch
+        self.ee = ee
+        self.eval_every = eval_every
+        key = jax.random.PRNGKey(seed)
+        self.key, k_slots = jax.random.split(key)
+        self.slots = SlotManager(cfg, Z, M.target_shapes(cfg), k_slots)
+        # custom batcher (e.g. PairSlotBatcher for DPO) or token LM default
+        self.batcher = batcher if batcher is not None else SlotBatcher(
+            dataset, Z, per_adapter_batch, seed=seed)
+        self._train_step = jax.jit(
+            STEPS.make_train_step(cfg, loss_kind=loss_kind))
+        self._eval_step = jax.jit(
+            STEPS.make_eval_step(cfg, loss_kind=loss_kind))
+        self.monitors: Dict[str, JobMonitor] = {}
+        self.snapshots: Dict[str, SlotSnapshot] = {}
+        self._best_ckpt: Dict[str, Dict] = {}
+        self._queue: List[Tuple[str, TrainConfig]] = []
+        self._budget: Optional[int] = None
+
+    def _next_key(self) -> jax.Array:
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    # ------------------------------------------------------------------ util
+    def _run_steps(self, n: int, step_offset: Dict[str, int]) -> None:
+        """Train all active slots for n steps, with eval/pattern checks."""
+        for i in range(n):
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.batcher.next_batch_dict().items()}
+            self.slots.lora, self.slots.opt_state, metrics = self._train_step(
+                self.params, self.slots.lora, self.slots.opt_state,
+                self.slots.hp, self.slots.active, self.slots.ranks, batch)
+            per_loss = np.asarray(metrics["per_slot_loss"])
+            for job, slot in self.slots.occupied().items():
+                self.monitors[job].observe_train(float(per_loss[slot]))
+                step_offset[job] = step_offset.get(job, 0) + 1
+            if (i + 1) % self.eval_every == 0 or i == n - 1:
+                self._eval_and_detect(step_offset)
+            if self._budget is not None:
+                for job, slot in list(self.slots.occupied().items()):
+                    if step_offset.get(job, 0) >= self._budget:
+                        self.monitors[job]._exit(
+                            ExitReason.COMPLETED, step_offset[job])
+                        self.slots.evict(slot)
+                        self._backfill(slot)
+
+    def _eval_and_detect(self, step_offset: Dict[str, int]) -> None:
+        batch = {k: jnp.asarray(v)
+                 for k, v in self.batcher.val_batch_dict().items()}
+        val = np.asarray(self._eval_step(
+            self.params, self.slots.lora, self.slots.active, batch))
+        for job, slot in list(self.slots.occupied().items()):
+            mon = self.monitors[job]
+            prev_best = mon.best_val
+            decision = mon.observe_val(float(val[slot]), step_offset[job])
+            # checkpoint best-val adapter (cheap: host copy of one slot)
+            if mon.val_hist[-1] <= prev_best:
+                self._best_ckpt[job] = self.slots.adapter_of(job)
+            if decision is not None:
+                self._exit_job(job, slot, decision)
+
+    def _exit_job(self, job: str, slot: int, decision: ExitDecision) -> None:
+        self.slots.evict(slot)
+        self._backfill(slot)
+
+    def _backfill(self, slot: int) -> None:
+        """Intra-task online admission: prefer same-batch-size pending jobs
+        (homogeneous packing is structural here — one executor, one b)."""
+        if self._queue:
+            job_id, tc = self._queue.pop(0)
+            if job_id in self.snapshots:
+                self.slots.restore(slot, self.snapshots.pop(job_id), tc)
+            else:
+                self.slots.admit(slot, job_id, tc, self._next_key())
+
+    # ------------------------------------------------------------------ run
+    def run_task(self, task_name: str, jobs: Dict[str, TrainConfig],
+                 total_steps: int) -> TaskResult:
+        t0 = time.time()
+        K = len(jobs)
+        warmup = self.ee.warmup_steps(total_steps)
+        self.monitors = {j: JobMonitor(self.ee, j) for j in jobs}
+        self._best_ckpt: Dict[str, Dict] = {}
+        self._queue: List[Tuple[str, TrainConfig]] = []
+        job_items = list(jobs.items())
+
+        # ---- phase 1: warmup waves (rotation when K > Z)
+        waves = [job_items[i:i + self.Z] for i in range(0, K, self.Z)]
+        steps_done: Dict[str, int] = {}
+        for wave in waves:
+            for s, (job_id, tc) in enumerate(wave):
+                self.slots.admit(s, job_id, tc, self._next_key())
+            self._queue = []
+            self._run_steps(warmup, steps_done)
+            # snapshot+rotate out whatever survived this wave
+            for job_id, slot in list(self.slots.occupied().items()):
+                self.snapshots[job_id] = self.slots.snapshot(slot)
+                self.slots.evict(slot)
+
+        # ---- phase 2: warmup-boundary selection (underperformance)
+        kept, dropped = warmup_select(self.monitors, self.ee,
+                                      num_candidates=K)
+        for j in dropped:
+            self.monitors[j]._exit(ExitReason.UNDERPERFORMING,
+                                   steps_done.get(j, warmup))
+            self.snapshots.pop(j, None)
+
+        # ---- phase 3: continue-training with online detection + backfill
+        self._budget = total_steps
+        self._queue = [(j, jobs[j]) for j in kept]
+        for slot in self.slots.free_slots():
+            if not self._queue:
+                break
+            self._backfill(slot)
+        guard = 10 * total_steps * max(len(kept) // max(self.Z, 1), 1) + 10
+        while self.slots.occupied() and guard > 0:
+            chunk = self.eval_every
+            self._run_steps(chunk, steps_done)
+            guard -= chunk
+        self._budget = None
+        for job_id, slot in list(self.slots.occupied().items()):
+            self.monitors[job_id]._exit(
+                ExitReason.COMPLETED, steps_done.get(job_id, total_steps))
+            self.slots.evict(slot)
+
+        # ---- results
+        results: Dict[str, JobResult] = {}
+        for job_id, tc in jobs.items():
+            mon = self.monitors[job_id]
+            results[job_id] = JobResult(
+                job_id=job_id, config=tc, best_val=mon.best_val,
+                best_val_step=mon.best_val_step,
+                exit_reason=(mon.exited.reason if mon.exited else None),
+                steps_trained=mon.steps_trained,
+                samples_trained=mon.steps_trained * self.b)
+        finite = {j: r for j, r in results.items()
+                  if np.isfinite(r.best_val)}
+        best_job = min(finite, key=lambda j: finite[j].best_val)
+        results[best_job].adapter = self._best_ckpt.get(best_job)
+        total_samples = sum(r.samples_trained for r in results.values())
+        full_samples = K * total_steps * self.b
+        exit_counts: Dict[str, int] = {}
+        for r in results.values():
+            if r.exit_reason is not None:
+                exit_counts[r.exit_reason.value] = (
+                    exit_counts.get(r.exit_reason.value, 0) + 1)
+        return TaskResult(
+            task_name=task_name, best_job=best_job,
+            best_val=results[best_job].best_val, job_results=results,
+            wall_time_s=time.time() - t0, total_samples=total_samples,
+            samples_saved_frac=1.0 - total_samples / max(full_samples, 1),
+            exit_counts=exit_counts)

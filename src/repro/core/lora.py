@@ -1,0 +1,181 @@
+"""Multi-adapter (slot-stacked) LoRA: the ALTO workload unit.
+
+All adapters for one executor live in slot-stacked tensors with a leading
+``Z`` axis (paper §A.1 rank-only padding):
+
+    A: [Z, d_in, r_max]     B: [Z, r_max, d_out]
+
+Per-slot true ranks are expressed by zeroing columns/rows beyond ``r_i``
+(``rank_mask``); the padded region provably contributes zero to the output
+and receives zero gradient (B's padded rows are zero ⇒ dS pads are zero ⇒
+dA pads are zero), and the optimizer additionally re-masks after each update.
+
+``lora_delta`` dispatches between the pure-jnp path (the mathematical
+reference; used under pjit/GSPMD where XLA fuses it) and the Pallas grouped
+kernel (``repro.kernels.grouped_lora``) — the paper's fused grouped GEMM,
+validated in interpret mode on CPU and targeted at TPU VMEM/MXU.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LoRAConfig, ModelConfig
+
+_backend = threading.local()
+
+BACKENDS = ("jnp", "pallas", "pallas_interpret")
+
+
+def set_backend(name: str) -> None:
+    assert name in BACKENDS, name
+    _backend.name = name
+
+
+def get_backend() -> str:
+    return getattr(_backend, "name", "jnp")
+
+
+@contextlib.contextmanager
+def backend(name: str):
+    prev = get_backend()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+# ---------------------------------------------------------------------------
+# Application
+# ---------------------------------------------------------------------------
+
+def lora_delta(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+               scale: jnp.ndarray | float) -> jnp.ndarray:
+    """scale * (x @ A) @ B, grouped over the leading slot axis.
+
+    x: [Z, ..., d_in]; A: [Z, d_in, r]; B: [Z, r, d_out]; scale: [] or [Z].
+    """
+    name = get_backend()
+    if name == "jnp":
+        return _lora_delta_jnp(x, A, B, scale)
+    from repro.kernels.grouped_lora import ops as kops
+    lead = x.shape[:-1]
+    Z = x.shape[0]
+    xt = x.reshape(Z, -1, x.shape[-1])
+    y = kops.grouped_lora(xt, A, B, _scale_vec(scale, Z, x.dtype),
+                          interpret=(name == "pallas_interpret"))
+    return y.reshape(*lead, B.shape[-1])
+
+
+def _scale_vec(scale, Z: int, dtype) -> jnp.ndarray:
+    s = jnp.asarray(scale, jnp.float32)
+    if s.ndim == 0:
+        s = jnp.broadcast_to(s, (Z,))
+    return s
+
+
+def _lora_delta_jnp(x, A, B, scale):
+    dt = x.dtype
+    s = jnp.einsum("z...d,zdr->z...r", x, A.astype(dt))
+    y = jnp.einsum("z...r,zro->z...o", s, B.astype(dt))
+    sv = _scale_vec(scale, x.shape[0], dt)
+    sv = sv.reshape((x.shape[0],) + (1,) * (y.ndim - 1))
+    return y * sv.astype(dt)
+
+
+def proj(x: jnp.ndarray, W: jnp.ndarray,
+         lora_pair: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+         scale: jnp.ndarray | float = 2.0,
+         name: Optional[str] = None) -> jnp.ndarray:
+    """Frozen base projection + optional grouped LoRA residual.
+
+    x: [Z, ..., d_in]; W: [d_in, d_out] (frozen, slot-shared). ``name``
+    lets the sharding policy gather the ZeRO-sharded frozen weight over the
+    adapter ("data") axis before use — the paper's Fig. 8 FSDP all-gather,
+    instead of GSPMD's default activation-psum (§Perf opt_level >= 1).
+    """
+    from repro.models.shardctx import constrain
+    if name is not None:
+        W = constrain(W, f"weight:{name}")
+    y = jnp.einsum("z...d,do->z...o", x, W)
+    if lora_pair is not None:
+        A, B = lora_pair
+        y = y + lora_delta(x, A, B, scale)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Initialization / masking
+# ---------------------------------------------------------------------------
+
+def rank_mask(ranks: jnp.ndarray, r_max: int) -> jnp.ndarray:
+    """[Z] int ranks -> [Z, r_max] float {0,1} mask."""
+    return (jnp.arange(r_max)[None, :] < ranks[:, None]).astype(jnp.float32)
+
+
+def init_slot_lora(key: jax.Array, d_in: int, d_out: int, r_max: int, Z: int,
+                   ranks: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """LoRA init: A ~ N(0, 1/r_max) (rank-masked), B = 0. fp32 master."""
+    A = jax.random.normal(key, (Z, d_in, r_max), jnp.float32)
+    A = A * (r_max ** -0.5) * rank_mask(ranks, r_max)[:, None, :]
+    B = jnp.zeros((Z, r_max, d_out), jnp.float32)
+    return A, B
+
+
+def init_lora_tree(key: jax.Array, cfg: ModelConfig, Z: int,
+                   ranks: jnp.ndarray,
+                   target_shapes: Dict[str, Tuple[int, int]],
+                   num_layers: Optional[int] = None) -> Dict:
+    """Stacked-over-layers LoRA tree: {target: {"A": [L,Z,din,r], "B": ...}}.
+
+    Only targets present in ``target_shapes`` AND ``cfg.lora.targets`` get
+    adapters (paper: all attention + MLP projections; per-family sets differ).
+    """
+    L = num_layers if num_layers is not None else cfg.num_layers
+    r = cfg.lora.r_max
+    tree: Dict[str, Dict[str, jnp.ndarray]] = {}
+    targets = [t for t in cfg.lora.targets if t in target_shapes]
+    keys = jax.random.split(key, max(len(targets) * L, 1))
+    i = 0
+    for t in targets:
+        d_in, d_out = target_shapes[t]
+        As, Bs = [], []
+        for _ in range(L):
+            A, B = init_slot_lora(keys[i], d_in, d_out, r, Z, ranks)
+            As.append(A)
+            Bs.append(B)
+            i += 1
+        tree[t] = {"A": jnp.stack(As), "B": jnp.stack(Bs)}
+    return tree
+
+
+def mask_lora_tree(tree: Dict, ranks: jnp.ndarray, r_max: int) -> Dict:
+    """Re-apply rank masks to a stacked LoRA tree (post-optimizer-step)."""
+    m = rank_mask(ranks, r_max)  # [Z, r]
+
+    def mask_leaf(path_is_A: bool, x: jnp.ndarray) -> jnp.ndarray:
+        if path_is_A:   # [L, Z, d_in, r]
+            return x * m[None, :, None, :]
+        return x * m[None, :, :, None]   # B: [L, Z, r, d_out]
+
+    return {t: {"A": mask_leaf(True, ab["A"]), "B": mask_leaf(False, ab["B"])}
+            for t, ab in tree.items()}
+
+
+def slot_update(tree: Dict, slot: int, new_tree_slot: Dict) -> Dict:
+    """Functionally replace one slot's adapter params (early-exit swap-in)."""
+    def upd(old: jnp.ndarray, new: jnp.ndarray) -> jnp.ndarray:
+        return old.at[:, slot].set(new)
+    return jax.tree_util.tree_map(upd, tree, new_tree_slot)
+
+
+def zero_slot(tree: Dict, slot: int) -> Dict:
+    """Zero a slot's adapter params (eviction)."""
+    def z(x: jnp.ndarray) -> jnp.ndarray:
+        return x.at[:, slot].set(0.0)
+    return jax.tree_util.tree_map(z, tree)

@@ -1,0 +1,83 @@
+"""Step builders: train / eval / prefill / serve.
+
+These pure functions are what both the local engine (jax.jit) and the
+multi-pod launcher (pjit with shardings, launch/train.py) compile. The base
+model ``params`` is a frozen (non-differentiated) input; gradients flow only
+through the slot-stacked LoRA tree.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import losses as LS
+from repro.core.lora import mask_lora_tree
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, *, loss_kind: str = "sft",
+                    remat: bool = True) -> Callable:
+    """train_step(params, lora, opt_state, hp, active, ranks, batch)
+    -> (lora', opt_state', metrics{per_slot_loss[Z], grad_norm[Z]})."""
+    loss_fn_inner = {"sft": LS.sft_loss, "dpo": LS.dpo_loss}[loss_kind]
+
+    def train_step(params, lora, opt_state, hp: adamw.SlotHParams,
+                   active: jnp.ndarray, ranks: jnp.ndarray, batch: Dict):
+        def loss_fn(lora_):
+            total, per_slot = loss_fn_inner(cfg, params, lora_, batch,
+                                            active, remat=remat)
+            return total, per_slot
+
+        (_, per_slot), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(lora)
+        norms = adamw.per_slot_global_norm(grads)
+        masker = functools.partial(mask_lora_tree, ranks=ranks,
+                                   r_max=cfg.lora.r_max)
+        new_lora, new_opt = adamw.apply_updates(
+            lora, grads, opt_state, hp, active,
+            rank_masker=lambda t: masker(t))
+        metrics = {"per_slot_loss": per_slot, "grad_norm": norms}
+        return new_lora, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, *, loss_kind: str = "sft") -> Callable:
+    """eval_step(params, lora, active, batch) -> per-slot val loss [Z]."""
+    loss_fn_inner = {"sft": LS.sft_loss, "dpo": LS.dpo_loss}[loss_kind]
+
+    def eval_step(params, lora, active, batch):
+        _, per_slot = loss_fn_inner(cfg, params, lora, batch, active,
+                                    remat=False)
+        return per_slot
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """prefill_step(params, lora, batch) -> (last-token logits, cache)."""
+
+    def prefill_step(params, lora, cache, batch):
+        h, _, new_cache = M.forward(
+            cfg, params, lora, batch["tokens"],
+            positions=batch.get("positions"),
+            modal_embeds=batch.get("modal_embeds"),
+            cache=cache, remat=False)
+        logits = M._unembed(cfg, params, h[:, :, -1])
+        return logits, new_cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """serve_step(params, lora, cache, tokens[Z,b]) -> (logits, cache')."""
+
+    def serve_step(params, lora, cache, tokens):
+        return M.decode_step(cfg, params, lora, cache, tokens)
+
+    return serve_step

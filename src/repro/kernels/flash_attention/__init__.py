@@ -1,0 +1,4 @@
+"""Causal flash-attention Pallas kernel (prefill hot spot)."""
+from repro.kernels.flash_attention.ops import flash_attention
+
+__all__ = ["flash_attention"]

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: causal flash attention (fwd), online softmax.
+
+The prefill roofline (post-§Perf) is memory-bound on the attention working
+set: the XLA chunked path still materializes [qc, Sk] score tiles in HBM.
+This kernel keeps everything per (q-block, k-block) VMEM-resident with the
+standard streaming-softmax recurrence:
+
+    m' = max(m, rowmax(S))          S = q k^T * scale + mask
+    l' = e^{m-m'} l + rowsum(e^{S-m'})
+    acc' = e^{m-m'} acc + e^{S-m'} v
+
+Grid (B, n_q, n_k) — k innermost; running (m, l, acc) live in VMEM scratch
+across the k sweep of each (b, i_q) program; the output tile is normalized
+and stored at the last k step. Causal masking uses absolute positions with
+the suffix alignment (query i sees keys j <= i + Sk - Sq), plus an optional
+sliding window; fully-masked rows produce zeros (matching the oracle).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+BQ = 256
+BK = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            scale: float, causal: bool, window: int, off: int,
+            bq: int, bk: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0].astype(F32) * scale
+    k = k_ref[0].astype(F32)
+    v = v_ref[0].astype(F32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32)      # [bq, bk]
+
+    qpos = (pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0) + off)
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    vis = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        vis &= kpos <= qpos
+    if window > 0:
+        vis &= kpos > qpos - window
+    s = jnp.where(vis, s, NEG)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)                # [bq]
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(vis, p, 0.0)
+    l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1)
+    acc_s[...] = (acc_s[...] * alpha[:, None]
+                  + jnp.dot(p, v, preferred_element_type=F32))
+    m_s[...] = m_new
+
+    @pl.when(kb == pl.num_programs(2) - 1)
+    def _done():
+        denom = jnp.maximum(l_s[...], 1e-30)[:, None]
+        o_ref[0] = (acc_s[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = BQ, bk: int = BK,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: [B,Sq,hd]; k,v: [B,Sk,hd] -> [B,Sq,hd]."""
+    B, Sq, hd = q.shape
+    Sk = k.shape[1]
+    bq, bk = min(bq, Sq), min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    kern = functools.partial(
+        _kernel, scale=hd ** -0.5, causal=causal, window=window,
+        off=Sk - Sq, bq=bq, bk=bk)
+    return pl.pallas_call(
+        kern,
+        grid=(B, Sq // bq, Sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), F32),          # running max
+            pltpu.VMEM((bq,), F32),          # running denom
+            pltpu.VMEM((bq, hd), F32),       # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,43 @@
+"""Differentiable wrapper for the flash-attention Pallas kernel (forward =
+kernel, backward = XLA autodiff of the oracle — the same split as the
+linear-scan kernel; see that module's rationale)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as K
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.lru_cache(maxsize=None)
+def _make(causal: bool, window: int, bq: int, bk: int, interpret: bool):
+    @jax.custom_vjp
+    def f(q, k, v):
+        return K.flash_attention(q, k, v, causal=causal, window=window,
+                                 bq=bq, bk=bk, interpret=interpret)
+
+    def fwd(q, k, v):
+        return f(q, k, v), (q, k, v)
+
+    def bwd(res, ct):
+        q, k, v = res
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: flash_attention_ref(
+                q_, k_, v_, causal=causal, window=window), q, k, v)
+        return vjp(ct)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = K.BQ, bk: int = K.BK,
+                    interpret: bool = False) -> jnp.ndarray:
+    Sq, Sk = q.shape[1], k.shape[1]
+    bq, bk = min(bq, Sq), min(bk, Sk)
+    fn = _make(bool(causal), int(window), bq, bk, bool(interpret))
+    return fn(q, k, v)

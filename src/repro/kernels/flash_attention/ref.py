@@ -1,0 +1,32 @@
+"""Naive-attention oracle for the flash-attention Pallas kernel.
+
+Layout: fused batch-heads B = Z*b*H; q: [B, Sq, hd]; k,v: [B, Sk, hd].
+Causal alignment: query i attends to keys j with j <= i + (Sk - Sq)
+(the standard suffix alignment; Sq == Sk is plain causal).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True,
+                        window: int = 0) -> jnp.ndarray:
+    B, Sq, hd = q.shape
+    Sk = k.shape[1]
+    scale = hd ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    vis = jnp.ones((Sq, Sk), bool)
+    if causal:
+        vis &= kpos <= qpos
+    if window > 0:
+        vis &= kpos > qpos - window
+    s = jnp.where(vis, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isfinite(p), p, 0.0)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

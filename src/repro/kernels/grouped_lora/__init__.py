@@ -1,0 +1,4 @@
+"""Grouped multi-adapter LoRA kernels (Pallas TPU; interpret-mode on CPU)."""
+from repro.kernels.grouped_lora.ops import grouped_lora
+
+__all__ = ["grouped_lora"]

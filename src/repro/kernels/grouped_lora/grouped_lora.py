@@ -1,0 +1,291 @@
+"""Pallas TPU kernels: grouped multi-adapter LoRA GEMMs (fwd + bwd).
+
+The paper's Triton kernels re-derived for the TPU memory hierarchy:
+
+  * the GPU schedule-table dispatch (host-built (adapter, block) pairs read
+    by thread blocks) becomes a *static* grid with the slot index Z as the
+    leading grid dimension — each (z, m, ...) program reads its operands via
+    BlockSpec index maps, no host table, no recompilation when adapters swap;
+  * rank-only padding (paper §A.1): A/B are padded to r_max; padded columns
+    are zero and contribute nothing;
+  * the fused base-output addition (paper §A.1) is the epilogue of the
+    second GEMM: Y_base tiles are loaded once inside the output loop,
+    saving one full HBM read+write of Y;
+  * fp32 accumulation in VMEM scratch; K-dim accumulation runs on the
+    innermost grid dimension (TPU grid iterates last-dim fastest).
+
+Six kernels, each ONE launch for all Z adapters (paper: O(1) launches/layer):
+  fwd:  S = X @ A            (grouped, K-accumulated over d_in)
+        Y = S @ B * scale (+ Y_base)   (fused epilogue add)
+  bwd:  dS = scale * dY @ B^T          (K-accumulated over d_out)
+        dX = dS @ A^T
+        dA = X^T @ dS                  (K-accumulated over T)
+        dB = scale * S^T @ dY          (K-accumulated over T)
+
+All kernels run under interpret=True on CPU (the correctness harness) and
+lower to Mosaic for TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+# Default VMEM tile sizes (MXU-aligned: multiples of (8,128) fp32 tiles).
+BM = 128     # token-block
+BK = 512     # contraction block over d_in / d_out
+BN = 512     # output-feature block
+BT = 128     # token contraction block (weight grads)
+
+
+# ---------------------------------------------------------------------------
+# forward: S = X @ A
+# ---------------------------------------------------------------------------
+
+def _xa_kernel(x_ref, a_ref, s_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[0], a_ref[0], preferred_element_type=F32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        s_ref[0] = acc_ref[...].astype(s_ref.dtype)
+
+
+def xa(x: jnp.ndarray, A: jnp.ndarray, *, bm: int = BM, bk: int = BK,
+       interpret: bool = False) -> jnp.ndarray:
+    """x: [Z,T,din], A: [Z,din,r] -> S [Z,T,r] (x.dtype, fp32 accum)."""
+    Z, T, din = x.shape
+    r = A.shape[2]
+    bm, bk = min(bm, T), min(bk, din)
+    grid = (Z, T // bm, din // bk)
+    return pl.pallas_call(
+        _xa_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda z, m, k: (z, m, k)),
+            pl.BlockSpec((1, bk, r), lambda z, m, k: (z, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, r), lambda z, m, k: (z, m, 0)),
+        out_shape=jax.ShapeDtypeStruct((Z, T, r), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, r), F32)],
+        interpret=interpret,
+    )(x, A)
+
+
+# ---------------------------------------------------------------------------
+# forward: Y = S @ B * scale (+ Y_base)   — fused epilogue add
+# ---------------------------------------------------------------------------
+
+def _sb_kernel(scale_ref, s_ref, b_ref, y_ref):
+    z = pl.program_id(0)
+    acc = jnp.dot(s_ref[0], b_ref[0], preferred_element_type=F32)
+    y_ref[0] = (acc * scale_ref[z]).astype(y_ref.dtype)
+
+
+def _sb_add_kernel(scale_ref, s_ref, b_ref, ybase_ref, y_ref):
+    z = pl.program_id(0)
+    acc = jnp.dot(s_ref[0], b_ref[0], preferred_element_type=F32)
+    acc = acc * scale_ref[z] + ybase_ref[0].astype(F32)
+    y_ref[0] = acc.astype(y_ref.dtype)
+
+
+def sb_add(s: jnp.ndarray, B: jnp.ndarray, scale: jnp.ndarray,
+           y_base: Optional[jnp.ndarray] = None, *, bm: int = BM,
+           bn: int = BN, interpret: bool = False) -> jnp.ndarray:
+    """s: [Z,T,r], B: [Z,r,dout], scale: [Z] fp32 -> Y [Z,T,dout]."""
+    Z, T, r = s.shape
+    dout = B.shape[2]
+    bm, bn = min(bm, T), min(bn, dout)
+    grid = (Z, T // bm, dout // bn)
+    in_specs = [
+        pl.BlockSpec((1, bm, r), lambda z, m, n, sc: (z, m, 0)),
+        pl.BlockSpec((1, r, bn), lambda z, m, n, sc: (z, 0, n)),
+    ]
+    args = [s, B]
+    kernel = _sb_kernel
+    if y_base is not None:
+        in_specs.append(
+            pl.BlockSpec((1, bm, bn), lambda z, m, n, sc: (z, m, n)))
+        args.append(y_base)
+        kernel = _sb_add_kernel
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, bm, bn),
+                                   lambda z, m, n, sc: (z, m, n)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Z, T, dout), s.dtype),
+        interpret=interpret,
+    )(scale.astype(F32), *args)
+
+
+# ---------------------------------------------------------------------------
+# backward: dS = scale * dY @ B^T    (accumulate over d_out blocks)
+# ---------------------------------------------------------------------------
+
+def _ds_kernel(scale_ref, dy_ref, b_ref, ds_ref, acc_ref):
+    z, k = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        dy_ref[0], b_ref[0], (((1,), (1,)), ((), ())),
+        preferred_element_type=F32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        ds_ref[0] = (acc_ref[...] * scale_ref[z]).astype(ds_ref.dtype)
+
+
+def ds(dy: jnp.ndarray, B: jnp.ndarray, scale: jnp.ndarray, *, bm: int = BM,
+       bk: int = BK, interpret: bool = False) -> jnp.ndarray:
+    """dy: [Z,T,dout], B: [Z,r,dout] -> dS [Z,T,r]."""
+    Z, T, dout = dy.shape
+    r = B.shape[1]
+    bm, bk = min(bm, T), min(bk, dout)
+    grid = (Z, T // bm, dout // bk)
+    return pl.pallas_call(
+        _ds_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bm, bk), lambda z, m, k, sc: (z, m, k)),
+                pl.BlockSpec((1, r, bk), lambda z, m, k, sc: (z, 0, k)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, r),
+                                   lambda z, m, k, sc: (z, m, 0)),
+            scratch_shapes=[pltpu.VMEM((bm, r), F32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Z, T, r), dy.dtype),
+        interpret=interpret,
+    )(scale.astype(F32), dy, B)
+
+
+# ---------------------------------------------------------------------------
+# backward: dX = dS @ A^T
+# ---------------------------------------------------------------------------
+
+def _dx_kernel(ds_ref, a_ref, dx_ref):
+    dx_ref[0] = jax.lax.dot_general(
+        ds_ref[0], a_ref[0], (((1,), (1,)), ((), ())),
+        preferred_element_type=F32).astype(dx_ref.dtype)
+
+
+def dx(ds_: jnp.ndarray, A: jnp.ndarray, *, bm: int = BM, bn: int = BN,
+       interpret: bool = False) -> jnp.ndarray:
+    """ds: [Z,T,r], A: [Z,din,r] -> dX [Z,T,din]."""
+    Z, T, r = ds_.shape
+    din = A.shape[1]
+    bm, bn = min(bm, T), min(bn, din)
+    grid = (Z, T // bm, din // bn)
+    return pl.pallas_call(
+        _dx_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, r), lambda z, m, n: (z, m, 0)),
+            pl.BlockSpec((1, bn, r), lambda z, m, n: (z, n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda z, m, n: (z, m, n)),
+        out_shape=jax.ShapeDtypeStruct((Z, T, din), ds_.dtype),
+        interpret=interpret,
+    )(ds_, A)
+
+
+# ---------------------------------------------------------------------------
+# backward weight grads: dA = X^T @ dS ; dB = scale * S^T @ dY
+# (accumulate over token blocks; fp32 outputs = optimizer master dtype)
+# ---------------------------------------------------------------------------
+
+def _da_kernel(x_ref, ds_ref, da_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], ds_ref[0], (((0,), (0,)), ((), ())),
+        preferred_element_type=F32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        da_ref[0] = acc_ref[...]
+
+
+def da(x: jnp.ndarray, ds_: jnp.ndarray, *, bd: int = BN, bt: int = BT,
+       interpret: bool = False) -> jnp.ndarray:
+    """x: [Z,T,din], ds: [Z,T,r] -> dA [Z,din,r] fp32."""
+    Z, T, din = x.shape
+    r = ds_.shape[2]
+    bd, bt = min(bd, din), min(bt, T)
+    grid = (Z, din // bd, T // bt)
+    return pl.pallas_call(
+        _da_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda z, d, k: (z, k, d)),
+            pl.BlockSpec((1, bt, r), lambda z, d, k: (z, k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bd, r), lambda z, d, k: (z, d, 0)),
+        out_shape=jax.ShapeDtypeStruct((Z, din, r), F32),
+        scratch_shapes=[pltpu.VMEM((bd, r), F32)],
+        interpret=interpret,
+    )(x, ds_)
+
+
+def _db_kernel(scale_ref, s_ref, dy_ref, db_ref, acc_ref):
+    z, k = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        s_ref[0], dy_ref[0], (((0,), (0,)), ((), ())),
+        preferred_element_type=F32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        db_ref[0] = acc_ref[...] * scale_ref[z]
+
+
+def db(s: jnp.ndarray, dy: jnp.ndarray, scale: jnp.ndarray, *, bn: int = BN,
+       bt: int = BT, interpret: bool = False) -> jnp.ndarray:
+    """s: [Z,T,r], dy: [Z,T,dout] -> dB [Z,r,dout] fp32."""
+    Z, T, r = s.shape
+    dout = dy.shape[2]
+    bn, bt = min(bn, dout), min(bt, T)
+    grid = (Z, dout // bn, T // bt)
+    return pl.pallas_call(
+        _db_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bt, r), lambda z, n, k, sc: (z, k, 0)),
+                pl.BlockSpec((1, bt, bn), lambda z, n, k, sc: (z, k, n)),
+            ],
+            out_specs=pl.BlockSpec((1, r, bn),
+                                   lambda z, n, k, sc: (z, 0, n)),
+            scratch_shapes=[pltpu.VMEM((r, bn), F32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Z, r, dout), F32),
+        interpret=interpret,
+    )(scale.astype(F32), s, dy)

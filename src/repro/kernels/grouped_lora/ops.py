@@ -1,0 +1,138 @@
+"""Differentiable jit wrapper over the grouped-LoRA Pallas kernels.
+
+``grouped_lora(x, A, B, scale, y_base=None)`` == scale*(x@A)@B (+ y_base),
+grouped over the leading slot axis, with a custom VJP that reuses the
+paper's backward schedule (dS/dX/dA/dB grouped kernels, forward caches S —
+paper §6.1 "the forward caches intermediate S to avoid recomputation").
+
+The wrapper pads T / d_in / d_out / r up to tile multiples (zero padding is
+exact for every kernel: padded rows/cols of x/A/B are zero and padded
+outputs are sliced away) so arbitrary shapes hit the fixed-tile kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grouped_lora import grouped_lora as K
+
+_LANE = 128   # TPU lane width; last-dim tile multiple
+_SUB = 8      # sublane multiple
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, to: int) -> jnp.ndarray:
+    pad = to - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _tile_plan(T: int, din: int, dout: int, r: int
+               ) -> Tuple[int, int, int, int]:
+    Tp = _ceil_to(T, min(K.BM, _ceil_to(T, _SUB)))
+    Tp = _ceil_to(Tp, _SUB)
+    dinp = _ceil_to(din, min(K.BK, _ceil_to(din, _LANE)))
+    doutp = _ceil_to(dout, min(K.BN, _ceil_to(dout, _LANE)))
+    rp = _ceil_to(r, _SUB)
+    return Tp, dinp, doutp, rp
+
+
+# ---------------------------------------------------------------------------
+# core padded implementations (not differentiable; used by fwd/bwd rules)
+# ---------------------------------------------------------------------------
+
+def _fwd_impl(x, A, B, scale, y_base, interpret):
+    Z, T, din = x.shape
+    r, dout = B.shape[1], B.shape[2]
+    Tp, dinp, doutp, rp = _tile_plan(T, din, dout, r)
+    xp = _pad_axis(_pad_axis(x, 1, Tp), 2, dinp)
+    Ap = _pad_axis(_pad_axis(A, 1, dinp), 2, rp).astype(x.dtype)
+    Bp = _pad_axis(_pad_axis(B, 1, rp), 2, doutp).astype(x.dtype)
+    s = K.xa(xp, Ap, interpret=interpret)
+    yb = None
+    if y_base is not None:
+        yb = _pad_axis(_pad_axis(y_base, 1, Tp), 2, doutp)
+    y = K.sb_add(s, Bp, scale, yb, interpret=interpret)
+    return y[:, :T, :dout], s[:, :T, :]      # s padded on r only
+
+
+def _bwd_impl(x, A, B, scale, s, dy, interpret):
+    Z, T, din = x.shape
+    r, dout = B.shape[1], B.shape[2]
+    Tp, dinp, doutp, rp = _tile_plan(T, din, dout, r)
+    xp = _pad_axis(_pad_axis(x, 1, Tp), 2, dinp)
+    Ap = _pad_axis(_pad_axis(A, 1, dinp), 2, rp).astype(x.dtype)
+    Bp = _pad_axis(_pad_axis(B, 1, rp), 2, doutp).astype(x.dtype)
+    sp = _pad_axis(s, 1, Tp)
+    dyp = _pad_axis(_pad_axis(dy, 1, Tp), 2, doutp).astype(x.dtype)
+    ds_ = K.ds(dyp, Bp, scale, interpret=interpret)
+    dx_ = K.dx(ds_, Ap, interpret=interpret)
+    dA_ = K.da(xp, ds_, interpret=interpret)
+    dB_ = K.db(sp, dyp, scale, interpret=interpret)
+    return (dx_[:, :T, :din], dA_[:, :din, :r], dB_[:, :r, :dout])
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp variants (cached per (interpret, has_base))
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_fn(interpret: bool, has_base: bool):
+    if has_base:
+        @jax.custom_vjp
+        def f(x, A, B, scale, y_base):
+            y, _ = _fwd_impl(x, A, B, scale, y_base, interpret)
+            return y
+
+        def f_fwd(x, A, B, scale, y_base):
+            y, s = _fwd_impl(x, A, B, scale, y_base, interpret)
+            return y, (x, A, B, scale, s)
+
+        def f_bwd(res, dy):
+            x, A, B, scale, s = res
+            dx_, dA_, dB_ = _bwd_impl(x, A, B, scale, s, dy, interpret)
+            dscale = jnp.zeros_like(scale)   # scale is a hyperparam
+            return dx_, dA_, dB_, dscale, dy
+
+        f.defvjp(f_fwd, f_bwd)
+        return f
+
+    @jax.custom_vjp
+    def g(x, A, B, scale):
+        y, _ = _fwd_impl(x, A, B, scale, None, interpret)
+        return y
+
+    def g_fwd(x, A, B, scale):
+        y, s = _fwd_impl(x, A, B, scale, None, interpret)
+        return y, (x, A, B, scale, s)
+
+    def g_bwd(res, dy):
+        x, A, B, scale, s = res
+        dx_, dA_, dB_ = _bwd_impl(x, A, B, scale, s, dy, interpret)
+        return dx_, dA_, dB_, jnp.zeros_like(scale)
+
+    g.defvjp(g_fwd, g_bwd)
+    return g
+
+
+def grouped_lora(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+                 scale: jnp.ndarray,
+                 y_base: Optional[jnp.ndarray] = None, *,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Differentiable grouped LoRA: scale*(x@A)@B (+ y_base).
+
+    x: [Z,T,din]; A: [Z,din,r]; B: [Z,r,dout]; scale: [Z].
+    """
+    fn = _make_fn(bool(interpret), y_base is not None)
+    if y_base is not None:
+        return fn(x, A, B, scale, y_base)
+    return fn(x, A, B, scale)

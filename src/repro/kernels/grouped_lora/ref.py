@@ -1,0 +1,52 @@
+"""Pure-jnp oracle for the grouped multi-adapter LoRA kernels.
+
+Shapes (slot-stacked, paper §A.1 rank-only padding):
+    x:      [Z, T, d_in]
+    A:      [Z, d_in, r]      (columns >= true rank are zero)
+    B:      [Z, r, d_out]     (rows    >= true rank are zero)
+    scale:  [Z]               (alpha / r; paper default alpha=2r => 2.0)
+    y_base: [Z, T, d_out]     (frozen-backbone output for the fused add)
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def grouped_xa_ref(x: jnp.ndarray, A: jnp.ndarray) -> jnp.ndarray:
+    """S_i = X_i @ A_i, fp32 accumulation, result in x.dtype."""
+    s = jnp.einsum("ztd,zdr->ztr", x, A,
+                   preferred_element_type=jnp.float32)
+    return s.astype(x.dtype)
+
+
+def grouped_sb_add_ref(s: jnp.ndarray, B: jnp.ndarray, scale: jnp.ndarray,
+                       y_base: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Y = (S_i @ B_i) * scale_i (+ Y_base), fused epilogue add."""
+    y = jnp.einsum("ztr,zro->zto", s, B,
+                   preferred_element_type=jnp.float32)
+    y = y * scale.astype(jnp.float32)[:, None, None]
+    if y_base is not None:
+        y = y + y_base.astype(jnp.float32)
+    return y.astype(s.dtype)
+
+
+def grouped_lora_ref(x, A, B, scale, y_base=None) -> jnp.ndarray:
+    return grouped_sb_add_ref(grouped_xa_ref(x, A), B, scale, y_base)
+
+
+def grouped_lora_bwd_ref(x, A, B, scale, s, dy
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(dX, dA, dB) for Y = scale * (X A) B [+ Y_base].
+
+    dS = scale * dY B^T ; dX = dS A^T ; dA = X^T dS ; dB = scale * S^T dY.
+    Weight grads in fp32 (optimizer master dtype), dX in x.dtype.
+    """
+    dyf = dy.astype(jnp.float32)
+    sc = scale.astype(jnp.float32)[:, None, None]
+    ds = jnp.einsum("zto,zro->ztr", dyf * sc, B.astype(jnp.float32))
+    dx = jnp.einsum("ztr,zdr->ztd", ds, A.astype(jnp.float32))
+    dA = jnp.einsum("ztd,ztr->zdr", x.astype(jnp.float32), ds)
+    dB = jnp.einsum("ztr,zto->zro", s.astype(jnp.float32), dyf * sc)
+    return dx.astype(x.dtype), dA, dB

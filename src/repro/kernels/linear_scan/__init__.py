@@ -1,0 +1,4 @@
+"""Chunked gated linear-scan Pallas kernel (RWKV6 / Mamba-SSD core)."""
+from repro.kernels.linear_scan.ops import linear_scan
+
+__all__ = ["linear_scan"]

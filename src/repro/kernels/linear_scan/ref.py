@@ -1,0 +1,48 @@
+"""Oracle for the chunked linear-scan Pallas kernel: the pure-jnp core in
+models/linear_scan.py, flattened to the kernel's [B, S, K/V] layout
+(B = Z*b*H fused batch-heads)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models.linear_scan import chunked_linear_attention
+
+
+def linear_scan_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    logw: jnp.ndarray, *,
+                    bonus: Optional[jnp.ndarray] = None,
+                    decay_on_query: bool = False,
+                    initial_state: Optional[jnp.ndarray] = None,
+                    chunk: int = 32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q,k,logw: [B,S,K]; v: [B,S,V]; bonus: [B,K] or None;
+    initial_state: [B,K,V]. Returns (y [B,S,V], state [B,K,V] fp32)."""
+    B, S, K = q.shape
+    V = v.shape[-1]
+    # reuse the model core with Z=B, b=1, H=1
+    r = lambda x: x[:, None, :, None, :]
+    bon = bonus[:1] if bonus is not None else None
+    ys, states = [], []
+    if bonus is None:
+        y, st = chunked_linear_attention(
+            q[:, None, :, None, :].reshape(B, 1, S, 1, K),
+            k.reshape(B, 1, S, 1, K), v.reshape(B, 1, S, 1, V),
+            logw.reshape(B, 1, S, 1, K),
+            bonus=None, decay_on_query=decay_on_query,
+            initial_state=(initial_state.reshape(B, 1, 1, K, V)
+                           if initial_state is not None else None),
+            chunk=chunk)
+        return y.reshape(B, S, V), st.reshape(B, K, V)
+    # per-row bonus: process rows independently (H=1 core expects [H,K])
+    for i in range(B):
+        y, st = chunked_linear_attention(
+            q[i].reshape(1, 1, S, 1, K), k[i].reshape(1, 1, S, 1, K),
+            v[i].reshape(1, 1, S, 1, V), logw[i].reshape(1, 1, S, 1, K),
+            bonus=bonus[i].reshape(1, K), decay_on_query=decay_on_query,
+            initial_state=(initial_state[i].reshape(1, 1, 1, K, V)
+                           if initial_state is not None else None),
+            chunk=chunk)
+        ys.append(y.reshape(S, V))
+        states.append(st.reshape(K, V))
+    return jnp.stack(ys), jnp.stack(states)

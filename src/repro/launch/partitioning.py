@@ -1,0 +1,295 @@
+"""Sharding rules: Adapter Parallelism + tensor/sequence sharding.
+
+The paper's AP (Fig. 8) on a named mesh:
+  * adapter slots ``Z`` shard over "data" — adapters, their grads, and their
+    optimizer state are RANK-LOCAL on that axis (zero adapter collectives);
+  * frozen base weights shard 2-D: one dim over "data" (ZeRO-style — GSPMD
+    all-gathers them forward-only, the FSDP all-gather of Fig. 8 with no
+    backward reduce-scatter because the base is frozen) and one dim over
+    "model" (tensor parallelism);
+  * per-adapter batch ``b`` shards over "pod" (multi-pod DP; adapter grads
+    psum over "pod" only — 2-way DCN);
+  * residual-stream activations sequence-shard over "model" between blocks
+    (Megatron-SP style) to bound remat live memory.
+
+All rules are divisibility-aware with ordered fallbacks (e.g. hymba's 25
+heads on a 16-way model axis fall back to sharding head_dim).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh: Mesh, name: Optional[str]) -> int:
+    if name is None:
+        return 1
+    return mesh.shape[name] if name in mesh.axis_names else 0
+
+
+def pick_spec(mesh: Mesh, shape: Sequence[int],
+              candidates: Sequence[Dict[int, str]]) -> P:
+    """First candidate assignment {dim: axis} that divides evenly wins."""
+    for cand in candidates:
+        ok = True
+        spec: List[Optional[str]] = [None] * len(shape)
+        for dim, axis in cand.items():
+            n = _axis_size(mesh, axis)
+            if n == 0 or shape[dim] % n != 0:
+                ok = False
+                break
+            spec[dim] = axis
+        if ok:
+            while spec and spec[-1] is None:
+                spec.pop()
+            return P(*spec)
+    return P()
+
+
+def has_pod(mesh: Mesh) -> bool:
+    return "pod" in mesh.axis_names
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (installed via models.shardctx)
+# ---------------------------------------------------------------------------
+
+def activation_policy(mesh: Mesh, *, seq_shard: bool = True,
+                      opt_level: int = 0, step_kind: str = "train"):
+    """Returns policy(x, kind) -> with_sharding_constraint(x, spec).
+
+    opt_level 0 = paper-baseline GSPMD-guided lowering;
+    opt_level >= 1 additionally honors:
+      * "weight:<name>" — gather the ZeRO('data')-sharded frozen weight
+        before use (AP Fig. 8 semantics) instead of letting GSPMD psum
+        activation partial sums over the adapter axis;
+      * "dims:a,b,..."  — explicit per-dim assignments from the
+        sharding-aware attention layouts (each dim dropped independently
+        if it does not divide its axis).
+
+    The optimizations are STEP-KIND dependent (§Perf measured, not
+    assumed): weight-gather pays off when tokens/device >> weight rows
+    (train/prefill) and regresses single-token decode (gathering a full
+    weight per layer vs psumming one token); the scan-chunk/remat changes
+    target the outer-remat residual stacking that only exists in training.
+    Decode steps therefore run the paper baseline at every opt level.
+    """
+    if step_kind == "decode":
+        opt_level = 0
+    pod = "pod" if has_pod(mesh) else None
+
+    def weight_spec(name: str, shape) -> Optional[P]:
+        for pat, cands in _PARAM_RULES:
+            if any(re.search(pat, pre + name)
+                   for pre in ("", "moe/", "mamba/")):
+                cand = _resolve(cands[0], len(shape))
+                spec: List[Optional[str]] = [None] * len(shape)
+                for dim, axis in cand.items():
+                    if axis == "data":
+                        continue       # gathered over the adapter axis
+                    n = _axis_size(mesh, axis)
+                    if n and shape[dim] % n == 0:
+                        spec[dim] = axis
+                while spec and spec[-1] is None:
+                    spec.pop()
+                return P(*spec)
+        return P()
+
+    def policy(x: jax.Array, kind: str) -> jax.Array:
+        shape = x.shape
+        if kind.startswith("weight:"):
+            if opt_level < 1:
+                return x
+            spec = weight_spec(kind.split(":", 1)[1], shape)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        if kind.startswith("dims:"):
+            axes = kind.split(":", 1)[1].split(",")
+            spec: List = [None] * len(shape)
+            for dim, axis in enumerate(axes[:len(shape)]):
+                if axis in ("-", ""):
+                    continue
+                # "a+b" = shard this dim over multiple mesh axes jointly
+                names = tuple(a for a in axis.split("+")
+                              if _axis_size(mesh, a))
+                n = 1
+                for a in names:
+                    n *= _axis_size(mesh, a)
+                if names and n and shape[dim] % n == 0:
+                    spec[dim] = names if len(names) > 1 else names[0]
+            while spec and spec[-1] is None:
+                spec.pop()
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*spec)))
+        if kind == "residual" and x.ndim == 4:          # [Z,b,S,d]
+            cands = []
+            if seq_shard:
+                cands.append({0: "data", 1: pod, 2: "model"})
+            cands += [{0: "data", 1: pod}, {0: "data"}]
+        elif kind == "attn_qkv" and x.ndim == 5:        # [Z,b,S,H,hd]
+            cands = [{0: "data", 1: pod, 3: "model"},
+                     {0: "data", 1: pod, 4: "model"},
+                     {0: "data", 1: pod}, {0: "data"}]
+        elif kind == "ffn_hidden" and x.ndim == 4:      # [Z,b,S,ff]
+            cands = [{0: "data", 1: pod, 3: "model"},
+                     {0: "data", 1: pod}, {0: "data"}]
+        elif kind == "logits":                          # [Z,b,c,V]
+            cands = [{0: "data", 1: pod, x.ndim - 1: "model"},
+                     {0: "data", x.ndim - 1: "model"}, {0: "data"}]
+        elif kind == "moe_expert" and x.ndim == 4:      # [E,G,C,d]
+            cands = [{0: "model", 1: "data"}, {0: "model"}, {1: "data"}]
+        else:
+            return x
+        cands = [{d: a for d, a in c.items() if a is not None}
+                 for c in cands]
+        spec = pick_spec(mesh, shape, cands)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    policy.hints = {
+        "model_size": mesh.shape.get("model", 1),
+        "opt_level": opt_level,
+    }
+    if opt_level >= 2 and step_kind == "train":
+        # scan-remat + small chunks fight the outer checkpoint's residual
+        # stacking — a training-only pathology (regresses fwd-only prefill)
+        policy.hints["scan_chunk"] = 32
+        policy.hints["scan_opt"] = True
+    return policy
+
+
+# ---------------------------------------------------------------------------
+# Parameter / state / batch pspecs
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES: List[Tuple[str, List[Dict[int, str]]]] = [
+    # path-regex, candidates over the leaf's dims (layer-stacked leaves have
+    # a leading L dim; dims below are the WEIGHT dims counted from the END:
+    # negative indices are resolved against the actual leaf rank).
+    (r"embed$", [{-2: "model", -1: "data"}, {-2: "model"}, {-1: "data"}, {}]),
+    (r"lm_head$", [{-2: "data", -1: "model"}, {-1: "model"}, {-2: "data"}, {}]),
+    (r"(q_proj|k_proj|v_proj|g_proj|r_proj|in_proj)$",
+     [{-2: "data", -1: "model"}, {-1: "model"}, {-2: "data"}, {}]),
+    (r"(o_proj|out_proj|down_proj|ffn_v)$",
+     [{-2: "model", -1: "data"}, {-2: "model"}, {-1: "data"}, {}]),
+    (r"(gate_proj|up_proj|ffn_k)$",
+     [{-2: "data", -1: "model"}, {-1: "model"}, {-2: "data"}, {}]),
+    (r"moe/(w_gate|w_up)$",                   # [L, E, d, ff]
+     [{-3: "model", -2: "data"}, {-3: "model"}, {}]),
+    (r"moe/w_down$",                          # [L, E, ff, d]
+     [{-3: "model", -2: "data"}, {-3: "model"}, {}]),
+    (r"moe/shared/(gate|up)$", [{-2: "data", -1: "model"}, {-1: "model"}, {}]),
+    (r"moe/shared/down$", [{-2: "model", -1: "data"}, {-2: "model"}, {}]),
+    (r"moe/router$", [{}]),
+    (r"mamba/(bc_proj|dt_proj)$", [{-2: "data", -1: "model"}, {-1: "model"}, {}]),
+    (r"mamba/conv$", [{-1: "model"}, {}]),
+    (r"(w1|w2)$", [{}]),
+]
+
+
+def _leaf_path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _resolve(cand: Dict[int, str], rank: int) -> Dict[int, str]:
+    return {(d if d >= 0 else rank + d): a for d, a in cand.items()}
+
+
+def base_param_specs(mesh: Mesh, params: Any) -> Any:
+    """PartitionSpec tree for the frozen backbone."""
+
+    def spec_of(path, leaf) -> P:
+        ps = _leaf_path_str(path)
+        for pat, cands in _PARAM_RULES:
+            if re.search(pat, ps):
+                resolved = [_resolve(c, leaf.ndim) for c in cands]
+                return pick_spec(mesh, leaf.shape, resolved)
+        return P()   # norms, scalars, small vectors: replicated
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def lora_param_specs(mesh: Mesh, lora: Any) -> Any:
+    """LoRA leaves are [L, Z, din|r, r|dout]: Z -> "data" ONLY (rank-local
+    AP). No other dim is sharded: adapters are small and must stay local."""
+
+    def spec_of(leaf) -> P:
+        if leaf.ndim >= 2:
+            cand = [{1: "data"}, {}]
+            return pick_spec(mesh, leaf.shape, cand)
+        return P()
+
+    return jax.tree_util.tree_map(spec_of, lora)
+
+
+def opt_state_specs(mesh: Mesh, opt_state: Any) -> Any:
+    """Optimizer moments follow LoRA params; per-slot counters follow Z."""
+    from repro.optim.adamw import AdamWState
+    mu = lora_param_specs(mesh, opt_state.mu)
+    nu = lora_param_specs(mesh, opt_state.nu)
+    count = pick_spec(mesh, opt_state.count.shape, [{0: "data"}, {}])
+    return AdamWState(mu=mu, nu=nu, count=count)
+
+
+def hp_specs(mesh: Mesh, hp: Any) -> Any:
+    """SlotHParams [Z] vectors shard over data with the slots."""
+    return jax.tree_util.tree_map(
+        lambda v: pick_spec(mesh, v.shape, [{0: "data"}, {}]), hp)
+
+
+def batch_specs(mesh: Mesh, batch: Dict) -> Dict:
+    """tokens/labels [Z,b,S]; modal_embeds [Z,b,P,d]; positions [*,S]."""
+    pod = "pod" if has_pod(mesh) else None
+
+    def spec_of(path, leaf) -> P:
+        ps = _leaf_path_str(path)
+        if "positions" in ps:
+            return P()
+        cands = [{0: "data", 1: pod}, {0: "data"}, {}]
+        cands = [{d: a for d, a in c.items() if a is not None}
+                 for c in cands]
+        return pick_spec(mesh, leaf.shape, cands)
+
+    return jax.tree_util.tree_map_with_path(spec_of, batch)
+
+
+def cache_specs(mesh: Mesh, cache: Any) -> Any:
+    """KV cache [L,Z,b,Sc,KV,hd]: Z->data, b->pod, KV|hd|Sc->model.
+    Recurrent states [L,Z,b,...]: Z->data, b->pod."""
+    pod = "pod" if has_pod(mesh) else None
+
+    def spec_of(path, leaf) -> P:
+        ps = _leaf_path_str(path)
+        nd = leaf.ndim
+        if ps.endswith("pos") or "k_pos" in ps:
+            return P()
+        cands: List[Dict[int, str]] = []
+        if nd == 6:    # [L,Z,b,Sc,KV,hd]
+            cands = [{1: "data", 2: pod, 4: "model"},
+                     {1: "data", 2: pod, 5: "model"},
+                     {1: "data", 2: pod, 3: "model"},
+                     {1: "data", 2: pod}, {1: "data"}, {}]
+        elif nd >= 3:  # recurrent states [L,Z,b,...]
+            cands = [{1: "data", 2: pod, nd - 1: "model"},
+                     {1: "data", 2: pod}, {1: "data"}, {}]
+        else:
+            cands = [{}]
+        cands = [{d: a for d, a in c.items() if a is not None}
+                 for c in cands]
+        return pick_spec(mesh, leaf.shape, cands)
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache)
+
+
+def to_named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,52 @@
+"""Distributed step builders: core steps + activation sharding policy.
+
+The sharding policy (launch/partitioning.py) is installed via
+models/shardctx for the duration of TRACING, so the same model code runs
+unsharded in tests and fully annotated under pjit.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.core import steps as S
+from repro.launch import partitioning as PT
+from repro.models import shardctx
+
+
+def _wrap(mesh: Mesh, fn: Callable, seq_shard: bool = True,
+          opt_level: int = 0, step_kind: str = "train") -> Callable:
+    policy = PT.activation_policy(mesh, seq_shard=seq_shard,
+                                  opt_level=opt_level, step_kind=step_kind)
+
+    def wrapped(*args, **kw):
+        with shardctx.sharding_policy(policy):
+            return fn(*args, **kw)
+
+    return wrapped
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, *, loss_kind="sft",
+                    remat: bool = True, seq_shard: bool = True,
+                    opt_level: int = 0) -> Callable:
+    return _wrap(mesh, S.make_train_step(cfg, loss_kind=loss_kind,
+                                         remat=remat), seq_shard, opt_level,
+                 "train")
+
+
+def make_eval_step(cfg: ModelConfig, mesh: Mesh, *, opt_level: int = 0,
+                   **kw) -> Callable:
+    return _wrap(mesh, S.make_eval_step(cfg, **kw), True, opt_level,
+                 "prefill")
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh,
+                      *, opt_level: int = 0) -> Callable:
+    return _wrap(mesh, S.make_prefill_step(cfg), True, opt_level, "prefill")
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh,
+                    *, opt_level: int = 0) -> Callable:
+    return _wrap(mesh, S.make_serve_step(cfg), True, opt_level, "decode")

@@ -1,0 +1,1 @@
+"""Model zoo substrate: unified multi-adapter decoder over 6 families."""

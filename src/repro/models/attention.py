@@ -1,0 +1,197 @@
+"""GQA attention: chunked (flash-style) causal training path + decode path.
+
+The training/prefill path never materializes the full [Sq, Sk] score matrix:
+it scans over query chunks, computing fp32 softmax per chunk.
+
+Sharding-aware layout selection (opt_level >= 1, driven by shardctx hints):
+GSPMD produces pathological reshards when q is head-sharded while k falls
+back to head-dim sharding (GQA with KV % model_axis != 0) — fp32 score
+tensors get all-gathered/psummed across the model axis. We pick ONE
+consistent layout per (H, KV, mesh):
+
+  grouped  KV % m == 0 : grouped-query einsum, KV sharded everywhere;
+                         scores/probs fully local.
+  repeat   H  % m == 0 : repeat KV to H, shard H everywhere; probs local
+                         (costs G x KV memory, sharded /m).
+  kshard   otherwise   : shard Sk (keys/values/probs); distributed softmax
+                         (tiny max/denominator psums) + one out-psum per
+                         chunk — ring-attention-style.
+
+Baseline (opt_level 0) keeps the original grouped einsum with generic
+constraints, reproducing the paper-faithful-but-unoptimized lowering.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import causal_mask_bias
+from repro.models.shardctx import constrain, get_hint
+
+
+def _gqa_scores(q, k):
+    """q: [Z,b,qc,KV,G,hd], k: [Z,b,Sk,KV,hd] -> [Z,b,KV,G,qc,Sk] fp32."""
+    return jnp.einsum("zbqkgh,zbskh->zbkgqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_combine(p, v):
+    """p: [Z,b,KV,G,qc,Sk], v: [Z,b,Sk,KV,hd] -> [Z,b,qc,KV,G,hd]."""
+    return jnp.einsum("zbkgqs,zbskh->zbqkgh", p.astype(v.dtype), v)
+
+
+def _softmax_chunk(scores: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    s = scores + bias
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.maximum(m, -1e30)  # rows that are fully masked
+    e = jnp.exp(s - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(denom, 1e-30)
+
+
+def _dims(x, *axes):
+    """Constrain with an explicit per-dim axis assignment (policy-checked
+    divisibility; silently drops non-dividing axes)."""
+    return constrain(x, "dims:" + ",".join(a or "-" for a in axes))
+
+
+def _pick_mode(H: int, KV: int) -> str:
+    if get_hint("opt_level", 0) < 1:
+        return "baseline"
+    m = get_hint("model_size", 0) or 0
+    if m <= 1:
+        return "baseline"
+    if KV % m == 0:
+        return "grouped"
+    if H % m == 0:
+        return "repeat"
+    return "kshard"
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              q_pos: jnp.ndarray, k_pos: jnp.ndarray, *,
+              window: int = 0, q_chunk: int = 512,
+              kv_valid_len: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Causal GQA attention.
+
+    q:      [Z, b, Sq, H, hd]
+    k, v:   [Z, b, Sk, KV, hd]   (H = KV * G)
+    q_pos:  [Sq]; k_pos: [Sk] absolute positions
+    window: sliding window size (0 = full causal)
+    kv_valid_len: optional scalar; keys at index >= len are masked
+    returns [Z, b, Sq, H, hd]
+    """
+    Z, b, Sq, H, hd = q.shape
+    KV = k.shape[3]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    scale = hd ** -0.5
+
+    # hand-kernel path: contiguous causal training/prefill (q_pos/k_pos are
+    # plain suffix-aligned ranges, no partially filled cache)
+    from repro.models import backend as BK
+    if (BK.use_pallas() and Sq > 1 and kv_valid_len is None
+            and Sq == q_pos.shape[0] and k.shape[2] == k_pos.shape[0]
+            and k.shape[2] == Sq):   # pure causal (no longer/ring cache)
+        from repro.kernels.flash_attention import ops as FA
+        Sk = k.shape[2]
+        kk = jnp.repeat(k, G, axis=3) if G > 1 else k
+        vv = jnp.repeat(v, G, axis=3) if G > 1 else v
+        qf = q.transpose(0, 1, 3, 2, 4).reshape(Z * b * H, Sq, hd)
+        kf = kk.transpose(0, 1, 3, 2, 4).reshape(Z * b * H, Sk, hd)
+        vf = vv.transpose(0, 1, 3, 2, 4).reshape(Z * b * H, Sk, hd)
+        bq = min(256, Sq)
+        while Sq % bq:
+            bq //= 2
+        bk = min(512, Sk)
+        while Sk % bk:
+            bk //= 2
+        out = FA.flash_attention(qf, kf, vf, causal=True, window=window,
+                                 bq=bq, bk=bk,
+                                 interpret=BK.interpret_mode())
+        return out.reshape(Z, b, H, Sq, hd).transpose(0, 1, 3, 2, 4)
+
+    mode = _pick_mode(H, KV)
+    kv_index = jnp.arange(k.shape[2], dtype=jnp.int32)
+
+    def bias_for(pos_c):
+        bias = causal_mask_bias(pos_c, k_pos, window)
+        if kv_valid_len is not None:
+            bias = bias + jnp.where(kv_index[None, :] < kv_valid_len,
+                                    0.0, -jnp.inf)
+        return bias
+
+    if mode == "repeat":
+        k = _dims(jnp.repeat(k, G, axis=3), "data", "pod", None, "model")
+        v = _dims(jnp.repeat(v, G, axis=3), "data", "pod", None, "model")
+        q = _dims(q * scale, "data", "pod", None, "model")
+
+        def chunk_attn(q_c, pos_c):
+            scores = jnp.einsum("zbqhd,zbshd->zbhqs", q_c, k,
+                                preferred_element_type=jnp.float32)
+            scores = _dims(scores, "data", "pod", "model")
+            p = _softmax_chunk(scores, bias_for(pos_c))
+            out = jnp.einsum("zbhqs,zbshd->zbqhd", p.astype(v.dtype), v)
+            return _dims(out, "data", "pod", None, "model")
+
+        reshape_out = False
+    elif mode == "kshard":
+        # shard keys/values (and therefore scores/probs) along Sk
+        k = _dims(k, "data", "pod", "model")
+        v = _dims(v, "data", "pod", "model")
+        q = _dims(q * scale, "data", "pod")   # replicated over model
+        q = q.reshape(Z, b, Sq, KV, G, hd)
+
+        def chunk_attn(q_c, pos_c):
+            scores = _gqa_scores(q_c, k)
+            scores = _dims(scores, "data", "pod", None, None, None, "model")
+            p = _softmax_chunk(scores, bias_for(pos_c))
+            out = _gqa_combine(p, v)          # psum over model (Sk shards)
+            return _dims(out, "data", "pod")
+
+        reshape_out = True
+    else:
+        # grouped (baseline + opt grouped): KV-sharded when it divides
+        q = (q * scale).reshape(Z, b, Sq, KV, G, hd)
+        if mode == "grouped":
+            q = _dims(q, "data", "pod", None, "model")
+            k = _dims(k, "data", "pod", None, "model")
+            v = _dims(v, "data", "pod", None, "model")
+
+        def chunk_attn(q_c, pos_c):
+            scores = _gqa_scores(q_c, k)
+            if mode == "grouped":
+                scores = _dims(scores, "data", "pod", "model")
+            p = _softmax_chunk(scores, bias_for(pos_c))
+            return _gqa_combine(p, v)
+
+        reshape_out = True
+
+    if Sq <= q_chunk:
+        out = chunk_attn(q, q_pos)
+    else:
+        assert Sq % q_chunk == 0, (Sq, q_chunk)
+        n = Sq // q_chunk
+        qs = jnp.moveaxis(
+            q.reshape(Z, b, n, q_chunk, *q.shape[3:]), 2, 0)
+        ps = q_pos.reshape(n, q_chunk)
+
+        def body(_, inp):
+            q_c, pos_c = inp
+            return None, chunk_attn(q_c, pos_c)
+
+        if get_hint("opt_level", 0) >= 2:
+            # don't stack per-chunk fp32 score tensors as scan residuals —
+            # recompute them in the backward (flash-attention semantics)
+            body = jax.checkpoint(body, prevent_cse=False)
+        _, outs = jax.lax.scan(body, None, (qs, ps))
+        out = jnp.moveaxis(outs, 0, 2)
+        out = out.reshape(Z, b, Sq, *out.shape[4:])
+
+    if reshape_out:
+        out = out.reshape(Z, b, Sq, H, hd)
+    if mode == "baseline":
+        out = constrain(out, "attn_qkv")
+    return out

@@ -1,0 +1,47 @@
+"""Compute-backend selection for the model's hot paths.
+
+"jnp" (default) — pure-XLA reference paths (what pjit/GSPMD distributes).
+"pallas" / "pallas_interpret" — hand kernels for the hot spots:
+  * attention (training/prefill causal path) -> kernels.flash_attention
+  * chunked linear scan (RWKV6/Mamba)        -> kernels.linear_scan
+LoRA projections have their own switch in core.lora (grouped_lora kernels).
+
+On this CPU container only "pallas_interpret" executes; on TPU "pallas"
+lowers to Mosaic. Model-level equivalence between backends is tested in
+tests/test_kernel_backends.py.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+BACKENDS = ("jnp", "pallas", "pallas_interpret")
+
+
+def get_backend() -> str:
+    return getattr(_state, "name", "jnp")
+
+
+def set_backend(name: str) -> None:
+    assert name in BACKENDS, name
+    _state.name = name
+
+
+def interpret_mode() -> bool:
+    return get_backend() == "pallas_interpret"
+
+
+def use_pallas() -> bool:
+    return get_backend() != "jnp"
+
+
+@contextlib.contextmanager
+def backend(name: str):
+    prev = get_backend()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)

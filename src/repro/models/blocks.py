@@ -1,0 +1,247 @@
+"""Per-family transformer blocks with multi-adapter LoRA hooks.
+
+Every block operates on slot-major activations ``x: [Z, b, S, d]`` (Z =
+adapter slots). Base weights are slot-shared and FROZEN; LoRA pairs are
+slot-stacked. ``mode``:
+  "train"/"prefill": full-sequence causal; optionally fills a KV cache.
+  "decode": S == 1, consumes + updates cache/state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN_SLIDING, ModelConfig
+from repro.core.lora import proj
+from repro.models.attention import attention
+from repro.models.common import he_init, rms_norm, swiglu
+from repro.models.mamba import (init_mamba_params, init_mamba_state,
+                                mamba_block, mamba_target_shapes)
+from repro.models.moe import init_moe_params, moe_block
+from repro.models.rope import apply_rope
+from repro.models.rwkv import (init_rwkv_layer, rwkv_channel_mix,
+                               rwkv_target_shapes, rwkv_time_mix)
+from repro.models.shardctx import constrain, get_hint
+
+
+# ---------------------------------------------------------------------------
+# Target shapes (for LoRA init)
+# ---------------------------------------------------------------------------
+
+def attn_target_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, int]]:
+    d = cfg.d_model
+    return {
+        "q_proj": (d, cfg.q_dim), "k_proj": (d, cfg.kv_dim),
+        "v_proj": (d, cfg.kv_dim), "o_proj": (cfg.q_dim, d),
+    }
+
+
+def mlp_target_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, int]]:
+    d = cfg.d_model
+    return {"gate_proj": (d, cfg.d_ff), "up_proj": (d, cfg.d_ff),
+            "down_proj": (cfg.d_ff, d)}
+
+
+def target_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, int]]:
+    if cfg.family == "ssm":
+        return rwkv_target_shapes(cfg)
+    shapes = dict(attn_target_shapes(cfg))
+    if cfg.family == "hybrid":
+        shapes.update(mamba_target_shapes(cfg))
+        shapes.update(mlp_target_shapes(cfg))
+    elif cfg.is_moe:
+        pass  # experts frozen; attention-only LoRA (cfg.lora.targets governs)
+    else:
+        shapes.update(mlp_target_shapes(cfg))
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Init (one layer; model.py stacks over L)
+# ---------------------------------------------------------------------------
+
+def init_layer_params(key, cfg: ModelConfig, dtype) -> Dict:
+    if cfg.family == "ssm":
+        return init_rwkv_layer(key, cfg, dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 10)
+    p: Dict[str, Any] = {
+        "attn_norm": jnp.ones((d,), jnp.float32),
+        "mlp_norm": jnp.ones((d,), jnp.float32),
+        "q_proj": he_init(ks[0], (d, cfg.q_dim), d, dtype),
+        "k_proj": he_init(ks[1], (d, cfg.kv_dim), d, dtype),
+        "v_proj": he_init(ks[2], (d, cfg.kv_dim), d, dtype),
+        "o_proj": he_init(ks[3], (cfg.q_dim, d), cfg.q_dim, dtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = init_moe_params(ks[4], d, cfg.moe, dtype)
+    else:
+        p["gate_proj"] = he_init(ks[5], (d, cfg.d_ff), d, dtype)
+        p["up_proj"] = he_init(ks[6], (d, cfg.d_ff), d, dtype)
+        p["down_proj"] = he_init(ks[7], (cfg.d_ff, d), cfg.d_ff, dtype)
+    if cfg.family == "hybrid":
+        p["mamba"] = init_mamba_params(ks[8], cfg, dtype)
+        p["branch_norm_attn"] = jnp.ones((d,), jnp.float32)
+        p["branch_norm_ssm"] = jnp.ones((d,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Attention sublayer (shared by dense / moe / hybrid)
+# ---------------------------------------------------------------------------
+
+def _lp(lora: Dict, t: str):
+    return (lora[t]["A"], lora[t]["B"]) if t in lora else None
+
+
+def attn_sublayer(x: jnp.ndarray, p: Dict, lora: Dict, cfg: ModelConfig,
+                  angles: jnp.ndarray, q_pos: jnp.ndarray, *,
+                  cache: Optional[Dict] = None,
+                  k_pos: Optional[jnp.ndarray] = None,
+                  kv_valid_len: Optional[jnp.ndarray] = None,
+                  write_index: Optional[jnp.ndarray] = None,
+                  window: int = 0, scale=2.0,
+                  ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: [Z,b,S,d] (normed). Returns (attn_out, new_cache)."""
+    Z, b, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+
+    q = proj(x, p["q_proj"], _lp(lora, "q_proj"), scale, name="q_proj").reshape(Z, b, S, H, hd)
+    k = proj(x, p["k_proj"], _lp(lora, "k_proj"), scale, name="k_proj").reshape(Z, b, S, KV, hd)
+    v = proj(x, p["v_proj"], _lp(lora, "v_proj"), scale, name="v_proj").reshape(Z, b, S, KV, hd)
+    if S > 1 and get_hint("opt_level", 0) >= 2:
+        # keep q/k/v SEQUENCE-sharded through the (token-local) projections
+        # and rope; attention re-constrains to its head-sharded layout, so
+        # the S->head reshard moves the narrow per-head tensors (an
+        # all-to-all) instead of all-gathering the d_model-wide residual
+        q = constrain(q, "dims:data,pod,model")
+        k = constrain(k, "dims:data,pod,model")
+        v = constrain(v, "dims:data,pod,model")
+    q = constrain(apply_rope(q, angles), "attn_qkv")
+    k = apply_rope(k, angles)
+
+    new_cache = None
+    if cache is not None and write_index is not None:
+        # decode / cache-filling prefill: write new K/V at write_index
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), write_index, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), write_index, axis=2)
+        new_cache = {"k": ck, "v": cv}
+        k_all, v_all = ck, cv
+        kp = k_pos if k_pos is not None else jnp.arange(
+            ck.shape[2], dtype=jnp.int32)
+    else:
+        k_all, v_all = k, v
+        kp = k_pos if k_pos is not None else q_pos
+
+    out = attention(q, k_all, v_all, q_pos, kp, window=window,
+                    q_chunk=cfg_q_chunk(cfg, S),
+                    kv_valid_len=kv_valid_len)
+    out = out.reshape(Z, b, S, H * hd)
+    return proj(out, p["o_proj"], _lp(lora, "o_proj"), scale, name="o_proj"), new_cache
+
+
+def cfg_q_chunk(cfg: ModelConfig, S: int) -> int:
+    if S <= 512:
+        return S
+    for c in (512, 256, 128):
+        if S % c == 0:
+            return c
+    return S
+
+
+def mlp_sublayer(x: jnp.ndarray, p: Dict, lora: Dict, scale=2.0) -> jnp.ndarray:
+    h = swiglu(proj(x, p["gate_proj"], _lp(lora, "gate_proj"), scale,
+                    name="gate_proj"),
+               proj(x, p["up_proj"], _lp(lora, "up_proj"), scale,
+                    name="up_proj"))
+    h = constrain(h, "ffn_hidden")
+    return proj(h, p["down_proj"], _lp(lora, "down_proj"), scale,
+                name="down_proj")
+
+
+# ---------------------------------------------------------------------------
+# Full blocks. Signature:
+#   block(cfg, x, vars, ctx) -> (x', aux_loss fp32 scalar, new_layer_state)
+# ``ctx`` carries rope angles, positions, cache slices, window, mode.
+# ---------------------------------------------------------------------------
+
+def transformer_block(cfg: ModelConfig, x: jnp.ndarray, lvars: Dict,
+                      ctx: Dict) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+    p, lora = lvars["base"], lvars.get("lora", {})
+    scale = cfg.lora.scale_for_rank(0)
+    window = ctx.get("window", 0)
+    state = ctx.get("layer_state")
+    cache = state.get("attn") if isinstance(state, dict) else None
+
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    new_state: Dict[str, Any] = {}
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid":
+        attn_out, new_cache = attn_sublayer(
+            h, p, lora, cfg, ctx["angles"], ctx["q_pos"], cache=cache,
+            k_pos=ctx.get("k_pos"), kv_valid_len=ctx.get("kv_valid_len"),
+            write_index=ctx.get("write_index"), window=window, scale=scale)
+        ssm_out, new_mamba = mamba_block(
+            h, p["mamba"], lora, cfg,
+            state=(state.get("mamba") if isinstance(state, dict) else None),
+            scale=scale)
+        # Hymba: mean of per-branch-normed outputs
+        attn_out = rms_norm(attn_out, p["branch_norm_attn"], cfg.norm_eps)
+        ssm_out = rms_norm(ssm_out, p["branch_norm_ssm"], cfg.norm_eps)
+        x = x + 0.5 * (attn_out + ssm_out)
+        new_state["mamba"] = new_mamba
+        if new_cache is not None:
+            new_state["attn"] = new_cache
+    else:
+        attn_out, new_cache = attn_sublayer(
+            h, p, lora, cfg, ctx["angles"], ctx["q_pos"], cache=cache,
+            k_pos=ctx.get("k_pos"), kv_valid_len=ctx.get("kv_valid_len"),
+            write_index=ctx.get("write_index"), window=window, scale=scale)
+        # constrain the delta BEFORE the add: the row-parallel o_proj's
+        # partial sums then lower as reduce-scatter (Megatron-SP), not
+        # all-reduce + slice
+        x = x + constrain(attn_out, "residual")
+        if new_cache is not None:
+            new_state["attn"] = new_cache
+
+    x = constrain(x, "residual")
+    h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+    if cfg.is_moe:
+        moe_out, aux = moe_block(h, p["moe"], cfg.moe)
+        x = x + moe_out
+    else:
+        x = x + constrain(mlp_sublayer(h, p, lora, scale), "residual")
+    x = constrain(x, "residual")
+    return x, aux, (new_state if new_state else None)
+
+
+def rwkv_block(cfg: ModelConfig, x: jnp.ndarray, lvars: Dict,
+               ctx: Dict) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+    p, lora = lvars["base"], lvars.get("lora", {})
+    scale = cfg.lora.scale_for_rank(0)
+    state = ctx.get("layer_state")
+    state = state if isinstance(state, dict) else {}
+    # pre-norms (RWKV uses LN; we use RMS for uniformity); token-shift
+    # states carry the *normed* stream so decode continuation is exact.
+    xn = rms_norm(x, p["tm_norm"], cfg.norm_eps)
+    tm_out, wkv_state, tm_last = rwkv_time_mix(
+        xn, p, lora, cfg, prev_x=state.get("tm_x"), state=state.get("wkv"),
+        scale=scale)
+    x = constrain(x + tm_out, "residual")
+    xn = rms_norm(x, p["cm_norm"], cfg.norm_eps)
+    cm_out, cm_last = rwkv_channel_mix(
+        xn, p, lora, cfg, prev_x=state.get("cm_x"), scale=scale)
+    x = constrain(x + cm_out, "residual")
+    new_state = {"wkv": wkv_state, "tm_x": tm_last, "cm_x": cm_last}
+    return x, jnp.zeros((), jnp.float32), new_state
+
+
+def apply_block(cfg: ModelConfig, x, lvars, ctx):
+    if cfg.family == "ssm":
+        return rwkv_block(cfg, x, lvars, ctx)
+    return transformer_block(cfg, x, lvars, ctx)

@@ -1,0 +1,58 @@
+"""Shared low-level model components: norms, init, dtype policy."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm in fp32 accumulation, cast back to input dtype."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def normal_init(key, shape, scale: float, dtype) -> jax.Array:
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def he_init(key, shape, fan_in: int, dtype) -> jax.Array:
+    return normal_init(key, shape, 1.0 / np.sqrt(max(fan_in, 1)), dtype)
+
+
+def split_keys(key, n: int) -> Sequence[jax.Array]:
+    return jax.random.split(key, n)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def swiglu(gate, up):
+    return silu(gate) * up
+
+
+def causal_mask_bias(q_pos: jax.Array, k_pos: jax.Array,
+                     window: int = 0) -> jax.Array:
+    """Additive attention bias: 0 where visible, -inf where masked.
+
+    q_pos: [..., Sq] absolute query positions
+    k_pos: [..., Sk] absolute key positions
+    window: 0 => full causal; >0 => sliding window of that many positions
+    """
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    visible = k <= q
+    if window > 0:
+        visible &= k > (q - window)
+    return jnp.where(visible, 0.0, -jnp.inf).astype(jnp.float32)

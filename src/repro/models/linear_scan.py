@@ -1,0 +1,175 @@
+"""Chunked linear-attention / gated-SSM scan core.
+
+One numerical core serves both RWKV-6 (data-dependent per-channel decay with
+current-token bonus ``u``) and Mamba-2/SSD (scalar-per-step decay, no bonus).
+
+Recurrence (per head; state S maps key-dim K -> value-dim V):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t             w_t = exp(logw_t) in (0,1]
+    y_t = q_t S_{t-1} + (q_t . u) k_t v_t           (decay_on_query=False; RWKV)
+    y_t = q_t S_t                                    (decay_on_query=True; SSD)
+
+Chunked evaluation: the sequence is split into chunks of length C; the
+inter-chunk state term and the state update are MXU matmuls with decay
+factors exp(L_t) <= 1 (L = within-chunk cumulative log-decay, always <= 0 so
+no overflow); the intra-chunk pair term is computed *exactly* in log space
+via per-pair decay differences (a [C, C, K] einsum), which is numerically
+stable for arbitrarily strong decay — no clamping, no approximation. All
+internal math is fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.shardctx import get_hint
+
+NEG_INF = -1e30
+
+
+def chunked_linear_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, logw: jnp.ndarray, *,
+    bonus: Optional[jnp.ndarray] = None,
+    decay_on_query: bool = False,
+    initial_state: Optional[jnp.ndarray] = None,
+    chunk: int = 32,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q,k,logw: [Z,b,S,H,K]; v: [Z,b,S,H,V]; bonus: [H,K] or None.
+
+    returns (y: [Z,b,S,H,V], final_state: [Z,b,H,K,V]) — y in q.dtype,
+    state fp32.
+    """
+    Z, b, S, H, K = q.shape
+    V = v.shape[-1]
+    dt = q.dtype
+    # perf hints (§Perf): override chunk size; remat the per-chunk body so
+    # the outer-layer checkpoint does NOT stack the [C,C,K] pair tensors of
+    # every chunk as scan residuals (the dominant memory term in the
+    # baseline rwkv6/hymba train rooflines).
+    C = int(get_hint("scan_chunk", 0) or chunk)
+    remat_chunk = get_hint("opt_level", 0) >= 2
+    C = min(C, S)
+    while S % C:
+        C -= 1
+    n = S // C
+
+    # hand-kernel path (kernels/linear_scan): VMEM-resident pair tensors
+    from repro.models import backend as BK
+    if BK.use_pallas():
+        from repro.kernels.linear_scan import ops as LSK
+        Bf = Z * b * H
+        to_rows = lambda x, d: x.transpose(0, 1, 3, 2, 4).reshape(Bf, S, d)
+        bon = (jnp.broadcast_to(bonus[None, None], (Z, b, H, K))
+               .reshape(Bf, K) if bonus is not None else None)
+        s0 = (initial_state.reshape(Bf, K, V)
+              if initial_state is not None else None)
+        y, st = LSK.linear_scan(
+            to_rows(q, K), to_rows(k, K), to_rows(v, V), to_rows(logw, K),
+            bonus=bon, decay_on_query=decay_on_query, initial_state=s0,
+            chunk=C, interpret=BK.interpret_mode())
+        y = y.reshape(Z, b, H, S, V).transpose(0, 1, 3, 2, 4)
+        return y.astype(dt), st.reshape(Z, b, H, K, V)
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    lw = logw.astype(jnp.float32)
+
+    # [n, Z, b, H, C, K/V] chunk-major, head-major layouts
+    def to_chunks(x, d):
+        return jnp.moveaxis(
+            x.reshape(Z, b, n, C, H, d), (2, 4), (0, 3))
+
+    qc, kc, lc = to_chunks(qf, K), to_chunks(kf, K), to_chunks(lw, K)
+    vc = to_chunks(vf, V)
+
+    if initial_state is None:
+        S0 = jnp.zeros((Z, b, H, K, V), jnp.float32)
+    else:
+        S0 = initial_state.astype(jnp.float32)
+
+    # intra-chunk causal mask: strict lower for RWKV (bonus handles diag),
+    # inclusive lower for SSD
+    t_idx = jnp.arange(C)
+    if decay_on_query:
+        pair_visible = t_idx[:, None] >= t_idx[None, :]
+    else:
+        pair_visible = t_idx[:, None] > t_idx[None, :]
+
+    def step(state, inp):
+        qb, kb, vb, lb = inp              # [Z,b,H,C,K], v: [...,C,V]
+        L = jnp.cumsum(lb, axis=-2)       # [Z,b,H,C,K], <= 0, decreasing
+        if decay_on_query:
+            Lq = L                        # decay through token t inclusive
+        else:
+            Lq = jnp.pad(L, [(0, 0)] * 3 + [(1, 0), (0, 0)])[..., :-1, :]
+        # ---- state contribution: (q . exp(Lq)) @ S_prev  (exp <= 1)
+        q_scaled = qb * jnp.exp(Lq)
+        y_state = jnp.einsum("zbhck,zbhkv->zbhcv", q_scaled, state)
+        # ---- intra-chunk pairs, exact log-space:
+        # P[t,i] = sum_K q[t]k[i]exp(Lq[t]-L[i]) over visible (t,i)
+        dd = Lq[..., :, None, :] - L[..., None, :, :]   # [Z,b,H,C,C,K]
+        dd = jnp.where(pair_visible[..., None], dd, NEG_INF)
+        P = jnp.einsum("zbhtk,zbhik,zbhtik->zbhti",
+                       qb, kb, jnp.exp(dd))
+        if bonus is not None:
+            diag = jnp.einsum("zbhck,hk,zbhck->zbhc", qb,
+                              bonus.astype(jnp.float32), kb)
+            P = P + diag[..., None] * jnp.eye(C, dtype=jnp.float32)
+        y_intra = jnp.einsum("zbhti,zbhiv->zbhtv", P, vb)
+        # ---- state update: S' = exp(L_C) . S + sum_i (k_i exp(L_C - L_i)) v_i
+        L_end = L[..., -1:, :]                           # [Z,b,H,1,K]
+        k_scaled = kb * jnp.exp(L_end - L)               # exp <= 1
+        new_state = (state * jnp.exp(L_end.squeeze(-2))[..., None]
+                     + jnp.einsum("zbhck,zbhcv->zbhkv", k_scaled, vb))
+        return new_state, y_state + y_intra
+
+    if remat_chunk:
+        step = jax.checkpoint(step, prevent_cse=False)
+    final_state, ys = jax.lax.scan(step, S0, (qc, kc, vc, lc))
+    # ys: [n, Z, b, H, C, V] -> [Z, b, S, H, V]
+    y = jnp.moveaxis(ys, (0, 3), (2, 4)).reshape(Z, b, S, H, V)
+    return y.astype(dt), final_state
+
+
+def linear_attention_decode_step(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, logw: jnp.ndarray,
+    state: jnp.ndarray, *, bonus: Optional[jnp.ndarray] = None,
+    decay_on_query: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrent step.
+
+    q,k,logw: [Z,b,H,K]; v: [Z,b,H,V]; state: [Z,b,H,K,V] fp32.
+    returns (y [Z,b,H,V] in q.dtype, new_state fp32).
+    """
+    dt = q.dtype
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    if decay_on_query:
+        new_state = state * w[..., None] + kf[..., :, None] * vf[..., None, :]
+        y = jnp.einsum("zbhk,zbhkv->zbhv", qf, new_state)
+    else:
+        y = jnp.einsum("zbhk,zbhkv->zbhv", qf, state)
+        if bonus is not None:
+            y = y + jnp.einsum("zbhk,hk,zbhk,zbhv->zbhv",
+                               qf, bonus.astype(jnp.float32), kf, vf)
+        new_state = state * w[..., None] + kf[..., :, None] * vf[..., None, :]
+    return y.astype(dt), new_state
+
+
+def reference_linear_attention(q, k, v, logw, *, bonus=None,
+                               decay_on_query=False, initial_state=None):
+    """O(S) step-by-step oracle (used by tests to validate the chunked path)."""
+    Z, b, S, H, K = q.shape
+    V = v.shape[-1]
+    state = (jnp.zeros((Z, b, H, K, V), jnp.float32)
+             if initial_state is None else initial_state.astype(jnp.float32))
+    ys = []
+    for t in range(S):
+        y, state = linear_attention_decode_step(
+            q[:, :, t], k[:, :, t], v[:, :, t], logw[:, :, t], state,
+            bonus=bonus, decay_on_query=decay_on_query)
+        ys.append(y)
+    return jnp.stack(ys, axis=2), state

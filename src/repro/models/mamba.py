@@ -1,0 +1,122 @@
+"""Mamba-2 (SSD) style selective SSM branch — used by the Hymba hybrid block.
+
+Per-head scalar data-dependent decay a_t = exp(-dt_t * exp(A_log)); B/C
+projections shared across heads (state_size N per head); dt-scaled input;
+causal depthwise conv front; silu(z) output gate; D skip. The recurrence
+runs through the shared chunked linear-scan core (decay_on_query=True).
+
+Decode carries (conv_buffer [Z,b,W-1,inner], ssm_state [Z,b,H,N,hs]).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.lora import proj
+from repro.models.common import he_init, normal_init, silu
+from repro.models.linear_scan import (chunked_linear_attention,
+                                      linear_attention_decode_step)
+
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    inner = cfg.ssm.expand * cfg.d_model
+    hs = cfg.ssm.head_size
+    H = inner // hs
+    return inner, H, hs
+
+
+def mamba_target_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, int]]:
+    inner, _, _ = mamba_dims(cfg)
+    return {"in_proj": (cfg.d_model, 2 * inner)}
+
+
+def init_mamba_params(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    inner, H, hs = mamba_dims(cfg)
+    N = cfg.ssm.state_size
+    W = cfg.ssm.conv_width
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": he_init(ks[0], (d, 2 * inner), d, dtype),
+        "conv": normal_init(ks[1], (W, inner), 0.2, jnp.float32),
+        "bc_proj": he_init(ks[2], (inner, 2 * N), inner, dtype),
+        "dt_proj": he_init(ks[3], (inner, H), inner, jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": normal_init(ks[4], (H,), 0.5, jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_proj": he_init(ks[5], (inner, d), inner, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 buffer: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Depthwise causal conv. x: [Z,b,S,inner]; w: [W, inner]."""
+    W = w.shape[0]
+    if buffer is None:
+        pad = jnp.zeros((*x.shape[:2], W - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = buffer.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=2)
+    out = sum(xp[:, :, i:i + x.shape[2]] * w[i].astype(x.dtype)
+              for i in range(W))
+    return silu(out)
+
+
+def mamba_block(x: jnp.ndarray, p: Dict, lora: Dict, cfg: ModelConfig, *,
+                state: Optional[Dict] = None, scale=2.0
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """x: [Z,b,S,d] -> (out [Z,b,S,d], new_state {conv, ssm})."""
+    Z, b, S, d = x.shape
+    inner, H, hs = mamba_dims(cfg)
+    N = cfg.ssm.state_size
+    Wd = cfg.ssm.conv_width
+
+    lp = lambda t: (lora[t]["A"], lora[t]["B"]) if t in lora else None
+    xz = proj(x, p["in_proj"], lp("in_proj"), scale, name="in_proj")
+    xt, z = jnp.split(xz, 2, axis=-1)
+
+    conv_buf = state["conv"] if state is not None else None
+    xc = _causal_conv(xt, p["conv"], conv_buf)
+    if conv_buf is None:
+        stream = jnp.pad(xt, [(0, 0), (0, 0), (Wd - 1, 0), (0, 0)])
+    else:
+        stream = jnp.concatenate([conv_buf.astype(xt.dtype), xt], axis=2)
+    new_conv = stream[:, :, -(Wd - 1):].astype(jnp.float32)
+
+    bc = proj(xc, p["bc_proj"], None, name="bc_proj")                     # [Z,b,S,2N] frozen
+    Bm, Cm = jnp.split(bc.astype(jnp.float32), 2, axis=-1)
+    dt = jax.nn.softplus(xc.astype(jnp.float32) @ p["dt_proj"]
+                         + p["dt_bias"])                  # [Z,b,S,H]
+    logw = -dt * jnp.exp(p["A_log"])                      # [Z,b,S,H] < 0
+
+    v = xc.reshape(Z, b, S, H, hs) * dt[..., None].astype(xc.dtype)
+    q = jnp.broadcast_to(Cm[..., None, :], (Z, b, S, H, N)).astype(xc.dtype)
+    k = jnp.broadcast_to(Bm[..., None, :], (Z, b, S, H, N)).astype(xc.dtype)
+    lw = jnp.broadcast_to(logw[..., None], (Z, b, S, H, N))
+
+    ssm_state = state["ssm"] if state is not None else None
+    if S == 1 and ssm_state is not None:
+        y, new_ssm = linear_attention_decode_step(
+            q[:, :, 0], k[:, :, 0], v[:, :, 0], lw[:, :, 0], ssm_state,
+            decay_on_query=True)
+        y = y[:, :, None]
+    else:
+        y, new_ssm = chunked_linear_attention(
+            q, k, v, lw, decay_on_query=True, initial_state=ssm_state,
+            chunk=cfg.ssm.chunk_size)
+
+    y = y + xc.reshape(Z, b, S, H, hs) * p["D"][:, None].astype(xc.dtype)
+    y = y.reshape(Z, b, S, inner) * silu(z)
+    out = proj(y, p["out_proj"], None, name="out_proj")                    # frozen out proj
+    return out, {"conv": new_conv, "ssm": new_ssm}
+
+
+def init_mamba_state(cfg: ModelConfig, Z: int, b: int) -> Dict:
+    inner, H, hs = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((Z, b, cfg.ssm.conv_width - 1, inner), jnp.float32),
+        "ssm": jnp.zeros((Z, b, H, cfg.ssm.state_size, hs), jnp.float32),
+    }

@@ -1,0 +1,140 @@
+"""Mixture-of-Experts with grouped GShard-style capacity dispatch.
+
+TPU-native token-choice routing: tokens are split into groups (so the
+one-hot dispatch/combine tensors stay [G, s, E, c] with small per-group
+capacity ``c`` instead of an infeasible [T, E, C]); expert weights are
+sharded on the "model" mesh axis (expert parallelism) and GSPMD inserts the
+all-to-all at the dispatch/combine einsums. Routed experts are FROZEN under
+ALTO (LoRA attaches to attention projections for MoE archs); the router and
+experts still run in fwd/bwd, and the load-balance auxiliary loss is
+reported so early-exit sees honest training dynamics.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.common import he_init, swiglu
+from repro.models.shardctx import constrain, get_hint
+
+
+def pick_group_size(num_tokens: int, lo: int = 128, hi: int = 4096) -> int:
+    """Largest power-of-two group size in [lo, hi] dividing num_tokens."""
+    g = 1
+    t = num_tokens
+    while t % 2 == 0 and g < hi:
+        g *= 2
+        t //= 2
+    if g < lo:
+        return num_tokens if num_tokens <= hi else g
+    return min(g, hi)
+
+
+def init_moe_params(key, d_model: int, moe: MoEConfig, dtype) -> Dict:
+    ks = jax.random.split(key, 5)
+    E, ff = moe.num_experts, moe.d_ff_expert
+    p = {
+        "router": he_init(ks[0], (d_model, E), d_model, jnp.float32),
+        "w_gate": he_init(ks[1], (E, d_model, ff), d_model, dtype),
+        "w_up": he_init(ks[2], (E, d_model, ff), d_model, dtype),
+        "w_down": he_init(ks[3], (E, ff, d_model), ff, dtype),
+    }
+    if moe.num_shared_experts:
+        ffs = moe.d_ff_shared * moe.num_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "gate": he_init(kk[0], (d_model, ffs), d_model, dtype),
+            "up": he_init(kk[1], (d_model, ffs), d_model, dtype),
+            "down": he_init(kk[2], (ffs, d_model), ffs, dtype),
+        }
+    return p
+
+
+def moe_block(x: jnp.ndarray, params: Dict, moe: MoEConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [Z, b, S, d] -> (out [Z, b, S, d], aux_loss scalar fp32).
+
+    Grouped token-choice top-k with static per-group capacity.
+    """
+    Z, b, S, d = x.shape
+    dt = x.dtype
+    E, k = moe.num_experts, moe.top_k
+    T = Z * b * S
+    s = pick_group_size(T)
+    G = T // s
+    if s <= 64:
+        # tiny groups (decode steps, smoke tests): lossless capacity so the
+        # decode path is numerically identical to the full-sequence path
+        cap = s * k
+    else:
+        cap = max(int(moe.capacity_factor * s * k / E), 1)
+
+    xt = x.reshape(G, s, d)
+    if get_hint("opt_level", 0) >= 1:
+        # groups factor as (Z-blocks, b-blocks, seq-chunks): shard G over
+        # the data AND pod axes jointly so the [G,s,d] token slab (20 GiB
+        # at production shapes) never replicates
+        xt = constrain(xt, "dims:data+pod")
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # [G,s,E]
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)              # [G,s,k]
+    # normalize selected gates (token-choice convention)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (per group, averaged)
+    me = jnp.mean(probs, axis=1)                                 # [G,E]
+    onehot_top1 = jax.nn.one_hot(expert_idx[..., 0], E)
+    ce = jnp.mean(onehot_top1, axis=1)                           # [G,E]
+    aux = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+
+    # ---- position within expert (capacity enforcement), per k-choice
+    sel = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)         # [G,s,k,E]
+    # flatten (s,k) in priority order: earlier tokens & lower k first
+    sel_flat = sel.reshape(G, s * k, E)
+    pos = jnp.cumsum(sel_flat, axis=1) - sel_flat                # [G,s*k,E]
+    pos = jnp.sum(pos * sel_flat, axis=-1).reshape(G, s, k)      # [G,s,k]
+    keep = pos < cap
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # ---- dispatch / combine one-hots  [G, s, k, E, cap] -> reduce k
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap)      # [G,s,k,cap]
+    dispatch = jnp.einsum("gske,gskc->gsec",
+                          sel.astype(jnp.float32), pos_oh)       # [G,s,E,cap]
+    combine = jnp.einsum("gsk,gske,gskc->gsec", gate_vals,
+                         sel.astype(jnp.float32), pos_oh)
+    if get_hint("opt_level", 0) >= 1:
+        # the one-hot dispatch/combine tensors are the MoE peak-memory term
+        # at production token counts: shard groups over data+pod and
+        # experts over "model" so no device holds a [G,s,E,cap] slab (§Perf)
+        dispatch = constrain(dispatch, "dims:data+pod,-,model")
+        combine = constrain(combine, "dims:data+pod,-,model")
+
+    w_gate = constrain(params["w_gate"], "weight:w_gate")
+    w_up = constrain(params["w_up"], "weight:w_up")
+    w_down = constrain(params["w_down"], "weight:w_down")
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch.astype(dt), xt)
+    expert_in = constrain(expert_in, "moe_expert")
+    h = swiglu(jnp.einsum("egcd,edf->egcf", expert_in, w_gate),
+               jnp.einsum("egcd,edf->egcf", expert_in, w_up))
+    expert_out = jnp.einsum("egcf,efd->egcd", h, w_down)
+    expert_out = constrain(expert_out, "moe_expert")
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(dt), expert_out)
+    if get_hint("opt_level", 0) >= 1:
+        out = constrain(out, "dims:data+pod")
+
+    if "shared" in params:
+        sh = params["shared"]
+        hs = swiglu(
+            jnp.einsum("gsd,df->gsf", xt,
+                       constrain(sh["gate"], "weight:shared/gate")),
+            jnp.einsum("gsd,df->gsf", xt,
+                       constrain(sh["up"], "weight:shared/up")))
+        out = out + jnp.einsum("gsf,fd->gsd", hs,
+                               constrain(sh["down"], "weight:shared/down"))
+
+    return out.reshape(Z, b, S, d), aux.astype(jnp.float32)

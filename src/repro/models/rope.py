@@ -1,0 +1,65 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE [arXiv:2409.12191]: the head_dim/2 rotary frequencies are split into
+three sections (temporal, height, width); each section consumes the matching
+component of a 3-part position id. Text tokens carry (t,t,t) so M-RoPE
+degrades exactly to RoPE on text.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import RoPEConfig
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape [head_dim // 2] (fp32)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int,
+                cfg: RoPEConfig) -> jnp.ndarray:
+    """Rotation angles.
+
+    positions: [..., S] int for RoPE, or [3, ..., S] for M-RoPE.
+    returns angles [..., S, head_dim // 2] fp32.
+    """
+    inv = rope_freqs(head_dim, cfg.theta)
+    if not cfg.is_mrope:
+        return positions[..., None].astype(jnp.float32) * inv
+    sections = cfg.mrope_sections
+    assert positions.shape[0] == 3, "M-RoPE expects [3, ..., S] positions"
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    parts = []
+    off = 0
+    for comp in range(3):
+        sec = sections[comp]
+        ang = positions[comp][..., None].astype(jnp.float32) * inv[off:off + sec]
+        parts.append(ang)
+        off += sec
+    return jnp.concatenate(parts, axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs. x: [..., S, H, hd]; angles: [..., S, hd//2]."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    c = jnp.cos(angles)[..., None, :]   # broadcast over heads
+    s = jnp.sin(angles)[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(dt)
+
+
+def text_positions(batch_shape: Tuple[int, ...], seq_len: int,
+                   cfg: RoPEConfig, offset=0) -> jnp.ndarray:
+    """Default positions: arange for RoPE; (t,t,t) stack for M-RoPE."""
+    pos = jnp.arange(seq_len, dtype=jnp.int32) + offset
+    pos = jnp.broadcast_to(pos, (*batch_shape, seq_len))
+    if cfg.is_mrope:
+        pos = jnp.broadcast_to(pos[None], (3, *batch_shape, seq_len))
+    return pos

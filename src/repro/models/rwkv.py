@@ -1,0 +1,132 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+[arXiv:2404.05892] Per-layer structure:
+  time-mix : token-shift lerp feeds r/k/v/g projections and a *data-dependent*
+             per-channel decay w_t = exp(-exp(w0 + tanh(x w1) w2)); the WKV
+             recurrence runs through the shared chunked linear-scan core with
+             current-token bonus ``u``; output gated by silu(g) and per-head
+             group-norm, then o_proj.
+  channel-mix: token-shift lerp, squared-ReLU MLP (ffn_k -> relu^2 -> ffn_v).
+
+LoRA targets: r/k/v/g/o projections + ffn_k/ffn_v (the "all projections"
+rule of the paper, translated to the attention-free family).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.lora import proj
+from repro.models.common import he_init, normal_init, rms_norm, silu
+from repro.models.linear_scan import (chunked_linear_attention,
+                                      linear_attention_decode_step)
+
+DECAY_LORA_DIM = 64
+
+
+def rwkv_target_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, int]]:
+    d = cfg.d_model
+    return {
+        "r_proj": (d, d), "k_proj": (d, d), "v_proj": (d, d),
+        "g_proj": (d, d), "o_proj": (d, d),
+        "ffn_k": (d, cfg.d_ff), "ffn_v": (cfg.d_ff, d),
+    }
+
+
+def init_rwkv_layer(key, cfg: ModelConfig, dtype) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    H = cfg.num_heads
+    hs = cfg.ssm.head_size
+    ks = jax.random.split(key, 12)
+    return {
+        "tm_norm": jnp.ones((d,), jnp.float32),
+        "cm_norm": jnp.ones((d,), jnp.float32),
+        # token-shift mix coefficients (per-channel, for r/k/v/g/w and ffn)
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),
+        "mu_ffn": 0.5 * jnp.ones((d,), jnp.float32),
+        "r_proj": he_init(ks[0], (d, d), d, dtype),
+        "k_proj": he_init(ks[1], (d, d), d, dtype),
+        "v_proj": he_init(ks[2], (d, d), d, dtype),
+        "g_proj": he_init(ks[3], (d, d), d, dtype),
+        "o_proj": he_init(ks[4], (d, d), d, dtype),
+        # data-dependent decay: w0 + tanh(x w1) w2  (low-rank, fp32)
+        "w0": -1.0 + normal_init(ks[5], (d,), 0.3, jnp.float32),
+        "w1": normal_init(ks[6], (d, DECAY_LORA_DIM), 0.02, jnp.float32),
+        "w2": normal_init(ks[7], (DECAY_LORA_DIM, d), 0.02, jnp.float32),
+        "u": normal_init(ks[8], (H, hs), 0.3, jnp.float32),   # bonus
+        "ln_x": jnp.ones((d,), jnp.float32),                  # per-head norm
+        "ffn_k": he_init(ks[9], (d, ff), d, dtype),
+        "ffn_v": he_init(ks[10], (ff, d), ff, dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Shifted-by-one sequence: [Z,b,S,d] -> prev token at each position."""
+    shifted = jnp.pad(x, [(0, 0), (0, 0), (1, 0), (0, 0)])[:, :, :-1]
+    if prev is not None:   # decode continuation: position 0 = carried state
+        shifted = shifted.at[:, :, 0].set(prev)
+    return shifted
+
+
+def _heads(x: jnp.ndarray, H: int, hs: int) -> jnp.ndarray:
+    return x.reshape(*x.shape[:-1], H, hs)
+
+
+def rwkv_time_mix(x: jnp.ndarray, p: Dict, lora: Dict, cfg: ModelConfig, *,
+                  prev_x: Optional[jnp.ndarray] = None,
+                  state: Optional[jnp.ndarray] = None,
+                  scale=2.0) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Time-mix over a sequence. x: [Z,b,S,d].
+
+    returns (out, final_wkv_state [Z,b,H,hs,hs], last_x [Z,b,d])
+    """
+    Z, b, S, d = x.shape
+    H, hs = cfg.num_heads, cfg.ssm.head_size
+    xx = _token_shift(x, prev_x)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + (xx - x) * mu[i] for i in range(5))
+
+    lp = lambda t: (lora[t]["A"], lora[t]["B"]) if t in lora else None
+    r = _heads(proj(xr, p["r_proj"], lp("r_proj"), scale, name="r_proj"), H, hs)
+    k = _heads(proj(xk, p["k_proj"], lp("k_proj"), scale, name="k_proj"), H, hs)
+    v = _heads(proj(xv, p["v_proj"], lp("v_proj"), scale, name="v_proj"), H, hs)
+    g = proj(xg, p["g_proj"], lp("g_proj"), scale, name="g_proj")
+
+    # data-dependent decay (fp32): logw = -exp(w0 + tanh(xw w1) w2) in (-inf,0)
+    xwf = xw.astype(jnp.float32)
+    dd = jnp.tanh(xwf @ p["w1"]) @ p["w2"]
+    logw = -jnp.exp(jnp.clip(p["w0"] + dd, -8.0, 4.0))
+    logw = _heads(logw, H, hs)
+
+    if S == 1 and state is not None:
+        y, new_state = linear_attention_decode_step(
+            r[:, :, 0], k[:, :, 0], v[:, :, 0], logw[:, :, 0], state,
+            bonus=p["u"], decay_on_query=False)
+        y = y[:, :, None]
+    else:
+        y, new_state = chunked_linear_attention(
+            r, k, v, logw, bonus=p["u"], decay_on_query=False,
+            initial_state=state, chunk=cfg.ssm.chunk_size)
+
+    # per-head group norm, gate, output projection
+    yf = y.astype(jnp.float32)
+    mean = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mean) * jax.lax.rsqrt(var + 1e-5)
+    yn = (yn.reshape(Z, b, S, d) * p["ln_x"]).astype(x.dtype)
+    out = proj(yn * silu(g), p["o_proj"], lp("o_proj"), scale, name="o_proj")
+    return out, new_state, x[:, :, -1]
+
+
+def rwkv_channel_mix(x: jnp.ndarray, p: Dict, lora: Dict, cfg: ModelConfig, *,
+                     prev_x: Optional[jnp.ndarray] = None,
+                     scale=2.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xx = _token_shift(x, prev_x)
+    xk = x + (xx - x) * p["mu_ffn"].astype(x.dtype)
+    lp = lambda t: (lora[t]["A"], lora[t]["B"]) if t in lora else None
+    k = proj(xk, p["ffn_k"], lp("ffn_k"), scale, name="ffn_k")
+    k = jnp.square(jax.nn.relu(k))
+    return proj(k, p["ffn_v"], lp("ffn_v"), scale, name="ffn_v"), x[:, :, -1]

@@ -1,0 +1,63 @@
+"""Sharding-hint context.
+
+Model code is written once; distribution is injected by the launcher through
+this context. ``constrain(x, kind)`` applies a
+``jax.lax.with_sharding_constraint`` chosen by the active policy (or is a
+no-op in single-device tests). Policies are divisibility-aware: a constraint
+whose sharded dim does not divide by the mesh axis size silently degrades to
+replicated on that dim (e.g. hymba's 25 heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def _policy() -> Optional[Callable]:
+    return getattr(_state, "policy", None)
+
+
+def get_hint(name: str, default=None):
+    """Policy-supplied tracing hints (e.g. 'model_size', 'opt_level')."""
+    hints = getattr(_state, "hints", None)
+    if hints is None:
+        return default
+    return hints.get(name, default)
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """Annotate activation ``x`` with the sharding for logical role ``kind``.
+
+    kinds used by the model code:
+      residual      [Z, b, S, d]  residual stream between blocks
+      attn_qkv      [Z, b, S, H, hd] per-head projections
+      attn_out      [Z, b, S, d]
+      ffn_hidden    [Z, b, S, ff]
+      logits        [Z, b, S, V]
+      moe_expert    [E, G, C, d]  expert-major dispatched tokens
+      kv_cache      [Z, b, S, kv, hd]
+      linear_state  [Z, b, H, K, V] recurrent state
+    """
+    p = _policy()
+    if p is None:
+        return x
+    return p(x, kind)
+
+
+@contextlib.contextmanager
+def sharding_policy(policy: Callable, hints: Optional[dict] = None):
+    """Install ``policy(x, kind) -> x`` for the duration of the context."""
+    prev = _policy()
+    prev_hints = getattr(_state, "hints", None)
+    _state.policy = policy
+    _state.hints = hints or getattr(policy, "hints", None)
+    try:
+        yield
+    finally:
+        _state.policy = prev
+        _state.hints = prev_hints

@@ -1,0 +1,125 @@
+"""AdamW over slot-stacked LoRA trees with PER-SLOT hyperparameters.
+
+Every adapter slot trains under its own (lr, wd) — the ALTO tuning unit —
+so the hyperparameters are [Z] vectors broadcast onto [L, Z, ...] leaves.
+Per-slot global-norm gradient clipping keeps one diverging job from
+touching its neighbours. Rank masks are re-applied after every update so
+rank-padded regions stay identically zero (paper §A.1).
+
+(The paper uses paged AdamW 8-bit; host-paged optimizer state is a CUDA-UVM
+mechanism with no TPU analogue — plain fp32-state AdamW here, see DESIGN.md
+§8.)
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SlotHParams(NamedTuple):
+    """Per-slot hyperparameters, each [Z] fp32."""
+    lr: jnp.ndarray
+    wd: jnp.ndarray
+    beta1: jnp.ndarray
+    beta2: jnp.ndarray
+    grad_clip: jnp.ndarray      # 0 => no clipping
+
+    @staticmethod
+    def broadcast(Z: int, lr=1e-4, wd=0.01, beta1=0.9, beta2=0.999,
+                  grad_clip=1.0) -> "SlotHParams":
+        f = lambda v: jnp.full((Z,), v, jnp.float32)
+        return SlotHParams(f(lr), f(wd), f(beta1), f(beta2), f(grad_clip))
+
+    def replace_slot(self, slot: int, **kw) -> "SlotHParams":
+        d = self._asdict()
+        for k, v in kw.items():
+            d[k] = d[k].at[slot].set(v)
+        return SlotHParams(**d)
+
+
+class AdamWState(NamedTuple):
+    mu: Dict
+    nu: Dict
+    count: jnp.ndarray          # [Z] per-slot step counts
+
+
+def init_state(lora_tree: Dict, Z: int) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, jnp.float32), lora_tree)
+    return AdamWState(mu=zeros,
+                      nu=jax.tree_util.tree_map(jnp.copy, zeros),
+                      count=jnp.zeros((Z,), jnp.int32))
+
+
+def _bshape(v: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Reshape [Z] vector to broadcast over [L, Z, ...] leaves."""
+    return v.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+
+
+def per_slot_global_norm(grads: Dict) -> jnp.ndarray:
+    """[Z] fp32 global grad norm per slot across all leaves."""
+    sq = jax.tree_util.tree_map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32)),
+                          axis=tuple(i for i in range(g.ndim) if i != 1)),
+        grads)
+    total = jax.tree_util.tree_reduce(
+        lambda a, b: a + b, sq, jnp.zeros(()))
+    return jnp.sqrt(jnp.maximum(total, 0.0))
+
+
+def apply_updates(params: Dict, grads: Dict, state: AdamWState,
+                  hp: SlotHParams, active: jnp.ndarray,
+                  rank_masker=None, eps: float = 1e-8
+                  ) -> Tuple[Dict, AdamWState]:
+    """One AdamW step. ``active``: [Z] {0,1} — inactive slots are frozen.
+
+    ``rank_masker``: optional fn(tree) -> tree re-applying rank masks.
+    """
+    norms = per_slot_global_norm(grads)
+    clip = jnp.where(
+        (hp.grad_clip > 0) & (norms > hp.grad_clip),
+        hp.grad_clip / jnp.maximum(norms, 1e-12), 1.0)      # [Z]
+    act = active.astype(jnp.float32)
+    new_count = state.count + active.astype(jnp.int32)
+    t = jnp.maximum(new_count, 1).astype(jnp.float32)       # [Z]
+    bc1 = 1.0 - hp.beta1 ** t
+    bc2 = 1.0 - hp.beta2 ** t
+
+    def upd(p, g, m, n):
+        gf = g.astype(jnp.float32) * _bshape(clip * act, p)
+        b1, b2 = _bshape(hp.beta1, p), _bshape(hp.beta2, p)
+        a = _bshape(act, p)
+        m2 = (b1 * m + (1 - b1) * gf) * a + m * (1 - a)
+        n2 = (b2 * n + (1 - b2) * jnp.square(gf)) * a + n * (1 - a)
+        mhat = m2 / _bshape(bc1, p)
+        nhat = n2 / _bshape(bc2, p)
+        step = mhat / (jnp.sqrt(nhat) + eps) + _bshape(hp.wd, p) * p
+        p2 = p - _bshape(hp.lr * act, p) * step
+        return p2, m2, n2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.mu)
+    flat_n = jax.tree_util.tree_leaves(state.nu)
+    out_p, out_m, out_n = [], [], []
+    for p, g, m, n in zip(flat_p, flat_g, flat_m, flat_n):
+        p2, m2, n2 = upd(p, g, m, n)
+        out_p.append(p2)
+        out_m.append(m2)
+        out_n.append(n2)
+    new_params = jax.tree_util.tree_unflatten(treedef, out_p)
+    if rank_masker is not None:
+        new_params = rank_masker(new_params)
+    return new_params, AdamWState(
+        mu=jax.tree_util.tree_unflatten(treedef, out_m),
+        nu=jax.tree_util.tree_unflatten(treedef, out_n),
+        count=new_count)
+
+
+def reset_slot(state: AdamWState, slot: int) -> AdamWState:
+    """Zero a slot's optimizer state (eviction / swap-in)."""
+    z = jax.tree_util.tree_map(lambda x: x.at[:, slot].set(0.0), state.mu)
+    n = jax.tree_util.tree_map(lambda x: x.at[:, slot].set(0.0), state.nu)
+    return AdamWState(mu=z, nu=n, count=state.count.at[slot].set(0))

@@ -1,0 +1,135 @@
+"""Three-term roofline from the compiled dry-run artifact (TPU v5e target).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+Sources: trip-count-weighted HLO parsing (roofline/hlo.py) for FLOPs and
+collective bytes (``cost_analysis`` counts loop bodies once — see hlo.py);
+memory bytes = 2x trip-weighted materialized result bytes (one write + one
+read per HBM buffer). All terms are PER-DEVICE per step: the parsed HLO is
+the per-device partitioned program, so no further division by chips.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (and ~25 GB/s/link DCN for the cross-pod axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.registry import get_arch
+from repro.configs.shapes import get_shape
+
+PEAK_FLOPS = 197e12            # bf16 per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+DCN_BW = 25e9                  # cross-pod
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float          # useful 6ND-style flops (global)
+    hlo_flops: float            # per-device, trip-weighted
+    hlo_bytes: float            # per-device traffic estimate
+    collective_bytes: float     # per-device
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Roofline step-time lower bound (no overlap assumption)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * chips): how much compiled compute is
+        useful — catches remat/redundancy waste."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Best-achievable MFU at this roofline: useful flops / peak over
+        the binding term."""
+        t = self.step_time_lb
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def row(self) -> str:
+        return (f"{self.arch:24s} {self.shape:12s} {self.mesh:10s} "
+                f"{self.compute_s:9.4f} {self.memory_s:9.4f} "
+                f"{self.collective_s:10.4f} {self.dominant:10s} "
+                f"{self.useful_flops_ratio:6.3f} {self.mfu_bound:6.3f}")
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig,
+                lora_rank: int = 16) -> float:
+    """Useful FLOPs per step: training 4ND (frozen base: fwd + act-grad
+    only) + 6N_lora*D; prefill 2ND; decode 2N per token * batch."""
+    n_active = cfg.param_count(active_only=True)
+    n_lora = cfg.lora_param_count(lora_rank)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return (4.0 * n_active + 6.0 * n_lora) * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * (n_active + n_lora) * tokens
+    # decode: one token per sequence
+    return 2.0 * (n_active + n_lora) * shape.global_batch
+
+
+def from_dryrun(d: Dict) -> Roofline:
+    """Build the roofline from a dryrun JSON record (analyzer fields)."""
+    chips = 512 if d["mesh"] == "pod2x16x16" else 256
+    cfg = get_arch(d["arch"])
+    shape = get_shape(d["shape"])
+    flops = d["flops"]
+    bytes_ = d["hlo_bytes"]
+    coll = d["collective_traffic"]
+    return Roofline(
+        arch=d["arch"], shape=d["shape"], mesh=d["mesh"],
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_ / HBM_BW,
+        collective_s=coll / ICI_BW,
+        model_flops=model_flops(cfg, shape),
+        hlo_flops=flops, hlo_bytes=bytes_, collective_bytes=coll,
+        chips=chips)
+
+
+HEADER = (f"{'arch':24s} {'shape':12s} {'mesh':10s} "
+          f"{'compute_s':>9s} {'memory_s':>9s} {'collect_s':>10s} "
+          f"{'dominant':10s} {'useful':>6s} {'MFU<=':>6s}")
+
+
+def load_all(dryrun_dir: str) -> Dict[str, Roofline]:
+    out = {}
+    for mesh_name in sorted(os.listdir(dryrun_dir)):
+        mdir = os.path.join(dryrun_dir, mesh_name)
+        if not os.path.isdir(mdir):
+            continue
+        for fn in sorted(os.listdir(mdir)):
+            if not fn.endswith(".json"):
+                continue
+            with open(os.path.join(mdir, fn)) as f:
+                d = json.load(f)
+            if not d.get("ok"):
+                continue
+            r = from_dryrun(d)
+            out[f"{r.arch}|{r.shape}|{r.mesh}"] = r
+    return out

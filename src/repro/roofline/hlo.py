@@ -1,0 +1,295 @@
+"""Optimized-HLO analysis: trip-count-weighted FLOPs, bytes, collectives.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, so for
+scan-over-layers programs it understates FLOPs by ~num_layers x. This module
+parses the optimized HLO text into a computation graph, propagates execution
+multipliers through while bodies (``known_trip_count``), fusions, and
+called computations, and derives:
+
+  * flops        — 2*M*N*K over every `dot` (trip-weighted)
+  * bytes_written — sum of result bytes over materializing ops
+                   (trip-weighted; HBM traffic ~ 2x this: one write + one
+                   read per buffer)
+  * collectives  — per-kind counts + ring-model per-device traffic:
+        all-gather / all-to-all / reduce-scatter: (n-1)/n * bytes
+        all-reduce: 2 (n-1)/n * bytes
+        collective-permute: bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "u1": 1, "s1": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s+([a-z][a-z0-9\-]*)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_CALLEE_RE = re.compile(
+    r"(?:to_apply|body|condition|calls)=(?:\{)?%?([\w\.\-]+)")
+_TRIP_RE = re.compile(
+    r'known_trip_count["=:]+\{?"?n"?[:=]+"?(\d+)"?\}?')
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def parse_shape(s: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _SHAPE_RE.search(s)
+    if not m:
+        return "", ()
+    dt, dims = m.groups()
+    return dt, tuple(int(d) for d in dims.split(",") if d)
+
+
+def shape_bytes(s: str) -> int:
+    """Bytes of a (possibly tuple) shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    line: str
+    comp: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op] = dataclasses.field(default_factory=list)
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self.op_shapes: Dict[str, str] = {}
+        self._parse(text)
+        self.mult: Dict[str, float] = {}
+        self._propagate()
+
+    # ------------------------------------------------------------- parsing
+    def _parse(self, text: str) -> None:
+        cur: Optional[Computation] = None
+        for raw in text.splitlines():
+            if raw and not raw[0].isspace():
+                m = _COMP_RE.match(raw)
+                if m:
+                    cur = Computation(m.group(1))
+                    self.comps[cur.name] = cur
+                    if raw.startswith("ENTRY"):
+                        self.entry = cur.name
+                continue
+            if cur is None:
+                continue
+            m = _OP_RE.match(raw)
+            if not m:
+                continue
+            name, rtype, kind = m.groups()
+            op = Op(name=name, kind=kind, result_type=rtype,
+                    line=raw.strip(), comp=cur.name)
+            cur.ops.append(op)
+            self.op_shapes[name] = rtype
+        if self.entry is None and self.comps:
+            # heuristically: computation that nobody calls
+            called = set()
+            for c in self.comps.values():
+                for op in c.ops:
+                    called.update(_CALLEE_RE.findall(op.line))
+            for name in self.comps:
+                if name not in called:
+                    self.entry = name
+        assert self.entry is not None, "no ENTRY computation found"
+
+    # ------------------------------------------------- multiplier propagation
+    def _propagate(self) -> None:
+        mult: Dict[str, float] = {c: 0.0 for c in self.comps}
+        mult[self.entry] = 1.0
+        # topological-ish fixed point (call graphs are acyclic in HLO)
+        for _ in range(len(self.comps)):
+            changed = False
+            new = {c: 0.0 for c in self.comps}
+            new[self.entry] = 1.0
+            for cname, comp in self.comps.items():
+                w = mult.get(cname, 0.0)
+                if w == 0.0:
+                    continue
+                for op in comp.ops:
+                    callees = _CALLEE_RE.findall(op.line)
+                    if not callees:
+                        continue
+                    trip = 1.0
+                    if op.kind == "while":
+                        t = _TRIP_RE.search(op.line)
+                        trip = float(t.group(1)) if t else 1.0
+                    for callee in callees:
+                        if callee in new:
+                            new[callee] += w * trip
+            for c in self.comps:
+                if abs(new[c] - mult[c]) > 1e-9:
+                    changed = True
+            mult = new
+            if not changed:
+                break
+        self.mult = mult
+
+    def _w(self, op: Op) -> float:
+        return self.mult.get(op.comp, 0.0)
+
+    # ------------------------------------------------------------- queries
+    def dot_flops(self) -> float:
+        total = 0.0
+        for comp in self.comps.values():
+            for op in comp.ops:
+                if op.kind not in ("dot",):
+                    continue
+                w = self._w(op)
+                if w == 0.0:
+                    continue
+                _, rdims = parse_shape(op.result_type)
+                lhs = re.search(r"\(%([\w\.\-]+)", op.line)
+                k = 1
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+                if lhs and cm and lhs.group(1) in self.op_shapes:
+                    _, ldims = parse_shape(self.op_shapes[lhs.group(1)])
+                    for d in cm.group(1).split(","):
+                        if d and int(d) < len(ldims):
+                            k *= ldims[int(d)]
+                n = 1
+                for d in rdims:
+                    n *= d
+                total += w * 2.0 * n * k
+        return total
+
+    def bytes_written(self) -> float:
+        """Trip-weighted result bytes of materializing ops (fusion outputs,
+        dots, copies, convolutions, parameters excluded)."""
+        # ops that materialize an HBM buffer on TPU (bare elementwise /
+        # layout ops — convert, broadcast, transpose, etc. — fuse away)
+        mat = ("fusion", "dot", "copy", "convolution", "scatter", "gather",
+               "dynamic-update-slice", "dynamic-slice", "concatenate",
+               "reduce")
+        total = 0.0
+        for comp in self.comps.values():
+            for op in comp.ops:
+                if op.kind in mat or op.kind.startswith("wrapped"):
+                    total += self._w(op) * shape_bytes(op.result_type)
+        return total
+
+    def collectives(self) -> List["CollectiveOp"]:
+        out: List[CollectiveOp] = []
+        for comp in self.comps.values():
+            for op in comp.ops:
+                base = op.kind.replace("-start", "")
+                if base not in COLLECTIVE_KINDS:
+                    continue
+                if op.kind.endswith("-done"):
+                    continue
+                w = self._w(op)
+                if w == 0.0:
+                    continue
+                rb = shape_bytes(op.result_type)
+                grp = _group_size(op.line)
+                out.append(CollectiveOp(
+                    kind=base, result_bytes=rb, group_size=grp,
+                    trip_count=w, traffic_bytes=_traffic(base, rb, grp) * w,
+                    line=op.line[:200]))
+        return out
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    trip_count: float
+    traffic_bytes: float
+    line: str
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:   # iota list format [num_groups, group_size]
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return 2
+
+
+def _traffic(kind: str, result_bytes: int, group: int) -> float:
+    frac = (group - 1) / max(group, 1)
+    if kind == "all-reduce":
+        return 2.0 * frac * result_bytes
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return frac * result_bytes
+
+
+def top_bytes(mod: "HloModule", n: int = 12) -> List[Tuple[float, str, str]]:
+    """Largest trip-weighted materializing ops: [(bytes, kind, shape)]."""
+    mat = ("fusion", "dot", "copy", "convolution", "scatter", "gather",
+           "dynamic-update-slice", "dynamic-slice", "concatenate", "reduce")
+    rows = []
+    for comp in mod.comps.values():
+        for op in comp.ops:
+            if op.kind in mat:
+                b = mod._w(op) * shape_bytes(op.result_type)
+                if b > 0:
+                    rows.append((b, op.kind, op.result_type[:80]))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:n]
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def analyze(hlo_text: str) -> Dict:
+    mod = HloModule(hlo_text)
+    colls = mod.collectives()
+    return {
+        "flops": mod.dot_flops(),
+        "bytes_written": mod.bytes_written(),
+        "collective_traffic": sum(c.traffic_bytes for c in colls),
+        "collectives": summarize(colls),
+    }
+
+
+def summarize(ops: List[CollectiveOp]) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = {}
+    for op in ops:
+        d = out.setdefault(op.kind, {"count": 0.0, "traffic_bytes": 0.0,
+                                     "result_bytes": 0.0})
+        d["count"] += op.trip_count
+        d["traffic_bytes"] += op.traffic_bytes
+        d["result_bytes"] += op.result_bytes * op.trip_count
+    return out
+
+
+def parse_collectives(hlo_text: str, num_devices: int = 0
+                      ) -> List[CollectiveOp]:
+    return HloModule(hlo_text).collectives()
+
+
+def total_traffic(ops: List[CollectiveOp]) -> float:
+    return sum(op.traffic_bytes for op in ops)

@@ -1,0 +1,76 @@
+"""Roofline report CLI: load dry-run artifacts, print the baseline table,
+nominate hillclimb candidates.
+
+    PYTHONPATH=src python -m repro.roofline.report [--mesh pod16x16] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Dict, List
+
+from repro.roofline.analysis import HEADER, Roofline, load_all
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def pick_hillclimb(rows: List[Roofline]) -> Dict[str, Roofline]:
+    """The three §Perf pairs, chosen among compute-carrying shapes
+    (train/prefill — decode MFU is intrinsically ~0 and would always win):
+      * worst roofline fraction: lowest bounded MFU,
+      * most collective-bound: largest absolute collective term,
+      * paper-representative: the multi-LoRA train_4k with the largest
+        model (the paper's AP setting at production scale).
+    Ties across categories resolve to distinct pairs."""
+    big = [r for r in rows if r.shape in ("train_4k", "prefill_32k")]
+    rep = max((r for r in big if r.shape == "train_4k"),
+              key=lambda r: r.model_flops)
+    coll = max((r for r in big if (r.arch, r.shape) !=
+                (rep.arch, rep.shape)), key=lambda r: r.collective_s)
+    taken = {(rep.arch, rep.shape), (coll.arch, coll.shape)}
+    rest = [r for r in big if (r.arch, r.shape) not in taken]
+    # prefer a pair whose dominant term differs from the two collective
+    # picks, so the three hillclimbs exercise different bottlenecks
+    diverse = [r for r in rest if r.dominant not in (rep.dominant,
+                                                     coll.dominant)]
+    worst = min(diverse or rest, key=lambda r: r.mfu_bound)
+    return {"worst-roofline": worst, "most-collective-bound": coll,
+            "paper-representative": rep}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DEFAULT_DIR)
+    ap.add_argument("--mesh", default="pod16x16",
+                    help="mesh for the main table (roofline is single-pod)")
+    ap.add_argument("--md", action="store_true", help="markdown output")
+    args = ap.parse_args()
+
+    rl = load_all(args.dir)
+    rows = sorted((r for r in rl.values() if r.mesh == args.mesh),
+                  key=lambda r: (r.arch, r.shape))
+    if args.md:
+        print("| arch | shape | compute_s | memory_s | collective_s | "
+              "dominant | useful | MFU<= |")
+        print("|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r.arch} | {r.shape} | {r.compute_s:.4f} | "
+                  f"{r.memory_s:.4f} | {r.collective_s:.4f} | {r.dominant} |"
+                  f" {r.useful_flops_ratio:.3f} | {r.mfu_bound:.3f} |")
+    else:
+        print(HEADER)
+        for r in rows:
+            print(r.row())
+    print(f"\n{len(rows)} combos on {args.mesh} "
+          f"(+{sum(1 for r in rl.values() if r.mesh != args.mesh)} on the "
+          f"other mesh)")
+    picks = pick_hillclimb(rows)
+    print("\nHillclimb candidates (§Perf):")
+    for why, r in picks.items():
+        print(f"  {why:24s} -> {r.arch} x {r.shape} "
+              f"(dominant={r.dominant}, MFU<={r.mfu_bound:.3f})")
+
+
+if __name__ == "__main__":
+    main()

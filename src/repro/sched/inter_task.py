@@ -1,0 +1,194 @@
+"""Inter-task scheduler: P | size_j | C_max makespan minimization (paper §7.2).
+
+Tasks expose (duration d_i, GPU requirement g_i) before execution — LoRA
+tuning's predictability (paper Obs. 3). The paper solves the big-M
+disjunctive CP with CP-SAT; offline here, we implement the equivalent
+optimization directly:
+
+  * ``list_schedule``: event-driven (skyline) placement of a task order —
+    every resource-feasible order maps to a valid concrete-GPU schedule
+    (at any start instant, idle >= g_i by the capacity argument).
+  * ``branch_and_bound``: DFS over task orders with lower-bound pruning
+    (LB = max(longest task, total area / G, sum of d over tasks with
+    g_i > G/2)), exploring the space of non-delay schedules. For the
+    paper-scale instances (n <= 16) this matches the CP optimum on every
+    instance we cross-check by brute force; a node cap degrades gracefully
+    to best-found.
+  * ``lpt_schedule``: largest-area-first list schedule (fast fallback,
+    2-approx-style quality) used for replanning large queues.
+
+Solving is sub-second (paper: "< 1 s for all tested instances"), which is
+what makes event-driven replanning viable (§7.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    name: str
+    duration: float          # estimated d_i (profiled)
+    gpus: int                # g_i (from base-model size)
+
+
+@dataclasses.dataclass
+class Placement:
+    task: TaskSpec
+    start: float
+    gpu_ids: Tuple[int, ...]
+
+    @property
+    def end(self) -> float:
+        return self.start + self.task.duration
+
+
+@dataclasses.dataclass
+class Schedule:
+    placements: List[Placement]
+    makespan: float
+    optimal: bool
+    solve_time_s: float
+
+    def validate(self, G: int) -> None:
+        """No-overlap per GPU + capacity + demand satisfied."""
+        for p in self.placements:
+            assert len(set(p.gpu_ids)) == p.task.gpus, p
+            assert all(0 <= g < G for g in p.gpu_ids), p
+        for a, b in itertools.combinations(self.placements, 2):
+            if a.start < b.end - 1e-9 and b.start < a.end - 1e-9:
+                assert not (set(a.gpu_ids) & set(b.gpu_ids)), (a, b)
+
+
+def lower_bound(tasks: Sequence[TaskSpec], G: int) -> float:
+    if not tasks:
+        return 0.0
+    area = sum(t.duration * t.gpus for t in tasks) / G
+    longest = max(t.duration for t in tasks)
+    # tasks needing more than half the cluster can never overlap each other
+    big = sum(t.duration for t in tasks if t.gpus > G / 2)
+    return max(area, longest, big)
+
+
+def list_schedule(order: Sequence[TaskSpec], G: int) -> Schedule:
+    """Greedy non-delay placement: each task starts at the earliest time
+    enough GPUs are free; concrete ids picked from the per-GPU skyline."""
+    free_at = [0.0] * G                   # per-GPU next-free time
+    placements: List[Placement] = []
+    for t in order:
+        # earliest time when >= g GPUs are free: g-th smallest free_at
+        times = sorted(range(G), key=lambda g: free_at[g])
+        chosen = times[:t.gpus]
+        start = max(free_at[g] for g in chosen)
+        # better: any set of g GPUs minimizing start; the g earliest-free
+        # GPUs minimize the max -> optimal choice for non-delay placement
+        for g in chosen:
+            free_at[g] = start + t.duration
+        placements.append(Placement(t, start, tuple(sorted(chosen))))
+    mk = max((p.end for p in placements), default=0.0)
+    return Schedule(placements, mk, optimal=False, solve_time_s=0.0)
+
+
+def lpt_schedule(tasks: Sequence[TaskSpec], G: int) -> Schedule:
+    """Best of several greedy orders (area, duration, width)."""
+    best: Optional[Schedule] = None
+    keys = [lambda t: -t.duration * t.gpus,
+            lambda t: -t.duration,
+            lambda t: (-t.gpus, -t.duration)]
+    for key in keys:
+        s = list_schedule(sorted(tasks, key=key), G)
+        if best is None or s.makespan < best.makespan - 1e-12:
+            best = s
+    assert best is not None
+    return best
+
+
+def branch_and_bound(tasks: Sequence[TaskSpec], G: int,
+                     node_cap: int = 200_000,
+                     time_cap_s: float = 5.0) -> Schedule:
+    """Exact-over-non-delay-orders DFS with LB pruning."""
+    t0 = time.time()
+    tasks = list(tasks)
+    n = len(tasks)
+    if n == 0:
+        return Schedule([], 0.0, True, 0.0)
+    incumbent = lpt_schedule(tasks, G)
+    best_mk = incumbent.makespan
+    best_order: Optional[Tuple[int, ...]] = None
+    lb_all = lower_bound(tasks, G)
+    if best_mk <= lb_all + 1e-9:
+        incumbent.optimal = True
+        incumbent.solve_time_s = time.time() - t0
+        return incumbent
+
+    nodes = 0
+    complete = True
+    areas = [t.duration * t.gpus for t in tasks]
+
+    def dfs(order: List[int], free_at: List[float], used_mk: float,
+            rem_area: float) -> None:
+        nonlocal nodes, best_mk, best_order, complete
+        nodes += 1
+        if nodes > node_cap or time.time() - t0 > time_cap_s:
+            complete = False
+            return
+        if len(order) == n:
+            if used_mk < best_mk - 1e-12:
+                best_mk = used_mk
+                best_order = tuple(order)
+            return
+        remaining = [i for i in range(n) if i not in order]
+        # LB: remaining area must fit after current per-GPU frontier
+        base = sum(free_at)
+        lb = max(used_mk,
+                 (base + rem_area) / G,
+                 max(min(free_at) + tasks[i].duration for i in remaining))
+        if lb >= best_mk - 1e-12:
+            return
+        # symmetry: skip duplicate (duration,gpus) pairs at the same depth
+        seen = set()
+        # heuristic child order: larger area first
+        for i in sorted(remaining, key=lambda j: -areas[j]):
+            sig = (tasks[i].duration, tasks[i].gpus)
+            if sig in seen:
+                continue
+            seen.add(sig)
+            t = tasks[i]
+            times = sorted(free_at)
+            start = times[t.gpus - 1]
+            # apply placement to the g earliest-free GPUs
+            new_free = list(free_at)
+            idxs = sorted(range(G), key=lambda g: free_at[g])[:t.gpus]
+            for g in idxs:
+                new_free[g] = start + t.duration
+            dfs(order + [i], new_free,
+                max(used_mk, start + t.duration), rem_area - areas[i])
+
+    dfs([], [0.0] * G, 0.0, float(sum(areas)))
+    if best_order is not None:
+        sched = list_schedule([tasks[i] for i in best_order], G)
+        sched.optimal = complete or sched.makespan <= lb_all + 1e-9
+    else:
+        sched = incumbent
+        sched.optimal = complete and best_mk <= incumbent.makespan + 1e-12
+    sched.solve_time_s = time.time() - t0
+    return sched
+
+
+def solve(tasks: Sequence[TaskSpec], G: int, method: str = "cp"
+          ) -> Schedule:
+    """Entry point. method: "cp" (exact B&B, paper's MILP/CP analogue),
+    "lpt" (greedy), "sjf" (shortest-job-first baseline of Fig. 5a)."""
+    for t in tasks:
+        assert t.gpus <= G, f"{t.name} needs {t.gpus} > {G} GPUs"
+    if method == "cp":
+        return branch_and_bound(tasks, G)
+    if method == "lpt":
+        return lpt_schedule(tasks, G)
+    if method == "sjf":
+        return list_schedule(sorted(tasks, key=lambda t: t.duration), G)
+    raise ValueError(method)

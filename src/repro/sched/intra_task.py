@@ -1,0 +1,115 @@
+"""Online greedy intra-task scheduler (paper §7.1, §A.3).
+
+Decides how many adapters to co-locate on an executor and when to
+admit/evict, under a fitted linear memory model
+
+    M_hat(B) = k0 + k1 * B * L        (B = total batch, L = seq len)
+
+Profiling (paper §A.3 two-phase): (1) binary-search the largest
+single-adapter batch B_max that fits; (2) sweep (N, b) grid points with
+N*b <= B_max, measure peak memory, fit the regression. On real hardware the
+measurement is ``compiled.memory_analysis()``; on this CPU container the
+profiler plugs in the analytic accounting from sched/profiler.py (same
+linear structure).
+
+Admission policy: group pending jobs by per-adapter batch size, admit
+greedily in decreasing batch-size order while M_hat stays within the safety
+margin; on exit, backfill preferring the SAME batch size (homogeneous
+packing — hits the grouped-GEMM fast path and is required under adapter
+parallelism), mixed only when the queue runs dry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class MemoryModel:
+    k0: float                 # bytes at B=0 (params, cache, fixed overhead)
+    k1: float                 # bytes per (token of total batch)
+    seq_len: int
+    capacity: float           # device HBM bytes
+    safety_margin: float = 0.9
+
+    def predict(self, total_batch: int) -> float:
+        return self.k0 + self.k1 * total_batch * self.seq_len
+
+    def fits(self, total_batch: int) -> bool:
+        return self.predict(total_batch) <= self.capacity * self.safety_margin
+
+    def max_batch(self) -> int:
+        if self.k1 <= 0:
+            return 1 << 20
+        return max(int((self.capacity * self.safety_margin - self.k0)
+                       / (self.k1 * self.seq_len)), 0)
+
+
+def fit_memory_model(points: Sequence[Tuple[int, float]], seq_len: int,
+                     capacity: float, safety_margin: float = 0.9
+                     ) -> MemoryModel:
+    """OLS fit of peak-memory measurements: points = [(total_batch, bytes)]."""
+    B = np.asarray([p[0] * seq_len for p in points], np.float64)
+    M = np.asarray([p[1] for p in points], np.float64)
+    A = np.stack([np.ones_like(B), B], axis=1)
+    coef, *_ = np.linalg.lstsq(A, M, rcond=None)
+    return MemoryModel(k0=float(coef[0]), k1=float(coef[1]),
+                       seq_len=seq_len, capacity=capacity,
+                       safety_margin=safety_margin)
+
+
+@dataclasses.dataclass
+class PendingJob:
+    job_id: str
+    per_adapter_batch: int
+
+
+class IntraTaskScheduler:
+    """Greedy admission/backfill over one executor's slots."""
+
+    def __init__(self, mem: MemoryModel, max_slots: int):
+        self.mem = mem
+        self.max_slots = max_slots
+        self.resident: Dict[str, int] = {}     # job_id -> b
+
+    @property
+    def total_batch(self) -> int:
+        return sum(self.resident.values())
+
+    def can_admit(self, b: int) -> bool:
+        return (len(self.resident) < self.max_slots
+                and self.mem.fits(self.total_batch + b))
+
+    def admit_initial(self, queue: List[PendingJob]) -> List[PendingJob]:
+        """Greedy decreasing-batch-size admission (paper §A.3). Returns the
+        admitted jobs, removing them from ``queue`` in place."""
+        admitted: List[PendingJob] = []
+        for job in sorted(queue, key=lambda j: -j.per_adapter_batch):
+            if self.can_admit(job.per_adapter_batch):
+                self.resident[job.job_id] = job.per_adapter_batch
+                admitted.append(job)
+        for j in admitted:
+            queue.remove(j)
+        return admitted
+
+    def evict(self, job_id: str) -> int:
+        return self.resident.pop(job_id)
+
+    def backfill(self, vacated_b: int, queue: List[PendingJob]
+                 ) -> Optional[PendingJob]:
+        """Prefer a pending job with the SAME batch size; accept a different
+        size only if the memory model confirms the mixed packing fits."""
+        same = [j for j in queue if j.per_adapter_batch == vacated_b]
+        for j in same:
+            if self.can_admit(j.per_adapter_batch):
+                queue.remove(j)
+                self.resident[j.job_id] = j.per_adapter_batch
+                return j
+        for j in sorted(queue, key=lambda j: -j.per_adapter_batch):
+            if self.can_admit(j.per_adapter_batch):
+                queue.remove(j)
+                self.resident[j.job_id] = j.per_adapter_batch
+                return j
+        return None

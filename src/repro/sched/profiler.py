@@ -1,0 +1,116 @@
+"""Task profiling: duration estimates + analytic memory accounting.
+
+Paper §7.2: before scheduling, a short profiling run measures throughput
+(samples/s); duration = total_samples / throughput. GPU requirement comes
+from the base-model size. Results are cached per (arch, b, seq).
+
+On this CPU container, two estimators coexist:
+  * ``measure_throughput``: real wall-clock over a few steps of the actual
+    jitted train step (used by the engine for the small reference model);
+  * ``analytic_step_time``: roofline-based estimate from FLOPs and the
+    target-hardware constants (used for production-scale what-if schedules
+    and the scheduler benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig
+
+# TPU v5e target constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BYTES_PER_S = 819e9
+HBM_BYTES = 16 * 1024 ** 3
+ICI_BYTES_PER_S = 50e9
+
+
+def train_step_flops(cfg: ModelConfig, total_batch: int, seq_len: int,
+                     lora_rank: int = 0) -> float:
+    """~6 * N_active * tokens for fwd+bwd... except base is FROZEN: base
+    weights take fwd (2ND) + activation-grad bwd (2ND) but no weight-grad
+    pass => 4ND; LoRA params take the full 6ND' (tiny)."""
+    tokens = total_batch * seq_len
+    n_base = cfg.param_count(active_only=True)
+    n_lora = cfg.lora_param_count(lora_rank) if lora_rank else 0
+    return (4.0 * n_base + 6.0 * n_lora) * tokens
+
+
+def analytic_step_time(cfg: ModelConfig, total_batch: int, seq_len: int,
+                       chips: int, mfu: float = 0.4,
+                       lora_rank: int = 16) -> float:
+    """Roofline-style estimate of one train step (seconds)."""
+    f = train_step_flops(cfg, total_batch, seq_len, lora_rank)
+    compute = f / (chips * PEAK_FLOPS_BF16 * mfu)
+    # memory floor: every base weight read at least twice (fwd+bwd)
+    bytes_moved = 2 * 2 * cfg.param_count(active_only=True)
+    memory = bytes_moved / (chips * HBM_BYTES_PER_S)
+    return max(compute, memory)
+
+
+def analytic_peak_memory(cfg: ModelConfig, Z: int, b: int, seq_len: int,
+                         chips: int = 1, rank: int = 16) -> float:
+    """Bytes per chip: params + adapters/opt + remat activations.
+
+    Linear in total batch B=Z*b (the structure the paper's M_hat fits).
+    """
+    base = 2 * cfg.param_count() / chips                   # bf16, sharded
+    # fp32 master + two fp32 moments per adapter param, Z adapters
+    adapters = (4 + 8) * cfg.lora_param_count(rank) * Z / chips
+    # remat: residual checkpoints per layer + one layer's working set
+    tokens = Z * b * seq_len / chips
+    act = 2 * tokens * cfg.d_model * (cfg.num_layers + 6)
+    return base + adapters + act
+
+
+@dataclasses.dataclass
+class TaskProfile:
+    samples_per_s: float
+    step_time_s: float
+    peak_memory: float
+
+
+_CACHE: Dict[Tuple, TaskProfile] = {}
+
+
+def measure_throughput(step_fn: Callable, args: tuple, total_batch: int,
+                       warmup: int = 1, iters: int = 3) -> TaskProfile:
+    """Wall-clock a jitted step function (real, CPU-scale models)."""
+    out = None
+    for _ in range(warmup):
+        out = step_fn(*args)
+    import jax
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = step_fn(*args)
+    jax.block_until_ready(out)
+    dt = (time.time() - t0) / iters
+    return TaskProfile(samples_per_s=total_batch / dt, step_time_s=dt,
+                       peak_memory=0.0)
+
+
+def profile_task(cfg: ModelConfig, Z: int, b: int, seq_len: int,
+                 chips: int, *, mfu: float = 0.4, rank: int = 16
+                 ) -> TaskProfile:
+    """Cached analytic profile for scheduler duration estimates."""
+    key = (cfg.name, Z, b, seq_len, chips, mfu, rank)
+    if key not in _CACHE:
+        st = analytic_step_time(cfg, Z * b, seq_len, chips,
+                                mfu=mfu, lora_rank=rank)
+        _CACHE[key] = TaskProfile(
+            samples_per_s=Z * b / st, step_time_s=st,
+            peak_memory=analytic_peak_memory(cfg, Z, b, seq_len, chips,
+                                             rank))
+    return _CACHE[key]
+
+
+def gpus_for_model(cfg: ModelConfig, hbm_bytes: float = HBM_BYTES,
+                   overhead: float = 1.35) -> int:
+    """GPU/chip requirement from base-model size (paper §7.2)."""
+    need = 2 * cfg.param_count() * overhead
+    g = 1
+    while g * hbm_bytes * 0.9 < need:
+        g *= 2
+    return g

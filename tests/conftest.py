@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; only launch/dryrun.py fakes the 512-device platform."""
+import dataclasses
+
+import jax
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    from repro.configs.registry import get_arch
+    return dataclasses.replace(
+        get_arch("paper-llama-tiny").reduced(num_layers=2, d_model=128,
+                                             vocab=256),
+        dtype="float32")
+
+
+def reduced_f32(name: str, **kw):
+    from repro.configs.registry import get_arch
+    return dataclasses.replace(get_arch(name).reduced(**kw), dtype="float32")

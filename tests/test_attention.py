@@ -1,0 +1,81 @@
+"""Chunked flash-style attention vs naive reference; GQA; sliding window."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import attention
+
+
+def naive(q, k, v, q_pos, k_pos, window=0, valid=None):
+    Z, b, Sq, H, hd = q.shape
+    KV = k.shape[3]
+    G = H // KV
+    kk = jnp.repeat(k, G, axis=3)
+    vv = jnp.repeat(v, G, axis=3)
+    scores = jnp.einsum("zbqhd,zbshd->zbhqs", q, kk) / np.sqrt(hd)
+    vis = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        vis &= k_pos[None, :] > (q_pos[:, None] - window)
+    if valid is not None:
+        vis &= (jnp.arange(k.shape[2]) < valid)[None, :]
+    scores = jnp.where(vis, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("zbhqs,zbshd->zbqhd", p, vv)
+
+
+@pytest.mark.parametrize("H,KV", [(4, 4), (8, 2), (6, 1)])
+@pytest.mark.parametrize("window", [0, 7])
+def test_matches_naive(H, KV, window):
+    Z, b, S, hd = 2, 2, 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (Z, b, S, H, hd))
+    k = jax.random.normal(ks[1], (Z, b, S, KV, hd))
+    v = jax.random.normal(ks[2], (Z, b, S, KV, hd))
+    pos = jnp.arange(S)
+    got = attention(q, k, v, pos, pos, window=window, q_chunk=8)
+    want = naive(q, k, v, pos, pos, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunking_invariance():
+    Z, b, S, H, hd = 1, 2, 64, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (Z, b, S, H, hd))
+    k = jax.random.normal(ks[1], (Z, b, S, H, hd))
+    v = jax.random.normal(ks[2], (Z, b, S, H, hd))
+    pos = jnp.arange(S)
+    outs = [attention(q, k, v, pos, pos, q_chunk=c)
+            for c in (8, 16, 32, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_decode_against_cache_with_valid_len():
+    """One query vs a partially filled cache."""
+    Z, b, Sc, H, hd = 1, 1, 16, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    pos_now = 9
+    q = jax.random.normal(ks[0], (Z, b, 1, H, hd))
+    k = jax.random.normal(ks[1], (Z, b, Sc, H, hd))
+    v = jax.random.normal(ks[2], (Z, b, Sc, H, hd))
+    got = attention(q, k, v, jnp.array([pos_now]), jnp.arange(Sc),
+                    kv_valid_len=jnp.array(pos_now + 1))
+    want = naive(q, k, v, jnp.array([pos_now]), jnp.arange(Sc),
+                 valid=pos_now + 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fully_masked_rows_are_finite():
+    """Ring-buffer slots from the far past: no NaN from empty softmax rows."""
+    Z, b, H, hd, Sc = 1, 1, 2, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (Z, b, 1, H, hd))
+    k = jax.random.normal(ks[1], (Z, b, Sc, H, hd))
+    v = jax.random.normal(ks[2], (Z, b, Sc, H, hd))
+    k_pos = jnp.full((Sc,), -(1 << 30))
+    out = attention(q, k, v, jnp.array([0]), k_pos, window=4)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,34 @@
+"""Checkpoint roundtrip + slot extract/insert."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import (extract_slot, insert_slot,
+                                         load_pytree, save_pytree)
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.int32),
+                       "c": jnp.zeros((1, 2), jnp.bfloat16)}}
+    p = str(tmp_path / "ckpt.npz")
+    save_pytree(p, tree, meta={"step": 7})
+    restored, meta = load_pytree(p, tree)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_slot_extract_insert():
+    full = {"t": {"A": jnp.arange(24.0).reshape(2, 3, 4)}}  # [L=2, Z=3, 4]
+    one = extract_slot(full, 1)
+    assert one["t"]["A"].shape == (2, 4)
+    np.testing.assert_array_equal(np.asarray(one["t"]["A"]),
+                                  np.asarray(full["t"]["A"][:, 1]))
+    zeroed = insert_slot(full, 1, {"t": {"A": jnp.zeros((2, 4))}})
+    assert float(jnp.abs(zeroed["t"]["A"][:, 1]).max()) == 0.0
+    np.testing.assert_array_equal(np.asarray(zeroed["t"]["A"][:, 0]),
+                                  np.asarray(full["t"]["A"][:, 0]))

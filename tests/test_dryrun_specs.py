@@ -1,0 +1,74 @@
+"""Fast dry-run front-end checks: every (arch x shape) combo must produce
+consistent abstract inputs/state and legal partition specs — no compilation,
+no faked devices (AbstractMesh only)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs.registry import ASSIGNED, get_arch
+from repro.configs.shapes import SHAPES
+from repro.launch import partitioning as PT
+from repro.launch.dryrun import abstract_state, input_specs
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+def test_input_specs_and_state(arch, shape):
+    spec = input_specs(arch, shape)
+    cfg = get_arch(arch)
+    sh = SHAPES[shape]
+    Z, b = sh.decompose()
+    assert spec["Z"] == Z and spec["b"] == b
+    if sh.kind in ("train", "prefill"):
+        assert spec["batch"]["tokens"].shape == (Z, b, sh.seq_len)
+        if cfg.input_mode == "mixed":
+            me = spec["batch"]["modal_embeds"]
+            assert me.shape[:2] == (Z, b) and me.shape[3] == cfg.d_model
+    else:
+        assert spec["tokens"].shape == (Z, b)
+        assert "cache" in spec
+        if cfg.family == "ssm":
+            assert "wkv" in spec["cache"]["layers"]
+        elif sh.name == "long_500k" and cfg.long_context_mode != "recurrent":
+            # sub-quadratic: windowed ring cache, never a 512k KV buffer
+            kshape = spec["cache"]["layers"]["attn"]["k"].shape
+            assert kshape[3] <= cfg.sliding_window
+    params, lora, opt = abstract_state(cfg, Z)
+    # every lora leaf slot-stacked [L, Z, ...]
+    for leaf in jax.tree_util.tree_leaves(lora):
+        assert leaf.shape[0] == cfg.num_layers and leaf.shape[1] == Z
+
+
+@pytest.mark.parametrize("arch", ["qwen2-vl-72b", "rwkv6-3b",
+                                  "llama4-scout-17b-a16e"])
+@pytest.mark.parametrize("mesh", [MESH, MESH3], ids=["1pod", "2pod"])
+def test_full_spec_pipeline_is_legal(arch, mesh):
+    """base/lora/opt/batch/cache specs all resolve to dividing assignments."""
+    cfg = get_arch(arch)
+    spec = input_specs(arch, "decode_32k")
+    params, lora, opt = abstract_state(cfg, spec["Z"])
+    trees = [
+        PT.base_param_specs(mesh, params),
+        PT.lora_param_specs(mesh, lora),
+        PT.cache_specs(mesh, spec["cache"]),
+    ]
+    leaves_and_specs = []
+    for tree, specs in ((params, trees[0]), (lora, trees[1]),
+                        (spec["cache"], trees[2])):
+        leaves_and_specs += list(zip(
+            jax.tree_util.tree_leaves(tree),
+            jax.tree_util.tree_leaves(
+                specs, is_leaf=lambda s: isinstance(s, P))))
+    for leaf, s in leaves_and_specs:
+        for dim, axes in enumerate(s):
+            if axes is None:
+                continue
+            names = axes if isinstance(axes, tuple) else (axes,)
+            n = 1
+            for a in names:
+                n *= mesh.shape[a]
+            assert leaf.shape[dim] % n == 0, (arch, leaf.shape, s)

@@ -1,0 +1,148 @@
+"""Early-exit pattern detection (paper §5, Algorithm 1) on synthetic curves
++ hypothesis property tests on detector invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.early_exit import (EarlyExitConfig, ExitReason, JobMonitor,
+                                   linreg_slope, warmup_select)
+
+CFG = EarlyExitConfig(window=2, patience_div=2, patience_ovf=2,
+                      tau_gap=0.1, tau_slope=0.001)
+
+
+def drive(mon, train_curve, val_curve, evals_every=1):
+    """Feed curves; return first decision."""
+    step = 0
+    for t, v in zip(train_curve, val_curve):
+        mon.observe_train(t)
+        step += 1
+        d = mon.observe_val(v, step)
+        if d is not None:
+            return d
+    return None
+
+
+def test_divergence_detected():
+    mon = JobMonitor(CFG, "j")
+    up = list(np.linspace(2.0, 8.0, 12))
+    d = drive(mon, up, up)
+    assert d is not None and d.reason == ExitReason.DIVERGING
+
+
+def test_healthy_run_not_exited():
+    mon = JobMonitor(CFG, "j")
+    down = list(np.linspace(3.0, 1.0, 30))
+    d = drive(mon, down, [x + 0.05 for x in down])
+    assert d is None
+
+
+def test_overfitting_detected_and_checkpoints_best():
+    mon = JobMonitor(CFG, "j")
+    train = list(np.linspace(3.0, 0.5, 25))
+    # val follows then turns up hard
+    val = list(np.linspace(3.0, 1.8, 10)) + list(np.linspace(1.8, 3.2, 15))
+    d = drive(mon, train, val)
+    assert d is not None and d.reason == ExitReason.OVERFITTING
+    assert math.isclose(d.best_val, min(val[:d.step]), rel_tol=1e-9)
+    assert d.best_val_step == int(np.argmin(val[:d.step])) + 1
+
+
+def test_patience_resets_on_transient_spike():
+    cfg = EarlyExitConfig(window=2, patience_div=3, tau_slope=0.001,
+                          tau_gap=10.0)   # disable overfit path
+    mon = JobMonitor(cfg, "j")
+    # two rising evals, then a drop (resets), then two rising: never 3 in a row
+    train = [2.0, 2.2, 2.4, 1.8, 2.0, 2.2, 1.8, 2.0, 2.2, 1.8]
+    d = drive(mon, train, train)
+    assert d is None
+
+
+def test_nan_loss_exits_immediately():
+    mon = JobMonitor(CFG, "j")
+    mon.observe_train(float("nan"))
+    d = mon.observe_val(float("nan"), 1)
+    assert d is not None and d.reason == ExitReason.DIVERGING
+
+
+def test_warmup_select_keeps_top_quartile():
+    cfg = EarlyExitConfig(select_ratio=0.25)
+    monitors = {}
+    for i in range(16):
+        m = JobMonitor(cfg, f"j{i}")
+        m.observe_train(3.0)
+        m.observe_val(1.0 + 0.1 * i, 1)
+        monitors[f"j{i}"] = m
+    kept, dropped = warmup_select(monitors, cfg, num_candidates=16)
+    assert kept == ["j0", "j1", "j2", "j3"]
+    assert len(dropped) == 12
+
+
+def test_warmup_select_ignores_already_exited():
+    cfg = EarlyExitConfig(select_ratio=0.5)
+    monitors = {}
+    for i in range(4):
+        m = JobMonitor(cfg, f"j{i}")
+        m.observe_train(3.0)
+        m.observe_val(1.0 + i, 1)
+        monitors[f"j{i}"] = m
+    monitors["j0"]._exit(ExitReason.DIVERGING, 1)
+    kept, dropped = warmup_select(monitors, cfg, num_candidates=4)
+    assert "j0" not in kept and "j0" not in dropped
+    assert kept == ["j1", "j2"]
+
+
+def test_linreg_slope():
+    assert math.isclose(linreg_slope([0, 1, 2, 3]), 1.0)
+    assert math.isclose(linreg_slope([3, 2, 1, 0]), -1.0)
+    assert linreg_slope([5.0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=50)
+@given(start=st.floats(0.5, 5.0), slope=st.floats(0.05, 1.0),
+       n=st.integers(6, 40))
+def test_property_monotone_rise_always_exits(start, slope, n):
+    """Any strictly rising train+val trajectory longer than
+    window+patience must trigger a divergence exit."""
+    mon = JobMonitor(CFG, "j")
+    curve = [start + slope * i for i in range(n)]
+    d = drive(mon, curve, curve)
+    assert d is not None and d.reason == ExitReason.DIVERGING
+    assert d.step <= CFG.window + CFG.patience_div + 1
+
+
+@settings(deadline=None, max_examples=50)
+@given(start=st.floats(1.0, 5.0), slope=st.floats(0.01, 0.2),
+       n=st.integers(10, 60))
+def test_property_monotone_fall_never_exits(start, slope, n):
+    mon = JobMonitor(CFG, "j")
+    curve = [max(start - slope * i, 0.01) for i in range(n)]
+    d = drive(mon, curve, curve)
+    assert d is None
+
+
+@settings(deadline=None, max_examples=30)
+@given(vals=st.lists(st.floats(0.1, 10.0), min_size=4, max_size=32),
+       ratio=st.sampled_from([0.1, 0.25, 0.5, 1.0]))
+def test_property_topk_size_and_ordering(vals, ratio):
+    cfg = EarlyExitConfig(select_ratio=ratio)
+    monitors = {}
+    for i, v in enumerate(vals):
+        m = JobMonitor(cfg, f"j{i}")
+        m.observe_train(v)
+        m.observe_val(v, 1)
+        monitors[f"j{i}"] = m
+    kept, dropped = warmup_select(monitors, cfg, num_candidates=len(vals))
+    k = max(int(math.ceil(ratio * len(vals))), 1)
+    assert len(kept) == min(k, len(vals))
+    if kept and dropped:
+        worst_kept = max(monitors[j].val_hist[-1] for j in kept)
+        best_dropped = min(monitors[j].val_hist[-1] for j in dropped)
+        assert worst_kept <= best_dropped + 1e-12

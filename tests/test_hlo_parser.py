@@ -1,0 +1,99 @@
+"""Property tests for the trip-weighted HLO analyzer (roofline/hlo.py)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.roofline import hlo as H
+
+
+@settings(deadline=None, max_examples=50)
+@given(dims=st.lists(st.integers(1, 64), min_size=0, max_size=4),
+       dt=st.sampled_from(["f32", "bf16", "s32", "s8", "pred"]))
+def test_shape_bytes(dims, dt):
+    s = f"{dt}[{','.join(map(str, dims))}]"
+    n = int(np.prod(dims)) if dims else 1
+    expect = n * {"f32": 4, "bf16": 2, "s32": 4, "s8": 1, "pred": 1}[dt]
+    assert H.shape_bytes(s) == expect
+
+
+def test_tuple_shape_bytes():
+    assert H.shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+
+
+@settings(deadline=None, max_examples=25)
+@given(trips=st.integers(1, 1000), m=st.integers(1, 16))
+def test_trip_weighting_scales_linearly(trips, m):
+    text = f"""HloModule t, is_scheduled=true
+
+%body (p: (s32[], f32[{m},{m}])) -> (s32[], f32[{m},{m}]) {{
+  %p = (s32[], f32[{m},{m}]) parameter(0)
+  %g = f32[{m},{m}] get-tuple-element(%p), index=1
+  %d = f32[{m},{m}] dot(%g, %g), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[{m},{m}]) tuple(%i, %d)
+}}
+
+%cond (p: (s32[], f32[{m},{m}])) -> pred[] {{
+  %p = (s32[], f32[{m},{m}]) parameter(0)
+  ROOT %c = pred[] constant(true)
+}}
+
+ENTRY %main (a: f32[{m},{m}]) -> f32[{m},{m}] {{
+  %a = f32[{m},{m}] parameter(0)
+  %init = (s32[], f32[{m},{m}]) tuple(%a, %a)
+  %w = (s32[], f32[{m},{m}]) while(%init), condition=%cond, body=%body, backend_config={{"known_trip_count":{{"n":"{trips}"}}}}
+  ROOT %r = f32[{m},{m}] get-tuple-element(%w), index=1
+}}
+"""
+    res = H.analyze(text)
+    assert res["flops"] == 2 * m * m * m * trips
+
+
+def test_nested_while_multiplies():
+    text = """HloModule t
+
+%inner (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %g = f32[4,4] get-tuple-element(%p), index=1
+  %d = f32[4,4] dot(%g, %g), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[4,4]) tuple(%i, %d)
+}
+
+%c1 (p: (s32[], f32[4,4])) -> pred[] {
+  %p = (s32[], f32[4,4]) parameter(0)
+  ROOT %c = pred[] constant(true)
+}
+
+%outer (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %w2 = (s32[], f32[4,4]) while(%p), condition=%c1, body=%inner, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %t = (s32[], f32[4,4]) tuple(%w2)
+}
+
+ENTRY %main (a: f32[4,4]) -> f32[4,4] {
+  %a = f32[4,4] parameter(0)
+  %init = (s32[], f32[4,4]) tuple(%a, %a)
+  %w = (s32[], f32[4,4]) while(%init), condition=%c1, body=%outer, backend_config={"known_trip_count":{"n":"3"}}
+  ROOT %r = f32[4,4] get-tuple-element(%w), index=1
+}
+"""
+    res = H.analyze(text)
+    # 3 outer x 5 inner = 15 dot executions
+    assert res["flops"] == 2 * 4 * 4 * 4 * 15
+
+
+def test_collective_ring_model():
+    for kind, mult in (("all-gather", 0.5), ("all-reduce", 1.0),
+                       ("reduce-scatter", 0.5), ("all-to-all", 0.5),
+                       ("collective-permute", 1.0)):
+        text = f"""HloModule t
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {{
+  %a = f32[8,8] parameter(0)
+  ROOT %c = f32[8,8] {kind}(%a), channel_id=1, replica_groups=[4,2]<=[8], dimensions={{0}}
+}}
+"""
+        res = H.analyze(text)
+        assert res["collective_traffic"] == pytest.approx(256 * mult), kind

@@ -1,0 +1,76 @@
+"""Flash-attention Pallas kernel vs naive oracle: shape/dtype/window sweeps
++ grad path (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def make(B, Sq, Sk, hd, seed=0, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, hd), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,Sq,Sk,hd,bq,bk", [
+    (2, 64, 64, 32, 16, 16),
+    (1, 128, 128, 64, 32, 64),
+    (3, 32, 96, 16, 16, 32),      # Sq < Sk (suffix alignment)
+])
+@pytest.mark.parametrize("window", [0, 24])
+def test_matches_oracle(B, Sq, Sk, hd, bq, bk, window):
+    q, k, v = make(B, Sq, Sk, hd)
+    got = ops.flash_attention(q, k, v, window=window, bq=bq, bk=bk,
+                              interpret=True)
+    want = flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_noncausal():
+    q, k, v = make(1, 32, 32, 16, seed=4)
+    got = ops.flash_attention(q, k, v, causal=False, bq=16, bk=16,
+                              interpret=True)
+    want = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_bf16():
+    q, k, v = make(2, 64, 64, 32, seed=5, dtype=jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, bq=32, bk=32, interpret=True)
+    want = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_block_size_invariance():
+    q, k, v = make(1, 64, 64, 16, seed=6)
+    outs = [ops.flash_attention(q, k, v, bq=b1, bk=b2, interpret=True)
+            for b1, b2 in ((16, 16), (32, 64), (64, 32))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_grad_path():
+    q, k, v = make(1, 32, 32, 16, seed=7)
+
+    def loss_k(q, k, v):
+        return jnp.sum(jnp.tanh(
+            ops.flash_attention(q, k, v, bq=16, bk=16, interpret=True)))
+
+    def loss_r(q, k, v):
+        return jnp.sum(jnp.tanh(flash_attention_ref(q, k, v)))
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)

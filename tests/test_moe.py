@@ -1,0 +1,78 @@
+"""MoE dispatch invariants: capacity, lossless small groups, aux loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.models.moe import init_moe_params, moe_block, pick_group_size
+
+
+def setup(E=4, k=2, d=32, ff=64, seed=0):
+    moe = MoEConfig(num_experts=E, top_k=k, d_ff_expert=ff)
+    params = init_moe_params(jax.random.PRNGKey(seed), d, moe, jnp.float32)
+    return moe, params
+
+
+def test_output_shape_and_finite():
+    moe, params = setup()
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 2, 16, 32))
+    out, aux = moe_block(x, params, moe)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(aux) > 0.0
+
+
+def test_small_group_lossless_matches_dense_topk():
+    """For s<=64 (lossless capacity), grouped dispatch == explicit top-k."""
+    moe, params = setup(E=4, k=2)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 16, 32))
+    out, _ = moe_block(x, params, moe)
+
+    xt = x.reshape(-1, 32)
+    logits = xt @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gv, gi = jax.lax.top_k(probs, 2)
+    gv = gv / gv.sum(-1, keepdims=True)
+    want = jnp.zeros_like(xt)
+    from repro.models.common import swiglu
+    for e in range(4):
+        h = swiglu(xt @ params["w_gate"][e], xt @ params["w_up"][e])
+        ye = h @ params["w_down"][e]
+        w = jnp.where(gi == e, gv, 0.0).sum(-1)
+        want = want + ye * w[:, None]
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, 32)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_shared_expert_added():
+    moe = MoEConfig(num_experts=2, top_k=1, d_ff_expert=16,
+                    num_shared_experts=1, d_ff_shared=16)
+    params = init_moe_params(jax.random.PRNGKey(0), 8, moe, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 8, 8))
+    out, _ = moe_block(x, params, moe)
+    params2 = dict(params)
+    params2["shared"] = jax.tree_util.tree_map(jnp.zeros_like,
+                                               params["shared"])
+    out2, _ = moe_block(x, params2, moe)
+    assert float(jnp.abs(out - out2).max()) > 0.0
+
+
+def test_pick_group_size():
+    assert pick_group_size(1 << 20) <= 4096
+    assert (1 << 20) % pick_group_size(1 << 20) == 0
+    assert pick_group_size(128) == 128
+    assert pick_group_size(1) == 1
+    for T in (256, 640, 24576, 3 * 4096):
+        assert T % pick_group_size(T) == 0
+
+
+def test_capacity_drops_under_pressure():
+    """With cf tiny and large groups, some second-choice tokens drop:
+    combine weights per token sum to <= 1 and >= 0."""
+    moe = MoEConfig(num_experts=2, top_k=2, d_ff_expert=8,
+                    capacity_factor=0.5)
+    params = init_moe_params(jax.random.PRNGKey(0), 8, moe, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 64, 8))  # s=128
+    out, aux = moe_block(x, params, moe)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,140 @@
+"""Inter-task strip-packing solver + intra-task admission (paper §7)."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.sched.events import ClusterSimulator
+from repro.sched.inter_task import (TaskSpec, branch_and_bound, list_schedule,
+                                    lower_bound, lpt_schedule, solve)
+from repro.sched.intra_task import (IntraTaskScheduler, MemoryModel,
+                                    PendingJob, fit_memory_model)
+
+
+def brute_force_makespan(tasks, G):
+    best = float("inf")
+    for order in itertools.permutations(tasks):
+        s = list_schedule(order, G)
+        best = min(best, s.makespan)
+    return best
+
+
+def test_paper_figure5_shape():
+    """SJF leaves the cluster idle; makespan-aware plan beats it."""
+    tasks = [TaskSpec("short1", 1.0, 1), TaskSpec("short2", 1.0, 1),
+             TaskSpec("long", 4.0, 2), TaskSpec("mid", 2.0, 2)]
+    G = 2
+    sjf = solve(tasks, G, "sjf")
+    cp = solve(tasks, G, "cp")
+    assert cp.makespan <= sjf.makespan
+    assert cp.makespan == brute_force_makespan(tasks, G)
+
+
+def test_validation_catches_overlap():
+    s = solve([TaskSpec("a", 1.0, 2), TaskSpec("b", 2.0, 3),
+               TaskSpec("c", 1.5, 1)], 4, "cp")
+    s.validate(4)
+
+
+def test_paper_scale_instance_under_a_second():
+    """11 heterogeneous tasks on 8 GPUs (paper §8.2 inter-task setting)."""
+    rng = np.random.default_rng(0)
+    tasks = []
+    for i, g in enumerate([4, 2, 2, 1, 1, 1, 1, 2, 4, 1, 1]):
+        tasks.append(TaskSpec(f"t{i}", float(rng.uniform(1, 10)), g))
+    s = solve(tasks, 8, "cp")
+    s.validate(8)
+    assert s.solve_time_s < 6.0
+    assert s.makespan >= lower_bound(tasks, 8) - 1e-9
+    assert s.makespan <= lpt_schedule(tasks, 8).makespan + 1e-9
+
+
+@settings(deadline=None, max_examples=40)
+@given(tasks_raw=st.lists(
+    st.tuples(st.floats(0.5, 8.0), st.integers(1, 4)),
+    min_size=1, max_size=6),
+    G=st.sampled_from([4, 8]))
+def test_property_bnb_matches_bruteforce(tasks_raw, G):
+    tasks = [TaskSpec(f"t{i}", d, g) for i, (d, g) in enumerate(tasks_raw)]
+    s = branch_and_bound(tasks, G)
+    s.validate(G)
+    bf = brute_force_makespan(tasks, G)
+    assert abs(s.makespan - bf) < 1e-9
+    assert s.makespan >= lower_bound(tasks, G) - 1e-9
+
+
+@settings(deadline=None, max_examples=30)
+@given(tasks_raw=st.lists(
+    st.tuples(st.floats(0.5, 8.0), st.integers(1, 8)),
+    min_size=1, max_size=12),
+    G=st.sampled_from([8, 16]))
+def test_property_schedules_always_valid(tasks_raw, G):
+    tasks = [TaskSpec(f"t{i}", d, g) for i, (d, g) in enumerate(tasks_raw)]
+    for method in ("cp", "lpt", "sjf"):
+        s = solve(tasks, G, method)
+        s.validate(G)
+        assert s.makespan >= max(t.duration for t in tasks) - 1e-9
+
+
+def test_event_driven_early_exit_reclaims_gpus():
+    """A task finishing early (early exit) frees GPUs for pending work."""
+    sim = ClusterSimulator(G=4, method="cp")
+    sim.submit(TaskSpec("big", 10.0, 4), actual_duration=2.0)
+    sim.submit(TaskSpec("next", 3.0, 4))
+    mk = sim.run_until_idle()
+    assert abs(mk - 5.0) < 1e-9     # 2 (early-exited) + 3
+    assert sim.replans >= 2
+
+
+def test_cluster_simulator_parallel_packing():
+    sim = ClusterSimulator(G=4, method="cp")
+    for i in range(4):
+        sim.submit(TaskSpec(f"t{i}", 2.0, 2))
+    mk = sim.run_until_idle()
+    assert abs(mk - 4.0) < 1e-9     # two waves of two concurrent tasks
+
+
+# ---------------------------------------------------------------------------
+# intra-task
+# ---------------------------------------------------------------------------
+
+def test_memory_model_fit_recovers_linear():
+    seq = 128
+    k0, k1 = 3e9, 1e4
+    pts = [(b, k0 + k1 * b * seq) for b in (1, 2, 4, 8, 16)]
+    m = fit_memory_model(pts, seq, capacity=16e9)
+    assert abs(m.k0 - k0) / k0 < 1e-6
+    assert abs(m.k1 - k1) / k1 < 1e-6
+    assert m.fits(4)
+    assert not m.fits(10 ** 9)
+
+
+def test_admission_greedy_decreasing_and_backfill_same_bs():
+    mem = MemoryModel(k0=0, k1=1.0, seq_len=1, capacity=100,
+                      safety_margin=1.0)
+    sched = IntraTaskScheduler(mem, max_slots=8)
+    queue = [PendingJob("a8", 8), PendingJob("b8", 8), PendingJob("c4", 4),
+             PendingJob("d2", 2), PendingJob("e8", 8)]
+    admitted = sched.admit_initial(queue)
+    # decreasing order: all fit (8+8+8+4+2=30 <= 100)
+    assert [j.per_adapter_batch for j in admitted] == [8, 8, 8, 4, 2]
+    # evict one b=8; queue has nothing of b=8 left -> mixed backfill allowed
+    sched.evict("a8")
+    queue = [PendingJob("x4", 4), PendingJob("y8", 8)]
+    j = sched.backfill(8, queue)
+    assert j.job_id == "y8"      # same-batch-size preferred
+    sched.evict("c4")
+    j2 = sched.backfill(4, [PendingJob("z2", 2)])
+    assert j2.job_id == "z2"     # mixed accepted when no same-size pending
+
+
+def test_admission_respects_memory_cap():
+    mem = MemoryModel(k0=0, k1=1.0, seq_len=1, capacity=10,
+                      safety_margin=1.0)
+    sched = IntraTaskScheduler(mem, max_slots=8)
+    queue = [PendingJob(f"j{i}", 4) for i in range(5)]
+    admitted = sched.admit_initial(queue)
+    assert len(admitted) == 2            # 4+4 <= 10, third would exceed
+    assert sched.total_batch == 8

@@ -1,0 +1,103 @@
+"""Partitioning rules: divisibility-aware spec selection on all archs.
+
+Uses AbstractMesh so no fake devices are needed: the specs are pure
+functions of (mesh shape, leaf shape, path)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs.registry import ASSIGNED, get_arch
+from repro.core import lora as LORA
+from repro.launch import partitioning as PT
+from repro.models import model as M
+from repro.optim import adamw
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_pick_spec_divisibility_fallback():
+    assert PT.pick_spec(MESH, (32, 64), [{0: "data", 1: "model"}]) == \
+        P("data", "model")
+    # 25 not divisible by 16 -> falls through
+    assert PT.pick_spec(MESH, (25, 64), [{0: "model"}, {1: "model"}]) == \
+        P(None, "model")
+    assert PT.pick_spec(MESH, (25, 25), [{0: "model"}, {1: "model"}]) == P()
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("mesh", [MESH, MESH3], ids=["1pod", "2pod"])
+def test_param_specs_cover_all_archs(arch, mesh):
+    """Every leaf gets a legal spec: sharded dims divide the axis size."""
+    cfg = get_arch(arch)
+    params = jax.eval_shape(
+        lambda k: M.init_params(k, cfg), jax.random.PRNGKey(0))
+    specs = PT.base_param_specs(mesh, params)
+
+    def check(leaf, spec):
+        assert isinstance(spec, P)
+        for dim, axes in enumerate(spec):
+            if axes is None:
+                continue
+            names = axes if isinstance(axes, tuple) else (axes,)
+            n = 1
+            for a in names:
+                n *= mesh.shape[a]
+            assert leaf.shape[dim] % n == 0, (arch, leaf.shape, spec)
+
+    jax.tree_util.tree_map(check, params, specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    # big projection weights must actually be model-sharded
+    q = specs["layers"]["q_proj"] if "q_proj" in specs["layers"] else \
+        specs["layers"]["r_proj"]
+    assert "model" in jax.tree_util.tree_leaves(
+        [q], is_leaf=lambda s: isinstance(s, P))[0]
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "rwkv6-3b",
+                                  "granite-moe-1b-a400m"])
+def test_lora_specs_are_slot_sharded_only(arch):
+    """AP invariant: adapter leaves shard on Z ("data") and nothing else."""
+    cfg = get_arch(arch)
+    Z = 64
+    lora = jax.eval_shape(
+        lambda k: LORA.init_lora_tree(k, cfg, Z, jnp.zeros((Z,), jnp.int32),
+                                      M.target_shapes(cfg)),
+        jax.random.PRNGKey(0))
+    specs = PT.lora_param_specs(MESH, lora)
+    for s in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P)):
+        flat = [a for a in s if a is not None]
+        assert flat in ([], ["data"]) or tuple(flat) == ("data",)
+        if len(s) >= 2:
+            assert s[1] == "data"      # the Z axis
+
+
+def test_opt_state_follows_lora():
+    cfg = get_arch("stablelm-3b")
+    Z = 16
+    lora = jax.eval_shape(
+        lambda k: LORA.init_lora_tree(k, cfg, Z, jnp.zeros((Z,), jnp.int32),
+                                      M.target_shapes(cfg)),
+        jax.random.PRNGKey(0))
+    opt = jax.eval_shape(lambda lt: adamw.init_state(lt, Z), lora)
+    specs = PT.opt_state_specs(MESH, opt)
+    assert specs.count == P("data")
+    mu_leaf = jax.tree_util.tree_leaves(
+        specs.mu, is_leaf=lambda x: isinstance(x, P))[0]
+    assert mu_leaf[1] == "data"
+
+
+def test_batch_and_cache_specs():
+    cfg = get_arch("glm4-9b")
+    batch = {"tokens": jax.ShapeDtypeStruct((16, 8, 4096), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((16, 8, 4096), jnp.int32)}
+    bs = PT.batch_specs(MESH3, batch)
+    assert bs["tokens"] == P("data", "pod")
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, 16, 8, 1024))
+    cs = PT.cache_specs(MESH, cache)
+    k_spec = cs["layers"]["attn"]["k"]
+    # glm4 KV=2 (not divisible by 16) -> falls back to head_dim (128)
+    assert k_spec[1] == "data" and ("model" in tuple(k_spec))
+    assert cs["pos"] == P()
