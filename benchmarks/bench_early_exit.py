@@ -11,7 +11,6 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import numpy as np
 
 from benchmarks.common import emit
 from repro.configs.base import TrainConfig

@@ -17,7 +17,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import TrainConfig
 from repro.configs.registry import get_arch
 from repro.core import lora as LORA
 from repro.data.synthetic import SlotBatcher, make_task_dataset

@@ -42,7 +42,8 @@ def main() -> None:
                                max_steps=25, num_slots=2, name=name,
                                search_space=space))
 
-    schedule = engine.schedule(tasks, method="cp")
+    early_exit = alto.EarlyExit(warmup_ratio=0.15, select_ratio=0.5)
+    schedule = engine.schedule(tasks, method="cp", early_exit=early_exit)
     print("=== inter-task schedule (makespan-optimal) ===")
     for p in sorted(schedule.placements, key=lambda p: p.start):
         print(f"  t={p.start:8.1f}s  {p.task.name:24s} "
@@ -50,9 +51,7 @@ def main() -> None:
     print(f"makespan estimate: {schedule.makespan:.1f}s "
           f"(optimal={schedule.optimal})")
 
-    report = engine.batched_execution(
-        tasks, schedule, alto.EarlyExit(warmup_ratio=0.15,
-                                        select_ratio=0.5))
+    report = engine.batched_execution(tasks, schedule, early_exit)
     print("\n=== task results ===")
     for name, tr in report.task_results.items():
         print(f"  {name:24s} best={tr.best_job.split('/')[-1]:24s} "

@@ -8,7 +8,6 @@ loss-aware early exit, and prints the winning adapter's configuration.
 """
 import dataclasses
 
-import jax
 
 from repro.configs.registry import get_arch
 from repro.core import engine as alto
@@ -34,7 +33,7 @@ def main() -> None:
 
     # 3. Set early-exit strategy, schedule and execute
     early_exit = alto.EarlyExit(warmup_ratio=0.10, select_ratio=0.25)
-    schedule = engine.schedule([task], method="cp")
+    schedule = engine.schedule([task], method="cp", early_exit=early_exit)
     print(f"schedule: makespan={schedule.makespan:.1f}s "
           f"(optimal={schedule.optimal}, "
           f"solved in {schedule.solve_time_s * 1e3:.0f}ms)")

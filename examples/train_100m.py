@@ -9,7 +9,6 @@ adapter through the serve path. ``--small`` shrinks the model for a quick
 functional pass (~2 min).
 """
 import argparse
-import dataclasses
 import time
 
 import jax

@@ -1,0 +1,3 @@
+"""ALTO reproduction: adaptive LoRA tuning and orchestration (JAX/Pallas)."""
+
+__version__ = "0.1.0"

@@ -21,7 +21,6 @@ import time
 from typing import Dict, List, Optional, Sequence, Union
 
 import jax
-import numpy as np
 
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.configs.registry import get_arch
@@ -30,6 +29,8 @@ from repro.core.executor import BatchedExecutor, TaskResult
 from repro.data.synthetic import TaskDataset, make_task_dataset
 from repro.models import model as M
 from repro.sched import profiler
+from repro.sched.cluster import ElasticClusterRuntime, ExecutorTaskDriver
+from repro.sched.events import ProgressEvent
 from repro.sched.inter_task import Schedule, TaskSpec, solve
 from repro.sched.intra_task import fit_memory_model
 
@@ -92,6 +93,12 @@ class EngineReport:
     schedule: Schedule
     makespan_estimate: float
     wall_time_s: float
+    # elastic-execution observability (None on the static path)
+    execution: str = "static"
+    virtual_makespan: Optional[float] = None
+    utilization: Optional[float] = None
+    replans: int = 0
+    events: Optional[List[ProgressEvent]] = None
 
 
 class Engine:
@@ -102,6 +109,14 @@ class Engine:
         self.total_gpus = total_gpus
         self.eval_every = eval_every
         self._param_cache: Dict[str, Dict] = {}
+        self._dataset_cache: Dict[str, TaskDataset] = {}
+
+    def _dataset(self, task: "Task") -> TaskDataset:
+        """Resolve a task's dataset once per engine (profiling, slot
+        sizing, and execution all need it; generation is deterministic)."""
+        if task.task_name not in self._dataset_cache:
+            self._dataset_cache[task.task_name] = task.resolved_dataset()
+        return self._dataset_cache[task.task_name]
 
     # ---- intra-task slot sizing (paper §A.3 memory model) -------------------
     def pick_slots(self, task: Task) -> int:
@@ -113,7 +128,7 @@ class Engine:
         cfg = task.model_config()
         jobs = task.jobs()
         bsz = max(tc.per_adapter_batch for tc in jobs.values())
-        ds = task.resolved_dataset()
+        ds = self._dataset(task)
         seq = ds.train.shape[1] - 1
         pts = [(z * bsz, profiler.analytic_peak_memory(
             cfg, z, bsz, seq, task.num_gpus)) for z in (1, 2, 4, 8)]
@@ -123,25 +138,32 @@ class Engine:
         return int(z)
 
     # ---- profiling + inter-task scheduling ---------------------------------
-    def profile(self, task: Task) -> TaskSpec:
+    def profile(self, task: Task,
+                early_exit: EarlyExitConfig = EarlyExitConfig()) -> TaskSpec:
         cfg = task.model_config()
         jobs = task.jobs()
         bsz = max(tc.per_adapter_batch for tc in jobs.values())
         Z = self.pick_slots(task)
-        ds = task.resolved_dataset()
+        ds = self._dataset(task)
         seq = ds.train.shape[1] - 1
         prof = profiler.profile_task(cfg, Z, bsz, seq, task.num_gpus)
-        # duration: warmup for all K + full budget for the retained top-25%
-        # (the scheduler plans with the worst case: no pattern exits)
+        # duration: warmup waves for all K + full budget for the retained
+        # top-k survivors (the scheduler's worst case: no pattern exits;
+        # Pattern-3 selection is deterministic so it IS the worst case).
+        # Pass the same early_exit here and to batched_execution — the
+        # elastic runtime treats this duration as the residual upper bound.
         K = len(jobs)
-        total_samples = K * task.max_steps * bsz
-        dur = total_samples / prof.samples_per_s
+        warmup = early_exit.warmup_steps(task.max_steps)
+        steps = profiler.lifecycle_steps(K, Z, warmup, task.max_steps,
+                                         survivors=early_exit.top_k(K))
+        dur = profiler.residual_duration(steps, prof.step_time_s)
         return TaskSpec(name=task.task_name, duration=dur,
                         gpus=task.num_gpus)
 
-    def schedule(self, tasks: Sequence[Task], method: str = "cp"
+    def schedule(self, tasks: Sequence[Task], method: str = "cp",
+                 early_exit: EarlyExitConfig = EarlyExitConfig()
                  ) -> Schedule:
-        specs = [self.profile(t) for t in tasks]
+        specs = [self.profile(t, early_exit) for t in tasks]
         sched = solve(specs, self.total_gpus, method)
         sched.validate(self.total_gpus)
         return sched
@@ -153,32 +175,85 @@ class Engine:
                 jax.random.PRNGKey(seed), cfg)
         return self._param_cache[cfg.name]
 
+    def _make_executor(self, task: Task,
+                       early_exit: EarlyExitConfig) -> BatchedExecutor:
+        cfg = task.model_config()
+        jobs = task.jobs()
+        Z = self.pick_slots(task)
+        bsz = max(tc.per_adapter_batch for tc in jobs.values())
+        return BatchedExecutor(
+            cfg, self._base_params(cfg, task.seed),
+            self._dataset(task), Z=Z, per_adapter_batch=bsz,
+            ee=early_exit, eval_every=self.eval_every, seed=task.seed,
+            loss_kind=task.loss_kind)
+
     def batched_execution(self, tasks: Sequence[Task], schedule: Schedule,
                           early_exit: EarlyExitConfig = EarlyExitConfig(),
-                          ) -> EngineReport:
-        """Execute every task (in schedule order) and return best adapters.
+                          strategy: str = "elastic") -> EngineReport:
+        """Execute every task and return best adapters.
 
-        On this single-host container the tasks run sequentially in the
-        schedule's start order; the schedule's concurrency structure is what
-        the makespan estimate and the cluster simulator benchmarks use.
+        strategy="elastic" (default): the elastic cluster runtime steps all
+        scheduled tasks in bounded chunks over a virtual G-GPU cluster,
+        replanning the pending queue whenever an early-exit event shrinks a
+        task's residual duration — freed capacity is reclaimed immediately
+        (paper §7.2). strategy="static" keeps the precomputed plan for A/B:
+        tasks run to completion in schedule start order and the makespan
+        estimate is the plan's worst case.
+
+        Single-host note: training is sequential on this container either
+        way; the strategies differ in the *virtual cluster timeline*
+        (admission order, virtual makespan, utilization accounting), which
+        is what the cluster benchmarks compare.
         """
+        assert strategy in ("elastic", "static"), strategy
         t0 = time.time()
         by_name = {t.task_name: t for t in tasks}
-        results: Dict[str, TaskResult] = {}
-        for placement in sorted(schedule.placements, key=lambda p: p.start):
+        if strategy == "static":
+            results: Dict[str, TaskResult] = {}
+            for placement in sorted(schedule.placements,
+                                    key=lambda p: p.start):
+                task = by_name[placement.task.name]
+                ex = self._make_executor(task, early_exit)
+                results[task.task_name] = ex.run_task(
+                    task.task_name, task.jobs(), task.max_steps)
+            return EngineReport(
+                task_results=results, schedule=schedule,
+                makespan_estimate=schedule.makespan,
+                wall_time_s=time.time() - t0,
+                execution="static", virtual_makespan=schedule.makespan)
+
+        runtime = ElasticClusterRuntime(self.total_gpus)
+        for placement in schedule.placements:
             task = by_name[placement.task.name]
-            cfg = task.model_config()
-            jobs = task.jobs()
-            Z = self.pick_slots(task)
-            bsz = max(tc.per_adapter_batch for tc in jobs.values())
-            ex = BatchedExecutor(
-                cfg, self._base_params(cfg, task.seed),
-                task.resolved_dataset(), Z=Z, per_adapter_batch=bsz,
-                ee=early_exit, eval_every=self.eval_every, seed=task.seed,
-                loss_kind=task.loss_kind)
-            results[task.task_name] = ex.run_task(
-                task.task_name, jobs, task.max_steps)
+            # The schedule may have been solved under a different
+            # EarlyExitConfig than the one now executing (warmup/selection
+            # shape the lifecycle). Seed the runtime's residual estimate
+            # with the worst case of both so it stays a true upper bound —
+            # otherwise the replanner would project GPUs free too early.
+            exec_spec = self.profile(task, early_exit)
+            spec = dataclasses.replace(
+                placement.task,
+                duration=max(placement.task.duration, exec_spec.duration))
+
+            def factory(task: Task = task):
+                cfg = task.model_config()
+                Z = self.pick_slots(task)
+                jobs = task.jobs()
+                bsz = max(tc.per_adapter_batch for tc in jobs.values())
+                ds = self._dataset(task)
+                prof = profiler.profile_task(cfg, Z, bsz,
+                                             ds.train.shape[1] - 1,
+                                             task.num_gpus)
+                return ExecutorTaskDriver(
+                    task.task_name, self._make_executor(task, early_exit),
+                    jobs, task.max_steps, prof.step_time_s)
+
+            runtime.submit(spec, factory)
+        report = runtime.run(initial=schedule)
         return EngineReport(
-            task_results=results, schedule=schedule,
+            task_results=dict(report.results), schedule=schedule,
             makespan_estimate=schedule.makespan,
-            wall_time_s=time.time() - t0)
+            wall_time_s=time.time() - t0,
+            execution="elastic", virtual_makespan=report.makespan,
+            utilization=report.utilization, replans=report.replans,
+            events=report.events)

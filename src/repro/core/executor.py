@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +33,22 @@ from repro.core.early_exit import (EarlyExitConfig, ExitDecision, ExitReason,
                                    JobMonitor, warmup_select)
 from repro.data.synthetic import SlotBatcher, TaskDataset
 from repro.models import model as M
+from repro.sched.events import EventKind, ProgressEvent
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkReport:
+    """One bounded slice of a task's execution (elastic runtime unit).
+
+    The elastic cluster runtime (sched/cluster.py) interleaves many tasks
+    by stepping each executor one chunk at a time; ``steps_executed``
+    converts to virtual cluster time via the profiled step time, and
+    ``events`` carries every lifecycle transition that fired inside the
+    chunk (exits, selection, completion) so the runtime can replan."""
+    steps_executed: int
+    events: Tuple[ProgressEvent, ...]
+    phase: str
+    remaining_steps_bound: int
 
 
 @dataclasses.dataclass
@@ -87,6 +103,16 @@ class BatchedExecutor:
         self._best_ckpt: Dict[str, Dict] = {}
         self._queue: List[Tuple[str, TrainConfig]] = []
         self._budget: Optional[int] = None
+        # chunked-execution state (see run_task_chunks)
+        self._chunk_events: List[ProgressEvent] = []
+        self._task_name = ""
+        self._phase = "idle"
+        self._K = 0
+        self._total_steps = 0
+        self._warmup_steps = 0
+        self._waves_left = 0
+        self._steps_left_in_wave = 0
+        self._steps_done: Dict[str, int] = {}
 
     def _next_key(self) -> jax.Array:
         self.key, k = jax.random.split(self.key)
@@ -112,6 +138,10 @@ class BatchedExecutor:
                     if step_offset.get(job, 0) >= self._budget:
                         self.monitors[job]._exit(
                             ExitReason.COMPLETED, step_offset[job])
+                        self._chunk_events.append(ProgressEvent(
+                            kind=EventKind.JOB_EXITED, task=self._task_name,
+                            job=job, reason=ExitReason.COMPLETED.value,
+                            step=step_offset[job]))
                         self.slots.evict(slot)
                         self._backfill(slot)
 
@@ -131,6 +161,9 @@ class BatchedExecutor:
                 self._exit_job(job, slot, decision)
 
     def _exit_job(self, job: str, slot: int, decision: ExitDecision) -> None:
+        self._chunk_events.append(ProgressEvent(
+            kind=EventKind.JOB_EXITED, task=self._task_name, job=job,
+            reason=decision.reason.value, step=decision.step))
         self.slots.evict(slot)
         self._backfill(slot)
 
@@ -147,22 +180,79 @@ class BatchedExecutor:
     # ------------------------------------------------------------------ run
     def run_task(self, task_name: str, jobs: Dict[str, TrainConfig],
                  total_steps: int) -> TaskResult:
+        """Run the full lifecycle to completion (static path)."""
+        gen = self.run_task_chunks(task_name, jobs, total_steps)
+        while True:
+            try:
+                next(gen)
+            except StopIteration as done:
+                return done.value
+
+    def remaining_steps_bound(self) -> int:
+        """Upper bound on executor steps left in the current lifecycle,
+        assuming no further pattern exits (the residual d_i the elastic
+        runtime plans with; shrinks monotonically as events fire)."""
+        Z = max(self.Z, 1)
+        cont_budget = self._total_steps - self._warmup_steps
+        if self._phase == "warmup":
+            survivors = self.ee.top_k(self._K)
+            cont = -(-survivors // Z) * cont_budget
+            return (self._steps_left_in_wave
+                    + self._waves_left * self._warmup_steps + cont)
+        if self._phase == "continue":
+            alive = list(self.slots.occupied()) + [j for j, _ in self._queue]
+            rem = [max(self._total_steps - self._steps_done.get(j, 0), 0)
+                   for j in alive]
+            if not rem:
+                return 0
+            return -(-len(rem) // Z) * max(rem)
+        return 0
+
+    def _flush_chunk(self, steps: int) -> ChunkReport:
+        events, self._chunk_events = tuple(self._chunk_events), []
+        return ChunkReport(steps_executed=steps, events=events,
+                           phase=self._phase,
+                           remaining_steps_bound=self.remaining_steps_bound())
+
+    def run_task_chunks(self, task_name: str, jobs: Dict[str, TrainConfig],
+                        total_steps: int):
+        """Generator form of the lifecycle: yields a ChunkReport after every
+        bounded chunk (<= eval_every steps) so the elastic cluster runtime
+        can interleave many tasks and replan on the events each chunk
+        surfaces. ``return``s the TaskResult (StopIteration.value)."""
         t0 = time.time()
         K = len(jobs)
         warmup = self.ee.warmup_steps(total_steps)
         self.monitors = {j: JobMonitor(self.ee, j) for j in jobs}
-        self._best_ckpt: Dict[str, Dict] = {}
-        self._queue: List[Tuple[str, TrainConfig]] = []
+        self._best_ckpt = {}
+        self._queue = []
+        self._chunk_events = []
+        self._task_name = task_name
+        self._K = K
+        self._total_steps = total_steps
+        self._warmup_steps = warmup
         job_items = list(jobs.items())
 
         # ---- phase 1: warmup waves (rotation when K > Z)
         waves = [job_items[i:i + self.Z] for i in range(0, K, self.Z)]
         steps_done: Dict[str, int] = {}
+        self._steps_done = steps_done
+        self._phase = "warmup"
+        self._waves_left = len(waves)
         for wave in waves:
             for s, (job_id, tc) in enumerate(wave):
                 self.slots.admit(s, job_id, tc, self._next_key())
             self._queue = []
-            self._run_steps(warmup, steps_done)
+            self._waves_left -= 1
+            rem = warmup
+            while rem > 0:
+                # eval_every-aligned slices reproduce run_task's eval points
+                n = min(self.eval_every, rem)
+                self._steps_left_in_wave = rem
+                self._run_steps(n, steps_done)
+                rem -= n
+                self._steps_left_in_wave = rem
+                yield self._flush_chunk(n)
             # snapshot+rotate out whatever survived this wave
             for job_id, slot in list(self.slots.occupied().items()):
                 self.snapshots[job_id] = self.slots.snapshot(slot)
@@ -175,6 +265,12 @@ class BatchedExecutor:
             self.monitors[j]._exit(ExitReason.UNDERPERFORMING,
                                    steps_done.get(j, warmup))
             self.snapshots.pop(j, None)
+        self._phase = "continue"
+        if dropped:
+            self._chunk_events.append(ProgressEvent(
+                kind=EventKind.WARMUP_SELECTION, task=task_name,
+                reason=ExitReason.UNDERPERFORMING.value,
+                step=warmup, dropped=tuple(dropped)))
 
         # ---- phase 3: continue-training with online detection + backfill
         self._budget = total_steps
@@ -183,16 +279,39 @@ class BatchedExecutor:
             if not self._queue:
                 break
             self._backfill(slot)
+        yield self._flush_chunk(0)
         guard = 10 * total_steps * max(len(kept) // max(self.Z, 1), 1) + 10
         while self.slots.occupied() and guard > 0:
-            chunk = self.eval_every
+            # jobs already at budget (warmup == total_steps) complete
+            # without training another step
+            for job, slot in list(self.slots.occupied().items()):
+                if steps_done.get(job, 0) >= total_steps:
+                    self.monitors[job]._exit(
+                        ExitReason.COMPLETED, steps_done[job])
+                    self._chunk_events.append(ProgressEvent(
+                        kind=EventKind.JOB_EXITED, task=task_name, job=job,
+                        reason=ExitReason.COMPLETED.value,
+                        step=steps_done[job]))
+                    self.slots.evict(slot)
+                    self._backfill(slot)
+            if not self.slots.occupied():
+                yield self._flush_chunk(0)
+                break
+            # clamp to the occupied jobs' remaining budget so the realized
+            # step count never exceeds the profiler's worst-case estimate
+            # (no ghost steps on empty slots after the last eviction)
+            rem = max(total_steps - steps_done.get(j, 0)
+                      for j in self.slots.occupied())
+            chunk = min(self.eval_every, rem)
             self._run_steps(chunk, steps_done)
             guard -= chunk
+            yield self._flush_chunk(chunk)
         self._budget = None
         for job_id, slot in list(self.slots.occupied().items()):
             self.monitors[job_id]._exit(
                 ExitReason.COMPLETED, steps_done.get(job_id, total_steps))
             self.slots.evict(slot)
+        self._phase = "done"
 
         # ---- results
         results: Dict[str, JobResult] = {}
@@ -215,6 +334,10 @@ class BatchedExecutor:
             if r.exit_reason is not None:
                 exit_counts[r.exit_reason.value] = (
                     exit_counts.get(r.exit_reason.value, 0) + 1)
+        self._chunk_events.append(ProgressEvent(
+            kind=EventKind.TASK_COMPLETED, task=task_name,
+            detail=f"best={best_job}"))
+        yield self._flush_chunk(0)
         return TaskResult(
             task_name=task_name, best_job=best_job,
             best_val=results[best_job].best_val, job_results=results,

@@ -24,7 +24,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import LoRAConfig, ModelConfig
+from repro.configs.base import ModelConfig
 
 _backend = threading.local()
 

@@ -8,7 +8,7 @@ throughput, not optimization. (Verified by tests/test_isolation.py.)
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax.numpy as jnp
 

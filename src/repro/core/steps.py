@@ -8,7 +8,7 @@ through the slot-stacked LoRA tree.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

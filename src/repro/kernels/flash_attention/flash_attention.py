@@ -18,7 +18,6 @@ sliding window; fully-masked rows produce zeros (matching the oracle).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -27,7 +27,6 @@ lower to Mosaic for TPU.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

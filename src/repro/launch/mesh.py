@@ -23,6 +23,19 @@ SINGLE_POD = MeshConfig(shape=(16, 16), axes=("data", "model"))
 MULTI_POD = MeshConfig(shape=(2, 16, 16), axes=("pod", "data", "model"))
 
 
+def abstract_mesh(shape: Tuple[int, ...],
+                  axes: Tuple[str, ...]) -> "jax.sharding.AbstractMesh":
+    """Version-proof AbstractMesh constructor. jax <= 0.4.x takes a single
+    ``((name, size), ...)`` shape tuple; jax >= 0.5 takes positional
+    ``(axis_sizes, axis_names)``. Dry-run/spec tests go through here so a
+    toolchain bump is a one-line fix."""
+    assert len(shape) == len(axes), (shape, axes)
+    try:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     cfg = MULTI_POD if multi_pod else SINGLE_POD
     n = cfg.num_devices

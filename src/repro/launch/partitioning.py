@@ -21,12 +21,10 @@ import re
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-
 
 def _axis_size(mesh: Mesh, name: Optional[str]) -> int:
     if name is None:

@@ -19,7 +19,6 @@ Run standalone (it owns the 512-device flag):
 Writes experiments/ap_vs_fsdp/<arch>__<shape>__<variant>.json.
 """
 import argparse
-import dataclasses
 import json
 
 import jax
@@ -27,8 +26,8 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_arch
 from repro.configs.shapes import get_shape
-from repro.launch import partitioning as PT
 from repro.launch import steps_dist
+from repro.launch import partitioning as PT
 from repro.launch.dryrun import abstract_state, input_specs, sds
 from repro.launch.mesh import make_production_mesh
 from repro.optim import adamw

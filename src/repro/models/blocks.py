@@ -13,12 +13,12 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ATTN_SLIDING, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.core.lora import proj
 from repro.models.attention import attention
 from repro.models.common import he_init, rms_norm, swiglu
-from repro.models.mamba import (init_mamba_params, init_mamba_state,
-                                mamba_block, mamba_target_shapes)
+from repro.models.mamba import (init_mamba_params, mamba_block,
+                                mamba_target_shapes)
 from repro.models.moe import init_moe_params, moe_block
 from repro.models.rope import apply_rope
 from repro.models.rwkv import (init_rwkv_layer, rwkv_channel_mix,

@@ -8,7 +8,6 @@ time stay bounded for 80-layer configs.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -17,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs.base import ATTN_NONE, ATTN_SLIDING, ModelConfig
 from repro.models import blocks as B
 from repro.models.common import dtype_of, he_init, normal_init, rms_norm
-from repro.models.mamba import init_mamba_state, mamba_dims
+from repro.models.mamba import mamba_dims
 from repro.models.rope import rope_angles, text_positions
 from repro.models.shardctx import constrain
 

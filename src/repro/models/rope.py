@@ -7,7 +7,7 @@ degrades exactly to RoPE on text.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 

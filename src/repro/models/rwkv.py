@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.lora import proj
-from repro.models.common import he_init, normal_init, rms_norm, silu
+from repro.models.common import he_init, normal_init, silu
 from repro.models.linear_scan import (chunked_linear_attention,
                                       linear_attention_decode_step)
 

@@ -12,7 +12,7 @@ mechanism with no TPU analogue — plain fp32-state AdamW here, see DESIGN.md
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

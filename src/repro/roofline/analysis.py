@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.configs.registry import get_arch

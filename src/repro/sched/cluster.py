@@ -1,0 +1,582 @@
+"""Elastic cluster runtime: event-driven execution of an inter-task Schedule.
+
+The static engine path executes a precomputed Schedule literally: when a
+task's jobs exit early its GPUs idle until the worst-case plan says
+otherwise. This runtime closes that gap (paper §7.2 "event-driven
+replanning"): it executes the Schedule as an event loop over a simulated
+G-GPU cluster, stepping each running task's driver in bounded chunks.
+Whenever a chunk surfaces a shrink event (warmup-selection drop,
+divergence/overfit exit, completion), the runtime
+
+  1. re-estimates the residual ``TaskSpec`` of every running task from its
+     driver's ``residual_estimate()`` (observed survivor counts),
+  2. re-solves placement of the pending queue over the projected per-GPU
+     skyline (``branch_and_bound`` for small queues, ``lpt_schedule``
+     fallback — ``solve_residual``), and
+  3. admits newly-placeable tasks immediately instead of at their static
+     start times.
+
+Anomaly safety: greedy replanning under shrinking durations is vulnerable
+to Graham list-scheduling anomalies (a "better" plan under estimates can
+realize worse). The runtime therefore only *adopts* a re-solved plan when
+it starts every pending task no later than the task's static planned start
+(``s_j``). Together with non-delay dispatch this yields the hard guarantee
+
+    realized start(j) <= s_j  for every task j
+    => elastic makespan = max_j(start_j + actual_j)
+                       <= max_j(s_j + actual_j) = static makespan
+
+on every instance whose actual durations never exceed the estimates — which
+holds structurally for ALTO tasks, where events only remove work.
+
+Drivers decouple the runtime from what a "task" is:
+
+  * ``BatchedExecutor.run_task_chunks`` wrapped in ``ExecutorTaskDriver``
+    (the engine's real training path), and
+  * ``SimulatedTaskDriver`` (same lifecycle, virtual time only) for
+    benchmarks and property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.early_exit import EarlyExitConfig
+from repro.sched.events import EventKind, ProgressEvent
+from repro.sched.inter_task import (Placement, Schedule, TaskSpec,
+                                    diff_schedules, solve, solve_residual)
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class DriverChunk:
+    """One bounded slice of task progress in virtual time."""
+    dt: float                              # virtual seconds consumed
+    events: Tuple[ProgressEvent, ...] = ()
+    done: bool = False
+
+
+class TaskDriver:
+    """Interface the runtime steps. Implementations must be deterministic
+    for a fixed construction (the same driver replayed standalone must
+    produce the same chunk sequence — the static baseline depends on it)."""
+
+    def start(self, now: float) -> None:          # pragma: no cover
+        raise NotImplementedError
+
+    def step_chunk(self) -> DriverChunk:          # pragma: no cover
+        raise NotImplementedError
+
+    def residual_estimate(self) -> float:         # pragma: no cover
+        """Upper bound (seconds) on remaining work; must shrink over time."""
+        raise NotImplementedError
+
+    def result(self) -> Any:
+        return None
+
+
+@dataclasses.dataclass
+class _Running:
+    spec: TaskSpec
+    driver: TaskDriver
+    gpu_ids: Tuple[int, ...]
+    start: float
+    local_time: float
+    residual: float
+    zero_chunks: int = 0
+    saw_completed: bool = False
+
+
+@dataclasses.dataclass
+class RuntimeReport:
+    makespan: float
+    realized: Schedule                 # actual placements (validates vs G)
+    events: List[ProgressEvent]
+    replans: int
+    plans_adopted: int
+    plans_rejected: int
+    gpu_busy: List[float]
+    utilization: float
+    results: Dict[str, Any]
+    task_starts: Dict[str, float]
+    task_ends: Dict[str, float]
+
+    def per_gpu_utilization(self) -> List[float]:
+        mk = max(self.makespan, _EPS)
+        return [b / mk for b in self.gpu_busy]
+
+
+class ElasticClusterRuntime:
+    """Event loop over a simulated G-GPU cluster (see module docstring)."""
+
+    def __init__(self, G: int, method: str = "cp", bnb_max_n: int = 9,
+                 validate: bool = True, max_zero_chunks: int = 10_000):
+        self.G = G
+        self.method = method
+        self.bnb_max_n = bnb_max_n
+        self.validate = validate
+        self.max_zero_chunks = max_zero_chunks
+        self._submitted: List[Tuple[TaskSpec, Callable[[], TaskDriver]]] = []
+
+    def submit(self, spec: TaskSpec,
+               driver_factory: Callable[[], TaskDriver]) -> None:
+        assert spec.gpus <= self.G, f"{spec.name} needs {spec.gpus} > {self.G}"
+        self._submitted.append((spec, driver_factory))
+
+    # ------------------------------------------------------------------ run
+    def run(self, initial: Optional[Schedule] = None) -> RuntimeReport:
+        specs = [s for s, _ in self._submitted]
+        names = [s.name for s in specs]
+        assert len(set(names)) == len(names), "duplicate task names"
+        static = initial if initial is not None else solve(
+            specs, self.G, self.method)
+        if self.validate:
+            static.validate(self.G)
+        by_name = {s.name: (s, f) for s, f in self._submitted}
+        assert set(p.task.name for p in static.placements) == set(names), \
+            "schedule does not cover the submitted task set"
+
+        # static planned starts = the per-task admission bounds (anomaly
+        # safety) and the incumbent pending plan
+        s_bound = {p.task.name: p.start for p in static.placements}
+        plan: Dict[str, Tuple[float, Tuple[int, ...]]] = {
+            p.task.name: (p.start, p.gpu_ids) for p in static.placements}
+
+        owner: List[Optional[str]] = [None] * self.G
+        running: Dict[str, _Running] = {}
+        pending = set(names)
+        heap: List[Tuple[float, str]] = []
+        events: List[ProgressEvent] = []
+        results: Dict[str, Any] = {}
+        task_starts: Dict[str, float] = {}
+        task_ends: Dict[str, float] = {}
+        realized: List[Placement] = []
+        gpu_busy = [0.0] * self.G
+        replans = adopted = rejected = 0
+
+        for name in sorted(pending):
+            events.append(ProgressEvent(
+                kind=EventKind.TASK_SUBMITTED, task=name, time=0.0))
+
+        def proj_skyline(T: float) -> List[float]:
+            """Per-GPU projected free time: running tasks keep their GPUs
+            until local_time + residual; free GPUs are free at T."""
+            sky = [T] * self.G
+            for r in running.values():
+                end = max(r.local_time + r.residual, T)
+                for g in r.gpu_ids:
+                    sky[g] = end
+            return sky
+
+        def replan(T: float) -> None:
+            nonlocal replans, adopted, rejected
+            if not pending:
+                return
+            replans += 1
+            resid = [dataclasses.replace(
+                by_name[n][0], duration=max(plan_resid(n), _EPS))
+                for n in sorted(pending)]
+            cand = solve_residual(resid, self.G, proj_skyline(T),
+                                  self.method, self.bnb_max_n)
+            if self.validate:
+                cand.validate(self.G)
+            ok = all(p.start <= s_bound[p.task.name] + _EPS
+                     for p in cand.placements)
+            if ok:
+                old = Schedule(
+                    [Placement(by_name[n][0], plan[n][0], plan[n][1])
+                     for n in sorted(pending)], 0.0, False, 0.0)
+                moved = sum(d.moved_earlier
+                            for d in diff_schedules(old, cand))
+                for p in cand.placements:
+                    plan[p.task.name] = (p.start, p.gpu_ids)
+                adopted += 1
+                events.append(ProgressEvent(
+                    kind=EventKind.REPLAN, task="", time=T,
+                    reason="adopted", detail=f"moved_earlier={moved}"))
+            else:
+                rejected += 1
+                events.append(ProgressEvent(
+                    kind=EventKind.REPLAN, task="", time=T,
+                    reason="rejected", detail="would delay past static start"))
+
+        def plan_resid(name: str) -> float:
+            # pending tasks have done no work: residual = estimated duration
+            return by_name[name][0].duration
+
+        def admit(T: float) -> None:
+            """Start every pending task whose planned GPUs are free, in
+            planned-start order; earlier-planned tasks reserve their GPUs
+            so later tasks cannot cause priority inversion."""
+            reserved: set = set()
+            for name in sorted(pending,
+                               key=lambda n: (plan[n][0], n)):
+                gpus = plan[name][1]
+                if any(owner[g] is not None for g in gpus) or \
+                        (set(gpus) & reserved):
+                    reserved.update(gpus)
+                    continue
+                spec, factory = by_name[name]
+                driver = factory()
+                driver.start(T)
+                run = _Running(spec=spec, driver=driver, gpu_ids=gpus,
+                               start=T, local_time=T,
+                               residual=spec.duration)
+                running[name] = run
+                pending.discard(name)
+                for g in gpus:
+                    owner[g] = name
+                task_starts[name] = T
+                heapq.heappush(heap, (run.local_time, name))
+                events.append(ProgressEvent(
+                    kind=EventKind.TASK_STARTED, task=name, time=T,
+                    detail=f"gpus={','.join(map(str, gpus))}"))
+
+        admit(0.0)
+        if pending and not running:
+            raise RuntimeError("no task placeable at t=0 "
+                               "(schedule/capacity mismatch)")
+
+        while heap:
+            _, name = heapq.heappop(heap)
+            run = running.get(name)
+            if run is None:
+                continue
+            chunk = run.driver.step_chunk()
+            if chunk.dt <= 0 and not chunk.done:
+                run.zero_chunks += 1
+                if run.zero_chunks > self.max_zero_chunks:
+                    raise RuntimeError(f"task {name} stopped progressing")
+            else:
+                run.zero_chunks = 0
+            run.local_time += chunk.dt
+            T = run.local_time
+            # residual upper bounds must be non-increasing in projected-end
+            # terms: clamp so local_time + residual never grows
+            est = run.driver.residual_estimate()
+            run.residual = max(0.0, min(est, run.residual - chunk.dt))
+            for e in chunk.events:
+                events.append(e.stamped(T))
+                if e.kind is EventKind.TASK_COMPLETED:
+                    run.saw_completed = True
+            shrink = any(e.shrinks() for e in chunk.events)
+            if chunk.done:
+                del running[name]
+                for g in run.gpu_ids:
+                    owner[g] = None
+                    gpu_busy[g] += T - run.start
+                task_ends[name] = T
+                results[name] = run.driver.result()
+                realized.append(Placement(
+                    dataclasses.replace(run.spec, duration=T - run.start),
+                    run.start, run.gpu_ids))
+                if not run.saw_completed:
+                    events.append(ProgressEvent(
+                        kind=EventKind.TASK_COMPLETED, task=name, time=T))
+                replan(T)
+                admit(T)
+            else:
+                if shrink:
+                    replan(T)
+                    admit(T)
+                heapq.heappush(heap, (run.local_time, name))
+
+        assert not pending, f"unstarted tasks: {sorted(pending)}"
+        makespan = max(task_ends.values(), default=0.0)
+        schedule = Schedule(realized, makespan, optimal=False,
+                            solve_time_s=0.0)
+        if self.validate:
+            schedule.validate(self.G)
+        util = (sum(gpu_busy) / (self.G * makespan)) if makespan > 0 else 0.0
+        return RuntimeReport(
+            makespan=makespan, realized=schedule, events=events,
+            replans=replans, plans_adopted=adopted, plans_rejected=rejected,
+            gpu_busy=gpu_busy, utilization=util, results=results,
+            task_starts=task_starts, task_ends=task_ends)
+
+
+# --------------------------------------------------------------------------
+# Static baseline: the same drivers, starts pinned to the precomputed plan
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StaticReport:
+    makespan: float
+    realized: Schedule
+    gpu_busy: List[float]
+    utilization: float
+    results: Dict[str, Any]
+    task_starts: Dict[str, float]
+    task_ends: Dict[str, float]
+
+    def per_gpu_utilization(self) -> List[float]:
+        mk = max(self.makespan, _EPS)
+        return [b / mk for b in self.gpu_busy]
+
+
+def execute_static(schedule: Schedule, G: int,
+                   factories: Dict[str, Callable[[], TaskDriver]],
+                   validate: bool = True) -> StaticReport:
+    """Execute a Schedule literally: every task starts at its planned start
+    (GPUs idle in between), actual durations come from draining the same
+    drivers the elastic runtime would step. This is the A/B baseline the
+    benchmarks compare against."""
+    if validate:
+        schedule.validate(G)
+    realized: List[Placement] = []
+    gpu_busy = [0.0] * G
+    results: Dict[str, Any] = {}
+    starts: Dict[str, float] = {}
+    ends: Dict[str, float] = {}
+    for p in schedule.placements:
+        name = p.task.name
+        driver = factories[name]()
+        driver.start(p.start)
+        dur = 0.0
+        while True:
+            chunk = driver.step_chunk()
+            dur += chunk.dt
+            if chunk.done:
+                break
+        results[name] = driver.result()
+        starts[name] = p.start
+        ends[name] = p.start + dur
+        for g in p.gpu_ids:
+            gpu_busy[g] += dur
+        realized.append(Placement(
+            dataclasses.replace(p.task, duration=dur), p.start, p.gpu_ids))
+    makespan = max(ends.values(), default=0.0)
+    sched = Schedule(realized, makespan, optimal=False, solve_time_s=0.0)
+    if validate:
+        sched.validate(G)
+    util = (sum(gpu_busy) / (G * makespan)) if makespan > 0 else 0.0
+    return StaticReport(makespan=makespan, realized=sched, gpu_busy=gpu_busy,
+                        utilization=util, results=results,
+                        task_starts=starts, task_ends=ends)
+
+
+# --------------------------------------------------------------------------
+# Simulated driver: the executor lifecycle in virtual time (no training)
+# --------------------------------------------------------------------------
+
+class SimulatedTaskDriver(TaskDriver):
+    """Replays the BatchedExecutor lifecycle — warmup waves with rotation,
+    Pattern-3 selection at the warmup boundary, continue-training with
+    early exits and slot backfill — in virtual time. ``exit_step[j]`` makes
+    job j exit (divergence/overfit stand-in) once it has trained that many
+    steps; jobs without an entry train to ``total_steps``. Deterministic
+    for fixed arguments, as the static baseline requires."""
+
+    def __init__(self, name: str, *, K: int, Z: int, total_steps: int,
+                 warmup_steps: int, step_time_s: float,
+                 select_ratio: float = 0.25,
+                 exit_step: Optional[Dict[int, int]] = None,
+                 chunk_steps: int = 5):
+        assert K >= 1 and Z >= 1 and total_steps >= 1
+        self.name = name
+        self.K = K
+        self.Z = Z
+        self.total_steps = total_steps
+        self.warmup_steps = max(min(warmup_steps, total_steps), 1)
+        self.step_time_s = step_time_s
+        self.select_ratio = select_ratio
+        self.exit_step = dict(exit_step or {})
+        self.chunk_steps = max(chunk_steps, 1)
+        # single source of truth for the Pattern-3 rounding rule: the same
+        # EarlyExitConfig.top_k the real executor's warmup_select uses
+        self.top_k = EarlyExitConfig(select_ratio=select_ratio).top_k(K)
+        # lifecycle state
+        self._trained = [0] * K
+        self._exited: Dict[int, str] = {}
+        self._waves = [list(range(i, min(i + Z, K)))
+                       for i in range(0, K, Z)]
+        self._wave_idx = 0
+        self._wave_left = self.warmup_steps
+        self._phase = "warmup"
+        self._active: List[int] = []
+        self._queue: List[int] = []
+        self._done = False
+
+    # -- helpers -----------------------------------------------------------
+    def _alive(self, jobs: Sequence[int]) -> List[int]:
+        return [j for j in jobs if j not in self._exited]
+
+    def start(self, now: float) -> None:
+        pass
+
+    def _job_events(self, jobs: Sequence[int]) -> List[ProgressEvent]:
+        out = []
+        for j in jobs:
+            tgt = self.exit_step.get(j)
+            if tgt is not None and self._trained[j] >= tgt \
+                    and j not in self._exited:
+                self._exited[j] = "diverging"
+                out.append(ProgressEvent(
+                    kind=EventKind.JOB_EXITED, task=self.name,
+                    job=f"{self.name}/j{j}", reason="diverging",
+                    step=self._trained[j]))
+            elif self._trained[j] >= self.total_steps \
+                    and j not in self._exited:
+                self._exited[j] = "completed"
+                out.append(ProgressEvent(
+                    kind=EventKind.JOB_EXITED, task=self.name,
+                    job=f"{self.name}/j{j}", reason="completed",
+                    step=self._trained[j]))
+        return out
+
+    def step_chunk(self) -> DriverChunk:
+        assert not self._done
+        ev: List[ProgressEvent] = []
+        if self._phase == "warmup":
+            wave = self._alive(self._waves[self._wave_idx])
+            n = min(self.chunk_steps, self._wave_left)
+            self._wave_left -= n
+            for j in wave:
+                self._trained[j] += n
+            ev += self._job_events(wave)
+            if self._wave_left == 0:
+                self._wave_idx += 1
+                self._wave_left = self.warmup_steps
+                if self._wave_idx >= len(self._waves):
+                    ev += self._select()
+            return DriverChunk(dt=n * self.step_time_s, events=tuple(ev))
+        # continue phase
+        self._active = self._alive(self._active)
+        while len(self._active) < self.Z and self._queue:
+            self._active.append(self._queue.pop(0))
+        if not self._active:
+            self._done = True
+            ev.append(ProgressEvent(
+                kind=EventKind.TASK_COMPLETED, task=self.name))
+            return DriverChunk(dt=0.0, events=tuple(ev), done=True)
+        # clamp the chunk to the next per-job event boundary (budget or
+        # early exit) so no job overshoots total_steps — the real executor
+        # evicts at the exact step, and the worst-case duration estimate
+        # must stay an upper bound on the realized duration
+        n = self.chunk_steps
+        for j in self._active:
+            nxt = min(self.exit_step.get(j, self.total_steps),
+                      self.total_steps)
+            n = min(n, max(nxt - self._trained[j], 1))
+        for j in self._active:
+            self._trained[j] += n
+        ev += self._job_events(self._active)
+        self._active = self._alive(self._active)
+        return DriverChunk(dt=n * self.step_time_s, events=tuple(ev))
+
+    def _select(self) -> List[ProgressEvent]:
+        self._phase = "continue"
+        alive = self._alive(range(self.K))
+        kept, dropped = alive[:self.top_k], alive[self.top_k:]
+        for j in dropped:
+            self._exited[j] = "underperforming"
+        self._active = kept[:self.Z]
+        self._queue = kept[self.Z:]
+        if dropped:
+            return [ProgressEvent(
+                kind=EventKind.WARMUP_SELECTION, task=self.name,
+                reason="underperforming", step=self.warmup_steps,
+                dropped=tuple(f"{self.name}/j{j}" for j in dropped))]
+        return []
+
+    def residual_estimate(self) -> float:
+        if self._done:
+            return 0.0
+        cont_budget = self.total_steps - self.warmup_steps
+        if self._phase == "warmup":
+            waves_left = len(self._waves) - self._wave_idx - 1
+            surv = min(self.top_k, self.K - sum(
+                1 for r in self._exited.values() if r != "completed"))
+            surv = max(surv, 0)
+            cont = -(-surv // self.Z) * cont_budget if surv else 0
+            steps = self._wave_left + waves_left * self.warmup_steps + cont
+        else:
+            alive = self._alive(self._active) + self._alive(self._queue)
+            if not alive:
+                steps = 0
+            else:
+                rem = max(self.total_steps - self._trained[j] for j in alive)
+                steps = -(-len(alive) // self.Z) * max(rem, 0)
+        return steps * self.step_time_s
+
+    def result(self) -> Dict[str, Any]:
+        return {"task": self.name,
+                "steps_trained": int(sum(self._trained)),
+                "exit_reasons": {f"{self.name}/j{j}": r
+                                 for j, r in sorted(self._exited.items())}}
+
+
+def sim_task_spec(name: str, *, K: int, Z: int, total_steps: int,
+                  warmup_steps: int, step_time_s: float, gpus: int,
+                  select_ratio: float = 0.25) -> TaskSpec:
+    """Worst-case (no pattern exits) duration estimate for a simulated
+    task — identical to what the profiler computes for real tasks."""
+    from repro.sched import profiler
+    warmup = max(min(warmup_steps, total_steps), 1)
+    top_k = EarlyExitConfig(select_ratio=select_ratio).top_k(K)
+    steps = profiler.lifecycle_steps(K, Z, warmup, total_steps,
+                                     survivors=top_k)
+    return TaskSpec(name=name, duration=steps * step_time_s, gpus=gpus)
+
+
+# --------------------------------------------------------------------------
+# Real-executor driver (engine integration)
+# --------------------------------------------------------------------------
+
+class ExecutorTaskDriver(TaskDriver):
+    """Wraps BatchedExecutor.run_task_chunks: chunk steps convert to
+    virtual seconds via the profiled step time, and each ChunkReport's
+    remaining_steps_bound provides the residual estimate.
+
+    Training is drained eagerly at ``start()`` and the chunk/event timeline
+    replayed to the runtime. Tasks don't interact and cluster time is
+    virtual, so the replay is observationally identical to live stepping —
+    but only ONE executor (slot params, optimizer state, snapshots) is
+    resident at a time instead of one per concurrently-scheduled task."""
+
+    def __init__(self, name: str, executor, jobs, total_steps: int,
+                 step_time_s: float):
+        self.name = name
+        self.executor = executor
+        self.jobs = jobs
+        self.total_steps = total_steps
+        self.step_time_s = step_time_s
+        self._chunks: List[DriverChunk] = []
+        self._bounds: List[int] = []
+        self._result = None
+        self._last_bound: Optional[int] = None
+
+    def start(self, now: float) -> None:
+        gen = self.executor.run_task_chunks(
+            self.name, self.jobs, self.total_steps)
+        while True:
+            try:
+                report = next(gen)
+            except StopIteration as fin:
+                self._result = fin.value
+                break
+            self._chunks.append(DriverChunk(
+                dt=report.steps_executed * self.step_time_s,
+                events=report.events, done=False))
+            self._bounds.append(report.remaining_steps_bound)
+        assert self._chunks, "executor produced no chunks"
+        # completion events ride the final chunk so the runtime replans
+        # exactly once, with the GPUs actually freed
+        self._chunks[-1] = dataclasses.replace(self._chunks[-1], done=True)
+        self.executor = None            # release slot/opt state eagerly
+
+    def step_chunk(self) -> DriverChunk:
+        assert self._chunks is not None and self._chunks, "start() not called"
+        chunk = self._chunks.pop(0)
+        self._last_bound = self._bounds.pop(0)
+        return chunk
+
+    def residual_estimate(self) -> float:
+        if self._last_bound is None:        # not stepped yet: no information
+            return float("inf")             # runtime clamps to spec duration
+        return self._last_bound * self.step_time_s
+
+    def result(self):
+        return self._result

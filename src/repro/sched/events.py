@@ -1,19 +1,62 @@
 """Event-driven inter-task replanning (paper §7.2 "Event-driven replanning").
 
-A living cluster queue: replan on (1) task arrival and (2) task completion
-— which frequently happens *earlier* than the worst-case estimate d_i
-because of early exits. Freed GPUs are immediately backfilled with the next
-optimal placement. This module is a discrete-event simulator over the same
-solver the engine uses, driving both the scheduler benchmarks (Figs. 5/12)
-and the engine's live queue.
+Two layers live here:
+
+  * ``ProgressEvent``/``EventKind``: the event vocabulary shared by the
+    chunked executor (core/executor.py), the elastic cluster runtime
+    (sched/cluster.py), and the engine. Every lifecycle transition that can
+    shrink a task's residual duration — warmup-selection drops, divergence
+    and overfitting exits, per-job completions, task completion — is one of
+    these events, which is what makes replanning event-driven rather than
+    poll-driven.
+  * ``ClusterSimulator``: the original coarse (task-granularity)
+    discrete-event simulator over the same solver the engine uses, kept for
+    the scheduler benchmarks (Figs. 5/12). The elastic runtime in
+    sched/cluster.py supersedes it for engine execution: it sees *intra*-task
+    events, not just completions.
 """
 from __future__ import annotations
 
 import dataclasses
+import enum
 import heapq
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
-from repro.sched.inter_task import Schedule, TaskSpec, solve
+from repro.sched.inter_task import TaskSpec, solve
+
+
+class EventKind(enum.Enum):
+    """Lifecycle transitions a running task reports to the runtime."""
+    TASK_SUBMITTED = "task_submitted"
+    TASK_STARTED = "task_started"
+    WARMUP_SELECTION = "warmup_selection"   # Pattern-3 drops at the boundary
+    JOB_EXITED = "job_exited"               # divergence / overfit / budget
+    TASK_PROGRESS = "task_progress"         # chunk heartbeat (no shrink)
+    TASK_COMPLETED = "task_completed"
+    REPLAN = "replan"                       # runtime re-solved the queue
+
+# Kinds that can shrink a task's residual duration and therefore trigger
+# a replan of the pending queue.
+SHRINK_KINDS = frozenset({EventKind.WARMUP_SELECTION, EventKind.JOB_EXITED,
+                          EventKind.TASK_COMPLETED})
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgressEvent:
+    kind: EventKind
+    task: str
+    time: float = 0.0            # virtual cluster time (runtime fills this)
+    job: str = ""                # job id for JOB_EXITED
+    reason: str = ""             # exit reason / replan outcome
+    step: int = 0                # executor step at which it fired
+    dropped: Tuple[str, ...] = ()  # job ids dropped at warmup selection
+    detail: str = ""
+
+    def shrinks(self) -> bool:
+        return self.kind in SHRINK_KINDS
+
+    def stamped(self, time: float) -> "ProgressEvent":
+        return dataclasses.replace(self, time=time)
 
 
 @dataclasses.dataclass

@@ -23,10 +23,9 @@ what makes event-driven replanning viable (§7.2).
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import itertools
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,20 +63,29 @@ class Schedule:
                 assert not (set(a.gpu_ids) & set(b.gpu_ids)), (a, b)
 
 
-def lower_bound(tasks: Sequence[TaskSpec], G: int) -> float:
+def lower_bound(tasks: Sequence[TaskSpec], G: int,
+                free_at: Optional[Sequence[float]] = None) -> float:
+    """Makespan LB; with ``free_at`` it bounds the residual problem over a
+    partially busy cluster (running tasks occupy GPUs until free_at[g])."""
+    base = [0.0] * G if free_at is None else list(free_at)
     if not tasks:
-        return 0.0
-    area = sum(t.duration * t.gpus for t in tasks) / G
-    longest = max(t.duration for t in tasks)
+        return max(base, default=0.0)
+    earliest = min(base)
+    area = (sum(base) + sum(t.duration * t.gpus for t in tasks)) / G
+    longest = earliest + max(t.duration for t in tasks)
     # tasks needing more than half the cluster can never overlap each other
-    big = sum(t.duration for t in tasks if t.gpus > G / 2)
-    return max(area, longest, big)
+    big = earliest + sum(t.duration for t in tasks if t.gpus > G / 2)
+    return max(area, longest, big, max(base))
 
 
-def list_schedule(order: Sequence[TaskSpec], G: int) -> Schedule:
+def list_schedule(order: Sequence[TaskSpec], G: int,
+                  free_at: Optional[Sequence[float]] = None) -> Schedule:
     """Greedy non-delay placement: each task starts at the earliest time
-    enough GPUs are free; concrete ids picked from the per-GPU skyline."""
-    free_at = [0.0] * G                   # per-GPU next-free time
+    enough GPUs are free; concrete ids picked from the per-GPU skyline.
+
+    ``free_at`` seeds the per-GPU skyline (residual re-solves over a
+    half-busy cluster); defaults to an idle cluster."""
+    free_at = [0.0] * G if free_at is None else list(free_at)
     placements: List[Placement] = []
     for t in order:
         # earliest time when >= g GPUs are free: g-th smallest free_at
@@ -90,17 +98,19 @@ def list_schedule(order: Sequence[TaskSpec], G: int) -> Schedule:
             free_at[g] = start + t.duration
         placements.append(Placement(t, start, tuple(sorted(chosen))))
     mk = max((p.end for p in placements), default=0.0)
+    mk = max(mk, max(free_at, default=0.0))
     return Schedule(placements, mk, optimal=False, solve_time_s=0.0)
 
 
-def lpt_schedule(tasks: Sequence[TaskSpec], G: int) -> Schedule:
+def lpt_schedule(tasks: Sequence[TaskSpec], G: int,
+                 free_at: Optional[Sequence[float]] = None) -> Schedule:
     """Best of several greedy orders (area, duration, width)."""
     best: Optional[Schedule] = None
     keys = [lambda t: -t.duration * t.gpus,
             lambda t: -t.duration,
             lambda t: (-t.gpus, -t.duration)]
     for key in keys:
-        s = list_schedule(sorted(tasks, key=key), G)
+        s = list_schedule(sorted(tasks, key=key), G, free_at)
         if best is None or s.makespan < best.makespan - 1e-12:
             best = s
     assert best is not None
@@ -109,17 +119,19 @@ def lpt_schedule(tasks: Sequence[TaskSpec], G: int) -> Schedule:
 
 def branch_and_bound(tasks: Sequence[TaskSpec], G: int,
                      node_cap: int = 200_000,
-                     time_cap_s: float = 5.0) -> Schedule:
+                     time_cap_s: float = 5.0,
+                     free_at: Optional[Sequence[float]] = None) -> Schedule:
     """Exact-over-non-delay-orders DFS with LB pruning."""
     t0 = time.time()
     tasks = list(tasks)
+    base_free = [0.0] * G if free_at is None else list(free_at)
     n = len(tasks)
     if n == 0:
-        return Schedule([], 0.0, True, 0.0)
-    incumbent = lpt_schedule(tasks, G)
+        return Schedule([], max(base_free, default=0.0), True, 0.0)
+    incumbent = lpt_schedule(tasks, G, base_free)
     best_mk = incumbent.makespan
     best_order: Optional[Tuple[int, ...]] = None
-    lb_all = lower_bound(tasks, G)
+    lb_all = lower_bound(tasks, G, base_free)
     if best_mk <= lb_all + 1e-9:
         incumbent.optimal = True
         incumbent.solve_time_s = time.time() - t0
@@ -168,9 +180,9 @@ def branch_and_bound(tasks: Sequence[TaskSpec], G: int,
             dfs(order + [i], new_free,
                 max(used_mk, start + t.duration), rem_area - areas[i])
 
-    dfs([], [0.0] * G, 0.0, float(sum(areas)))
+    dfs([], list(base_free), max(base_free), float(sum(areas)))
     if best_order is not None:
-        sched = list_schedule([tasks[i] for i in best_order], G)
+        sched = list_schedule([tasks[i] for i in best_order], G, base_free)
         sched.optimal = complete or sched.makespan <= lb_all + 1e-9
     else:
         sched = incumbent
@@ -179,16 +191,68 @@ def branch_and_bound(tasks: Sequence[TaskSpec], G: int,
     return sched
 
 
-def solve(tasks: Sequence[TaskSpec], G: int, method: str = "cp"
-          ) -> Schedule:
+def solve(tasks: Sequence[TaskSpec], G: int, method: str = "cp",
+          free_at: Optional[Sequence[float]] = None) -> Schedule:
     """Entry point. method: "cp" (exact B&B, paper's MILP/CP analogue),
     "lpt" (greedy), "sjf" (shortest-job-first baseline of Fig. 5a)."""
     for t in tasks:
         assert t.gpus <= G, f"{t.name} needs {t.gpus} > {G} GPUs"
     if method == "cp":
-        return branch_and_bound(tasks, G)
+        return branch_and_bound(tasks, G, free_at=free_at)
     if method == "lpt":
-        return lpt_schedule(tasks, G)
+        return lpt_schedule(tasks, G, free_at)
     if method == "sjf":
-        return list_schedule(sorted(tasks, key=lambda t: t.duration), G)
+        return list_schedule(sorted(tasks, key=lambda t: t.duration), G,
+                             free_at)
     raise ValueError(method)
+
+
+# --------------------------------------------------------------------------
+# Residual re-solve + schedule diffing (elastic runtime, paper §7.2)
+# --------------------------------------------------------------------------
+
+def solve_residual(tasks: Sequence[TaskSpec], G: int,
+                   free_at: Sequence[float], method: str = "cp",
+                   bnb_max_n: int = 9) -> Schedule:
+    """Re-solve placement of the pending queue over a partially busy
+    cluster: ``free_at[g]`` is when GPU g is projected to free up (running
+    tasks keep their GPUs — no migration). Exact B&B for small queues,
+    LPT fallback beyond ``bnb_max_n`` (replans must stay sub-second so the
+    event loop never stalls, paper §7.2)."""
+    if method == "cp" and len(tasks) > bnb_max_n:
+        method = "lpt"
+    return solve(tasks, G, method, free_at=free_at)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementDelta:
+    task: str
+    old_start: Optional[float]
+    new_start: Optional[float]
+    old_gpus: Tuple[int, ...]
+    new_gpus: Tuple[int, ...]
+
+    @property
+    def moved_earlier(self) -> bool:
+        return (self.old_start is not None and self.new_start is not None
+                and self.new_start < self.old_start - 1e-9)
+
+
+def diff_schedules(old: Schedule, new: Schedule) -> List[PlacementDelta]:
+    """Per-task deltas between two plans (replan observability: which
+    pending tasks moved earlier / changed GPUs after an event)."""
+    old_by = {p.task.name: p for p in old.placements}
+    new_by = {p.task.name: p for p in new.placements}
+    deltas: List[PlacementDelta] = []
+    for name in sorted(set(old_by) | set(new_by)):
+        a, b = old_by.get(name), new_by.get(name)
+        if (a is not None and b is not None
+                and abs(a.start - b.start) < 1e-9 and a.gpu_ids == b.gpu_ids):
+            continue
+        deltas.append(PlacementDelta(
+            task=name,
+            old_start=None if a is None else a.start,
+            new_start=None if b is None else b.start,
+            old_gpus=() if a is None else a.gpu_ids,
+            new_gpus=() if b is None else b.gpu_ids))
+    return deltas

@@ -106,6 +106,46 @@ def profile_task(cfg: ModelConfig, Z: int, b: int, seq_len: int,
     return _CACHE[key]
 
 
+# --------------------------------------------------------------------------
+# Lifecycle duration (re-)estimation (elastic runtime, paper §7.2)
+# --------------------------------------------------------------------------
+
+def lifecycle_steps(K: int, Z: int, warmup_steps: int, total_steps: int,
+                    survivors: Optional[int] = None) -> int:
+    """Worst-case executor steps for the ALTO per-task lifecycle:
+    ceil(K/Z) warmup waves, then the survivors packed onto Z slots for the
+    remaining budget. ``survivors=None`` means the warmup boundary has not
+    been reached yet and no pattern exits are assumed (the scheduler's
+    worst case) — but Pattern-3 selection is deterministic, so even the
+    worst case retains only ``survivors`` jobs once that count is known."""
+    if K <= 0:
+        return 0
+    Z = max(Z, 1)
+    warmup_steps = max(min(warmup_steps, total_steps), 0)
+    s = K if survivors is None else max(min(survivors, K), 0)
+    waves = -(-K // Z)                      # ceil
+    cont_waves = -(-s // Z) if s else 0
+    return waves * warmup_steps + cont_waves * (total_steps - warmup_steps)
+
+
+def residual_duration(steps_remaining: float, step_time_s: float) -> float:
+    """Seconds of residual work from an executor-step bound."""
+    return max(float(steps_remaining), 0.0) * step_time_s
+
+
+def reestimate_duration(step_time_s: float, K: int, Z: int,
+                        warmup_steps: int, total_steps: int,
+                        survivors: int) -> float:
+    """Duration re-estimate after the warmup boundary reported ``survivors``
+    jobs continuing (warmup-selection drops and divergence exits both lower
+    it). The elastic runtime feeds this into residual re-solves so freed
+    capacity is reclaimed immediately instead of at the static plan's
+    worst-case boundaries."""
+    steps = lifecycle_steps(K, Z, warmup_steps, total_steps,
+                            survivors=survivors)
+    return residual_duration(steps, step_time_s)
+
+
 def gpus_for_model(cfg: ModelConfig, hbm_bytes: float = HBM_BYTES,
                    overhead: float = 1.35) -> int:
     """GPU/chip requirement from base-model size (paper §7.2)."""

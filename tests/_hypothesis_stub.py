@@ -1,0 +1,112 @@
+"""Minimal offline stand-in for the ``hypothesis`` package.
+
+The property tests in this repo use a small, fixed subset of hypothesis:
+``@settings(deadline=..., max_examples=...)``, ``@given(**strategies)`` and
+the ``integers / floats / lists / tuples / sampled_from / booleans``
+strategies. When the real package is installed (the ``[test]`` extra, as CI
+does) it is used untouched; on bare containers conftest.py registers this
+module as ``hypothesis`` so collection and execution still work.
+
+The stand-in draws deterministic pseudo-random examples (seeded per test
+name) with no shrinking — strictly weaker than hypothesis, strictly better
+than 5 test files failing collection.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+MAX_EXAMPLES_CAP = 20       # keep bare-container runs fast
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_with(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq) -> SearchStrategy:
+    items = list(seq)
+    return SearchStrategy(lambda rng: items[int(rng.integers(len(items)))])
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10, **_kw) -> SearchStrategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example_with(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.example_with(rng) for s in strategies))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def settings(deadline=None, max_examples: int = 20, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **fixture_kwargs):
+            declared = getattr(wrapper, "_stub_max_examples",
+                               getattr(fn, "_stub_max_examples", 20))
+            n = min(int(declared), MAX_EXAMPLES_CAP)
+            seed0 = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.default_rng((seed0, i))
+                drawn = {k: s.example_with(rng)
+                         for k, s in sorted(strategies.items())}
+                try:
+                    fn(*args, **fixture_kwargs, **drawn)
+                except Exception as err:
+                    raise AssertionError(
+                        f"stub-hypothesis falsified {fn.__qualname__} on "
+                        f"example {i}: {drawn!r}") from err
+
+        # hide the drawn parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategies])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+# expose as a module object so `from hypothesis import strategies as st`
+# resolves through the registered package
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("integers", "floats", "booleans", "sampled_from", "lists",
+              "tuples", "just"):
+    setattr(strategies, _name, globals()[_name])
+strategies.SearchStrategy = SearchStrategy

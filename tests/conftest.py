@@ -1,11 +1,53 @@
-"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single real
-CPU device; only launch/dryrun.py fakes the 512-device platform."""
+"""Shared fixtures + pytest hardening. NOTE: no XLA_FLAGS here — tests run
+on the single real CPU device; only launch/dryrun.py fakes the 512-device
+platform."""
 import dataclasses
+import importlib.util
+import pathlib
+import sys
 
 import jax
 import pytest
 
 jax.config.update("jax_platform_name", "cpu")
+
+# ---- hypothesis fallback ---------------------------------------------------
+# CI installs the real package via `pip install -e .[test]`; bare containers
+# fall back to the deterministic stub so property tests still collect + run.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _stub_path = pathlib.Path(__file__).with_name("_hypothesis_stub.py")
+    _spec = importlib.util.spec_from_file_location("hypothesis", _stub_path)
+    _stub = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _stub
+    _spec.loader.exec_module(_stub)
+    sys.modules["hypothesis.strategies"] = _stub.strategies
+
+
+def _has_tpu() -> bool:
+    try:
+        return any(d.platform == "tpu" for d in jax.devices())
+    except RuntimeError:
+        return False
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (deselect with -m 'not slow')")
+    config.addinivalue_line(
+        "markers", "tpu: needs real TPU hardware (Pallas non-interpret "
+        "paths); auto-skipped on CPU-only runners")
+
+
+def pytest_collection_modifyitems(config, items):
+    if _has_tpu():
+        return
+    skip_tpu = pytest.mark.skip(
+        reason="no TPU: Pallas non-interpret paths run interpret-mode only")
+    for item in items:
+        if "tpu" in item.keywords:
+            item.add_marker(skip_tpu)
 
 
 @pytest.fixture(scope="session")

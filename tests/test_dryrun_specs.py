@@ -2,17 +2,17 @@
 consistent abstract inputs/state and legal partition specs — no compilation,
 no faked devices (AbstractMesh only)."""
 import jax
-import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import ASSIGNED, get_arch
 from repro.configs.shapes import SHAPES
 from repro.launch import partitioning as PT
 from repro.launch.dryrun import abstract_state, input_specs
+from repro.launch.mesh import abstract_mesh
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh((16, 16), ("data", "model"))
+MESH3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 @pytest.mark.parametrize("arch", ASSIGNED)

@@ -1,5 +1,4 @@
 """Integration: BatchedExecutor + Engine end-to-end on a tiny model."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,7 @@ import pytest
 
 from repro.core import engine as alto
 from repro.core.adapter_state import SlotManager
-from repro.core.early_exit import EarlyExitConfig, ExitReason
+from repro.core.early_exit import EarlyExitConfig
 from repro.core.executor import BatchedExecutor
 from repro.configs.base import TrainConfig
 from repro.data.synthetic import SlotBatcher, make_task_dataset

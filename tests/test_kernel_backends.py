@@ -1,7 +1,6 @@
 """Model-level backend equivalence: full forward/train-step math must be
 identical between the XLA reference paths and the Pallas kernels
 (interpret mode) — attention (flash), linear scan (wkv/ssd), grouped LoRA."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ Co-locating adapters on one backbone must not change any adapter's
 gradients: slot z's grad depends only on slot z's data and params (the base
 is frozen; the per-slot loss is a sum). This is what makes batched
 multi-LoRA training equivalent to sequential training (paper §6.1)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

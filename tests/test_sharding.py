@@ -5,16 +5,17 @@ functions of (mesh shape, leaf shape, path)."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.registry import ASSIGNED, get_arch
 from repro.core import lora as LORA
 from repro.launch import partitioning as PT
+from repro.launch.mesh import abstract_mesh
 from repro.models import model as M
 from repro.optim import adamw
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh((16, 16), ("data", "model"))
+MESH3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_pick_spec_divisibility_fallback():

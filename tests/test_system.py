@@ -1,6 +1,5 @@
 """End-to-end system behaviour: decode==forward consistency across families,
 DPO loss path, HLO analyzer on a synthetic module."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import lora as LORA
-from repro.core.losses import dpo_loss, sft_loss
+from repro.core.losses import dpo_loss
 from repro.models import model as M
 from repro.roofline import hlo as HLO
 from tests.conftest import reduced_f32
