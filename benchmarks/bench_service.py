@@ -1,0 +1,167 @@
+"""Service mode vs batch mode on a dynamic arrival trace, with and without
+profiler feedback.
+
+Paper §4 frames ALTO as LoRA-tuning-as-a-service: tenants submit tasks
+continuously, not as one closed batch. This benchmark replays a
+Poisson-ish arrival trace over the heterogeneous 8-task mix of
+``bench_cluster`` through three policies:
+
+  * batch: wait until the LAST arrival, solve the full-hindsight static
+    plan, execute it literally (what the batch Engine API forces a
+    multi-tenant operator into);
+  * service/analytic: ``TuningService`` admits each task the moment it
+    arrives, re-solving residual placement around it (bounded-delay
+    adoption); durations come from the analytic worst-case profile;
+  * service/fed-back: same trace, but the ``ProfileStore`` carries the
+    realized durations observed in the analytic session — later (and
+    repeated-arch) admissions are scheduled from observed estimates, so
+    the planned schedule demonstrably deviates from the analytic one.
+
+Emits BENCH_service.json with makespans, utilizations, per-task estimated
+durations and realized starts for both service sessions, and a deviation
+summary. ``--smoke`` runs the 4-task instance (CI artifact job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+from bench_cluster import FULL_MIX, SMOKE_MIX, build_workload
+
+from repro.core.service import TuningService
+from repro.sched import profiler
+from repro.sched.cluster import execute_static
+from repro.sched.events import EventKind
+from repro.sched.inter_task import solve
+
+
+def poisson_arrivals(specs, rng, load: float = 0.35):
+    """Cumulative exponential gaps, scaled so the whole trace arrives
+    within ~``load`` of the mean task duration (keeps the cluster
+    contended — tenants trickle in while earlier tasks still run)."""
+    mean_d = float(np.mean([s.duration for s in specs]))
+    gap = load * mean_d / max(len(specs) - 1, 1)
+    ats = np.concatenate([[0.0], np.cumsum(rng.exponential(gap,
+                                                           len(specs) - 1))])
+    return [float(a) for a in ats]
+
+
+def run_service(tasks, arrivals, G: int, store, *, use_feedback: bool,
+                delay_delta: float = 2.0):
+    """One service session over the arrival trace. ``use_feedback=False``
+    schedules every admission from the unscaled analytic worst case (the
+    true analytic baseline) while still *recording* realized durations
+    into ``store``; ``use_feedback=True`` scales admissions by the store's
+    observed ratios."""
+    svc = TuningService(total_gpus=G, delay_delta=delay_delta,
+                        profile_store=store)
+    for (spec, factory, meta), at in zip(tasks, arrivals):
+        svc.submit_spec(spec, factory, at=at,
+                        profile_key=(meta["arch"], meta["gpus"]),
+                        scale_duration=use_feedback)
+    report = svc.run_until_idle()
+    est = {s.name: svc._meta[s.name].spec.duration for s, _, _ in tasks}
+    return {
+        "makespan_s": report.makespan,
+        "utilization": report.utilization,
+        "replans": report.replans,
+        "plans_adopted": report.plans_adopted,
+        "plans_rejected": report.plans_rejected,
+        "arrival_events": sum(1 for e in report.events
+                              if e.kind is EventKind.TASK_ARRIVED),
+        "est_durations": {k: round(v, 4) for k, v in est.items()},
+        "task_starts": {k: round(v, 4)
+                        for k, v in report.task_starts.items()},
+        "task_ends": {k: round(v, 4) for k, v in report.task_ends.items()},
+    }
+
+
+def run(mix, G: int, seed: int = 0) -> dict:
+    tasks = build_workload(mix, seed)
+    specs = [s for s, _, _ in tasks]
+    factories = {s.name: f for s, f, _ in tasks}
+    rng = np.random.default_rng(seed + 1)
+    arrivals = poisson_arrivals(specs, rng)
+    t_last = max(arrivals)
+
+    # batch: wait for the full task set, then the static hindsight plan
+    plan = solve(specs, G, "cp")
+    static = execute_static(plan, G, factories)
+    batch_mk = t_last + static.makespan
+    batch_util = sum(static.gpu_busy) / (G * batch_mk)
+
+    store = profiler.ProfileStore()
+    analytic = run_service(tasks, arrivals, G, store, use_feedback=False)
+    fedback = run_service([(s, f, m) for s, f, m in tasks],
+                          arrivals, G, store, use_feedback=True)
+
+    assert analytic["utilization"] >= batch_util - 1e-9, \
+        "service mode regressed below batch utilization"
+    moved = [n for n in analytic["task_starts"]
+             if abs(analytic["task_starts"][n]
+                    - fedback["task_starts"].get(n, -1.0)) > 1e-6]
+    shrunk = [n for n in analytic["est_durations"]
+              if fedback["est_durations"][n]
+              < analytic["est_durations"][n] - 1e-9]
+    assert shrunk, "profiler feedback did not change any duration estimate"
+
+    return {
+        "G": G,
+        "seed": seed,
+        "num_tasks": len(tasks),
+        "arrivals": {s.name: round(a, 4)
+                     for (s, _, _), a in zip(tasks, arrivals)},
+        "t_last": round(t_last, 4),
+        "tasks": [dict(meta, name=s.name,
+                       est_duration_s=round(s.duration, 4))
+                  for s, _, meta in tasks],
+        "batch": {"makespan_s": batch_mk, "utilization": batch_util,
+                  "hindsight_plan_makespan_s": static.makespan},
+        "service_analytic": analytic,
+        "service_fedback": fedback,
+        "feedback_deviation": {
+            "tasks_with_shrunk_estimate": shrunk,
+            "tasks_with_moved_start": moved,
+            "max_estimate_shrink_frac": max(
+                (1.0 - fedback["est_durations"][n]
+                 / analytic["est_durations"][n]) for n in shrunk),
+        },
+        "speedup_vs_batch": batch_mk / max(analytic["makespan_s"], 1e-12),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small 4-task instance (CI)")
+    ap.add_argument("--gpus", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_service.json")
+    args = ap.parse_args(argv)
+
+    mix = SMOKE_MIX if args.smoke else FULL_MIX
+    result = run(mix, args.gpus, args.seed)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    b, a, fb = (result["batch"], result["service_analytic"],
+                result["service_fedback"])
+    print(f"batch (wait for all)    : {b['makespan_s']:.3f}s "
+          f"(util {b['utilization']:.2%})")
+    print(f"service (analytic)      : {a['makespan_s']:.3f}s "
+          f"(util {a['utilization']:.2%}, {a['replans']} replans)")
+    print(f"service (fed-back)      : {fb['makespan_s']:.3f}s "
+          f"(util {fb['utilization']:.2%}, {fb['replans']} replans)")
+    dev = result["feedback_deviation"]
+    print(f"feedback deviation      : {len(dev['tasks_with_shrunk_estimate'])}"
+          f" estimates shrunk (max {dev['max_estimate_shrink_frac']:.0%}), "
+          f"{len(dev['tasks_with_moved_start'])} starts moved")
+    print(f"speedup vs batch        : {result['speedup_vs_batch']:.2f}x")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

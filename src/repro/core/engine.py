@@ -29,7 +29,7 @@ from repro.core.executor import BatchedExecutor, TaskResult
 from repro.data.synthetic import TaskDataset, make_task_dataset
 from repro.models import model as M
 from repro.sched import profiler
-from repro.sched.cluster import ElasticClusterRuntime, ExecutorTaskDriver
+from repro.sched.cluster import ExecutorTaskDriver
 from repro.sched.events import ProgressEvent
 from repro.sched.inter_task import Schedule, TaskSpec, solve
 from repro.sched.intra_task import fit_memory_model
@@ -93,21 +93,25 @@ class EngineReport:
     schedule: Schedule
     makespan_estimate: float
     wall_time_s: float
-    # elastic-execution observability (None on the static path)
+    # execution observability — populated on BOTH paths (static fills
+    # utilization from the plan's area and has zero replans / no events)
     execution: str = "static"
     virtual_makespan: Optional[float] = None
-    utilization: Optional[float] = None
+    utilization: float = 0.0
     replans: int = 0
-    events: Optional[List[ProgressEvent]] = None
+    events: List[ProgressEvent] = dataclasses.field(default_factory=list)
 
 
 class Engine:
     def __init__(self, strategy: str = "adapter_parallel",
-                 total_gpus: int = 8, eval_every: int = 5):
+                 total_gpus: int = 8, eval_every: int = 5,
+                 profile_store: Optional[profiler.ProfileStore] = None):
         assert strategy in ("adapter_parallel", "single_gpu")
         self.strategy = strategy
         self.total_gpus = total_gpus
         self.eval_every = eval_every
+        self.profile_store = (profile_store if profile_store is not None
+                              else profiler.ProfileStore())
         self._param_cache: Dict[str, Dict] = {}
         self._dataset_cache: Dict[str, TaskDataset] = {}
 
@@ -138,15 +142,39 @@ class Engine:
         return int(z)
 
     # ---- profiling + inter-task scheduling ---------------------------------
-    def profile(self, task: Task,
-                early_exit: EarlyExitConfig = EarlyExitConfig()) -> TaskSpec:
+    def profile_key(self, task: Task) -> tuple:
+        """ProfileStore key: feedback generalizes across tasks that share a
+        base model and GPU demand (what step time and lifecycle shrink
+        actually depend on)."""
+        return (task.model_config().name, task.num_gpus)
+
+    def profiled_step_time(self, task: Task) -> float:
+        """Analytic per-step seconds driving the virtual timeline. Kept
+        analytic on purpose: for real executors the realized virtual step
+        time IS this value, so "observing" it would be circular, and wall
+        step times live on a different clock (`ProfileStore.
+        wall_step_time`). Duration feedback flows through the store's
+        realized/worst-case ratio instead."""
         cfg = task.model_config()
         jobs = task.jobs()
         bsz = max(tc.per_adapter_batch for tc in jobs.values())
         Z = self.pick_slots(task)
         ds = self._dataset(task)
-        seq = ds.train.shape[1] - 1
-        prof = profiler.profile_task(cfg, Z, bsz, seq, task.num_gpus)
+        return profiler.profile_task(cfg, Z, bsz, ds.train.shape[1] - 1,
+                                     task.num_gpus).step_time_s
+
+    def profile_raw(self, task: Task,
+                    early_exit: EarlyExitConfig = EarlyExitConfig()
+                    ) -> TaskSpec:
+        """Worst-case TaskSpec (no duration feedback), analytic step time.
+        Cached per (task name, early-exit config) in the ProfileStore so
+        schedule() and batched_execution() profile each task once."""
+        cache_key = (task.task_name, early_exit, "raw")
+        hit = self.profile_store.get_spec(cache_key)
+        if hit is not None:
+            return hit
+        jobs = task.jobs()
+        Z = self.pick_slots(task)
         # duration: warmup waves for all K + full budget for the retained
         # top-k survivors (the scheduler's worst case: no pattern exits;
         # Pattern-3 selection is deterministic so it IS the worst case).
@@ -156,9 +184,24 @@ class Engine:
         warmup = early_exit.warmup_steps(task.max_steps)
         steps = profiler.lifecycle_steps(K, Z, warmup, task.max_steps,
                                          survivors=early_exit.top_k(K))
-        dur = profiler.residual_duration(steps, prof.step_time_s)
-        return TaskSpec(name=task.task_name, duration=dur,
+        dur = profiler.residual_duration(steps, self.profiled_step_time(task))
+        spec = TaskSpec(name=task.task_name, duration=max(dur, 1e-9),
                         gpus=task.num_gpus)
+        self.profile_store.put_spec(cache_key, spec)
+        return spec
+
+    def profile(self, task: Task,
+                early_exit: EarlyExitConfig = EarlyExitConfig()) -> TaskSpec:
+        """TaskSpec for the inter-task solver: the worst case scaled by the
+        ProfileStore's observed realized/worst-case ratio, so later
+        schedules in a session use feedback instead of the analytic
+        estimate."""
+        raw = self.profile_raw(task, early_exit)
+        scaled = self.profile_store.scaled_duration(
+            self.profile_key(task), raw.duration)
+        if scaled == raw.duration:
+            return raw
+        return dataclasses.replace(raw, duration=scaled)
 
     def schedule(self, tasks: Sequence[Task], method: str = "cp",
                  early_exit: EarlyExitConfig = EarlyExitConfig()
@@ -187,16 +230,28 @@ class Engine:
             ee=early_exit, eval_every=self.eval_every, seed=task.seed,
             loss_kind=task.loss_kind)
 
+    def executor_driver_factory(self, task: Task,
+                                early_exit: EarlyExitConfig):
+        """Driver factory for the elastic runtime / tuning service: wraps a
+        freshly built BatchedExecutor in an ExecutorTaskDriver converting
+        executor steps to virtual seconds at the profiled step time."""
+        def factory():
+            return ExecutorTaskDriver(
+                task.task_name, self._make_executor(task, early_exit),
+                task.jobs(), task.max_steps, self.profiled_step_time(task))
+        return factory
+
     def batched_execution(self, tasks: Sequence[Task], schedule: Schedule,
                           early_exit: EarlyExitConfig = EarlyExitConfig(),
                           strategy: str = "elastic") -> EngineReport:
         """Execute every task and return best adapters.
 
-        strategy="elastic" (default): the elastic cluster runtime steps all
-        scheduled tasks in bounded chunks over a virtual G-GPU cluster,
-        replanning the pending queue whenever an early-exit event shrinks a
-        task's residual duration — freed capacity is reclaimed immediately
-        (paper §7.2). strategy="static" keeps the precomputed plan for A/B:
+        Since the service redesign this is a thin wrapper over a one-shot
+        ``TuningService`` session: every task is submitted at t=0 and the
+        session is drained to idle. strategy="elastic" (default) runs the
+        event loop with the strict anomaly-safe adoption rule
+        (delay_delta=None), preserving the elastic<=static makespan
+        guarantee; strategy="static" keeps the precomputed plan for A/B:
         tasks run to completion in schedule start order and the makespan
         estimate is the plan's worst case.
 
@@ -216,13 +271,19 @@ class Engine:
                 ex = self._make_executor(task, early_exit)
                 results[task.task_name] = ex.run_task(
                     task.task_name, task.jobs(), task.max_steps)
+            area = sum(p.task.duration * p.task.gpus
+                       for p in schedule.placements)
+            util = (area / (self.total_gpus * schedule.makespan)
+                    if schedule.makespan > 0 else 0.0)
             return EngineReport(
                 task_results=results, schedule=schedule,
                 makespan_estimate=schedule.makespan,
                 wall_time_s=time.time() - t0,
-                execution="static", virtual_makespan=schedule.makespan)
+                execution="static", virtual_makespan=schedule.makespan,
+                utilization=util)
 
-        runtime = ElasticClusterRuntime(self.total_gpus)
+        from repro.core.service import TuningService
+        service = TuningService(engine=self, delay_delta=None)
         for placement in schedule.placements:
             task = by_name[placement.task.name]
             # The schedule may have been solved under a different
@@ -230,28 +291,15 @@ class Engine:
             # shape the lifecycle). Seed the runtime's residual estimate
             # with the worst case of both so it stays a true upper bound —
             # otherwise the replanner would project GPUs free too early.
-            exec_spec = self.profile(task, early_exit)
+            # (raw: the service applies the feedback scale exactly once)
+            exec_spec = self.profile_raw(task, early_exit)
             spec = dataclasses.replace(
                 placement.task,
                 duration=max(placement.task.duration, exec_spec.duration))
-
-            def factory(task: Task = task):
-                cfg = task.model_config()
-                Z = self.pick_slots(task)
-                jobs = task.jobs()
-                bsz = max(tc.per_adapter_batch for tc in jobs.values())
-                ds = self._dataset(task)
-                prof = profiler.profile_task(cfg, Z, bsz,
-                                             ds.train.shape[1] - 1,
-                                             task.num_gpus)
-                return ExecutorTaskDriver(
-                    task.task_name, self._make_executor(task, early_exit),
-                    jobs, task.max_steps, prof.step_time_s)
-
-            runtime.submit(spec, factory)
-        report = runtime.run(initial=schedule)
+            service.submit(task, at=0.0, early_exit=early_exit, spec=spec)
+        report = service.run_until_idle(initial=schedule)
         return EngineReport(
-            task_results=dict(report.results), schedule=schedule,
+            task_results=dict(report.task_results), schedule=schedule,
             makespan_estimate=schedule.makespan,
             wall_time_s=time.time() - t0,
             execution="elastic", virtual_makespan=report.makespan,

@@ -49,6 +49,7 @@ class ChunkReport:
     events: Tuple[ProgressEvent, ...]
     phase: str
     remaining_steps_bound: int
+    wall_time_s: float = 0.0     # realized host seconds (profiler feedback)
 
 
 @dataclasses.dataclass
@@ -104,6 +105,7 @@ class BatchedExecutor:
         self._queue: List[Tuple[str, TrainConfig]] = []
         self._budget: Optional[int] = None
         # chunked-execution state (see run_task_chunks)
+        self._chunk_wall = 0.0
         self._chunk_events: List[ProgressEvent] = []
         self._task_name = ""
         self._phase = "idle"
@@ -121,6 +123,7 @@ class BatchedExecutor:
     # ------------------------------------------------------------------ util
     def _run_steps(self, n: int, step_offset: Dict[str, int]) -> None:
         """Train all active slots for n steps, with eval/pattern checks."""
+        t0 = time.time()
         for i in range(n):
             batch = {k: jnp.asarray(v)
                      for k, v in self.batcher.next_batch_dict().items()}
@@ -144,6 +147,10 @@ class BatchedExecutor:
                             step=step_offset[job]))
                         self.slots.evict(slot)
                         self._backfill(slot)
+        # accumulate actual train/eval host time only — flush-to-flush
+        # deltas would also bill time the generator spent suspended while
+        # other tasks' chunks executed
+        self._chunk_wall += time.time() - t0
 
     def _eval_and_detect(self, step_offset: Dict[str, int]) -> None:
         batch = {k: jnp.asarray(v)
@@ -210,9 +217,11 @@ class BatchedExecutor:
 
     def _flush_chunk(self, steps: int) -> ChunkReport:
         events, self._chunk_events = tuple(self._chunk_events), []
+        wall, self._chunk_wall = self._chunk_wall, 0.0
         return ChunkReport(steps_executed=steps, events=events,
                            phase=self._phase,
-                           remaining_steps_bound=self.remaining_steps_bound())
+                           remaining_steps_bound=self.remaining_steps_bound(),
+                           wall_time_s=wall)
 
     def run_task_chunks(self, task_name: str, jobs: Dict[str, TrainConfig],
                         total_steps: int):
@@ -221,6 +230,7 @@ class BatchedExecutor:
         can interleave many tasks and replan on the events each chunk
         surfaces. ``return``s the TaskResult (StopIteration.value)."""
         t0 = time.time()
+        self._chunk_wall = 0.0
         K = len(jobs)
         warmup = self.ee.warmup_steps(total_steps)
         self.monitors = {j: JobMonitor(self.ee, j) for j in jobs}

@@ -1,0 +1,342 @@
+"""ALTO as a long-lived tuning service (paper §4: LoRA-tuning-as-a-service).
+
+The batch ``Engine`` API hands over a closed task list and waits for one
+terminal report. ``TuningService`` is the multi-tenant redesign: tenants
+``submit(task, at=...)`` at any virtual time — including while the cluster
+is mid-execution — and get back a ``TaskHandle`` with ``status()``,
+``result()``, ``cancel()``, and a per-task event ``stream()``. The service
+owns an ``ElasticClusterRuntime`` session (``sched/cluster.py``) that
+admits arrivals into the running event loop, re-solves residual placement
+around them (release-constrained), and applies the bounded-delay plan
+adoption rule.
+
+    svc = TuningService(total_gpus=8)
+    h = svc.submit(task_a)                       # t = 0
+    h2 = svc.submit(task_b, at=120.0)            # arrives mid-session
+    h2.cancel(at=300.0)                          # tenant withdraws
+    best = h.result()                            # drives the loop to done
+    report = svc.run_until_idle()
+
+The service also closes the profiler feedback loop (ROADMAP item): every
+completed task records its realized duration, virtual step time, and wall
+step time into a ``ProfileStore`` shared with the engine's profiler, so
+later admissions in the same session are scheduled from observed rather
+than analytic estimates.
+
+Time is *virtual cluster time* (the same timeline the elastic runtime and
+benchmarks use): ``submit``/``cancel`` enqueue events, and the loop only
+advances when driven via ``run_until_idle()``, ``handle.result()``, or
+``handle.stream()``. On this single-host container training executes
+sequentially either way, so the virtual timeline is observationally
+identical to live stepping — which is what makes the service testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+from repro.core.early_exit import EarlyExitConfig
+from repro.sched import profiler
+from repro.sched.cluster import (ElasticClusterRuntime, RuntimeReport,
+                                 TaskDriver)
+from repro.sched.events import ProgressEvent
+from repro.sched.inter_task import Schedule, TaskSpec
+
+
+class TaskState(enum.Enum):
+    PENDING = "pending"        # submitted, not yet started (or not arrived)
+    RUNNING = "running"
+    COMPLETED = "completed"
+    CANCELLED = "cancelled"
+
+    @property
+    def terminal(self) -> bool:
+        return self in (TaskState.COMPLETED, TaskState.CANCELLED)
+
+
+class TaskCancelled(Exception):
+    """Raised by ``TaskHandle.result()`` when the task was cancelled."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskStatus:
+    name: str
+    state: TaskState
+    submitted_at: float
+    started_at: Optional[float]
+    finished_at: Optional[float]
+    now: float                 # virtual cluster time of this snapshot
+
+
+@dataclasses.dataclass
+class _TaskMeta:
+    spec: TaskSpec               # as admitted (feedback scale applied)
+    unscaled_duration: float     # worst-case estimate feedback records vs
+    submitted_at: float
+    profile_key: Optional[Tuple]
+    driver: Optional[TaskDriver] = None
+
+
+class TaskHandle:
+    """Tenant-side view of one submitted task."""
+
+    def __init__(self, service: "TuningService", name: str):
+        self._svc = service
+        self.name = name
+
+    def status(self) -> TaskStatus:
+        return self._svc.status(self.name)
+
+    def events(self) -> List[ProgressEvent]:
+        """Events recorded so far for this task (does not drive the loop)."""
+        return [e for e in self._svc._runtime_events()
+                if e.task == self.name]
+
+    def stream(self) -> Iterator[ProgressEvent]:
+        """Yield this task's events as they fire, driving the service loop
+        until the task reaches a terminal state."""
+        seen = 0
+        while True:
+            evs = self._svc._runtime_events()
+            for e in evs[seen:]:
+                if e.task == self.name:
+                    yield e
+            seen = len(evs)
+            if self.status().state.terminal or not self._svc._step():
+                break
+        for e in self._svc._runtime_events()[seen:]:
+            if e.task == self.name:
+                yield e
+
+    def result(self) -> Any:
+        """Drive the service until this task is terminal; return its result
+        (a ``TaskResult`` for engine tasks, the driver result otherwise).
+        Raises ``TaskCancelled`` if the task was cancelled."""
+        self._svc._drive(lambda: self.status().state.terminal)
+        st = self.status().state
+        if st is TaskState.CANCELLED:
+            raise TaskCancelled(self.name)
+        return self._svc._results()[self.name]
+
+    def cancel(self, at: Optional[float] = None) -> bool:
+        return self._svc.cancel(self.name, at=at)
+
+
+@dataclasses.dataclass
+class ServiceReport:
+    """Terminal report of one service session (superset of the runtime's)."""
+    task_results: Dict[str, Any]
+    makespan: float
+    utilization: float
+    replans: int
+    plans_adopted: int
+    plans_rejected: int
+    events: List[ProgressEvent]
+    cancelled: Tuple[str, ...]
+    task_starts: Dict[str, float]
+    task_ends: Dict[str, float]
+    runtime: RuntimeReport
+
+
+class TuningService:
+    """Long-lived multi-tenant LoRA tuning service (see module docstring).
+
+    ``delay_delta`` tunes plan adoption: ``None`` keeps the strict
+    anomaly-safe rule (never start a task later than its incumbent bound —
+    what batch mode uses for the elastic<=static guarantee); a float δ
+    enables the bounded-delay rule (accept a delaying plan only when the
+    projected makespan win is at least δ·max_delay, regret fallback
+    otherwise), which is the right trade once arrivals make strictness
+    systematically conservative.
+    """
+
+    def __init__(self, total_gpus: Optional[int] = None,
+                 strategy: Optional[str] = None,
+                 eval_every: Optional[int] = None,
+                 method: str = "cp", delay_delta: Optional[float] = 2.0,
+                 profile_store: Optional[profiler.ProfileStore] = None,
+                 engine=None):
+        if engine is None:
+            from repro.core.engine import Engine
+            engine = Engine(strategy=strategy or "adapter_parallel",
+                            total_gpus=total_gpus or 8,
+                            eval_every=eval_every or 5,
+                            profile_store=profile_store)
+        else:
+            # an explicit engine carries its own configuration; reject
+            # conflicting explicit args instead of silently ignoring them
+            if total_gpus is not None and total_gpus != engine.total_gpus:
+                raise ValueError(f"total_gpus={total_gpus} conflicts with "
+                                 f"engine.total_gpus={engine.total_gpus}")
+            if strategy is not None and strategy != engine.strategy:
+                raise ValueError("strategy conflicts with engine.strategy")
+            if eval_every is not None and eval_every != engine.eval_every:
+                raise ValueError("eval_every conflicts with "
+                                 "engine.eval_every")
+        self.engine = engine
+        self.profile_store = engine.profile_store
+        self.total_gpus = engine.total_gpus
+        self._runtime = ElasticClusterRuntime(
+            engine.total_gpus, method=method, delay_delta=delay_delta)
+        self._meta: Dict[str, _TaskMeta] = {}
+        self._handles: Dict[str, TaskHandle] = {}
+        self._recorded: set = set()
+        self._fb_seen = 0
+        self._pre_cancels: List[Tuple[str, Optional[float]]] = []
+
+    # ------------------------------------------------------------ admission
+    def submit(self, task, at: float = 0.0,
+               early_exit: EarlyExitConfig = EarlyExitConfig(),
+               spec: Optional[TaskSpec] = None) -> TaskHandle:
+        """Submit an ``engine.Task`` at virtual time ``at``. Profiling
+        consults the session's ``ProfileStore``, so durations reflect any
+        feedback already observed. ``spec`` overrides the profiled spec
+        with a worst-case estimate that is used verbatim (the engine's
+        batch wrapper relies on it staying a true residual upper bound for
+        the elastic<=static guarantee); profiled submissions apply the
+        feedback scale exactly once, in ``submit_spec``."""
+        explicit = spec is not None
+        if spec is None:
+            spec = self.engine.profile_raw(task, early_exit)
+        factory = self.engine.executor_driver_factory(task, early_exit)
+        return self.submit_spec(
+            spec, factory, at=at, profile_key=self.engine.profile_key(task),
+            scale_duration=not explicit)
+
+    def submit_spec(self, spec: TaskSpec,
+                    driver_factory: Callable[[], TaskDriver],
+                    at: float = 0.0, profile_key: Optional[Tuple] = None,
+                    scale_duration: bool = True) -> TaskHandle:
+        """Low-level admission: any ``TaskDriver`` factory (simulated
+        drivers for benchmarks / property tests). When ``profile_key`` is
+        given and ``scale_duration`` is on, the estimated duration is
+        rescaled by the store's observed realized/estimated ratio for that
+        key — the feedback loop. Feedback is always *recorded* against the
+        unscaled estimate so the ratio never compounds."""
+        name = spec.name
+        assert name not in self._meta, f"duplicate task name {name}"
+        unscaled = spec.duration
+        if profile_key is not None and scale_duration:
+            spec = dataclasses.replace(
+                spec, duration=self.profile_store.scaled_duration(
+                    profile_key, spec.duration))
+        meta = _TaskMeta(spec=spec, unscaled_duration=unscaled,
+                         submitted_at=max(at, self.now),
+                         profile_key=profile_key)
+
+        def wrapped() -> TaskDriver:
+            drv = driver_factory()
+            meta.driver = drv            # kept for wall-time feedback
+            return drv
+
+        self._runtime.submit(spec, wrapped, at=at)
+        self._meta[name] = meta
+        handle = TaskHandle(self, name)
+        self._handles[name] = handle
+        return handle
+
+    def cancel(self, name: str, at: Optional[float] = None) -> bool:
+        assert name in self._meta, f"unknown task {name}"
+        if not self._runtime._live:
+            # session not started: queue the cancellation — beginning the
+            # loop here would lock out a later run_until_idle(initial=...)
+            self._pre_cancels.append((name, at))
+            return True
+        return self._runtime.cancel(name, at=at)
+
+    # ------------------------------------------------------------ the loop
+    @property
+    def now(self) -> float:
+        return self._runtime.now
+
+    def _ensure_live(self, initial: Optional[Schedule] = None) -> None:
+        if not self._runtime._live:
+            self._runtime.begin(initial)
+            pre, self._pre_cancels = self._pre_cancels, []
+            for name, at in pre:
+                self._runtime.cancel(name, at=at)
+        else:
+            assert initial is None, "session already live"
+
+    def _step(self) -> bool:
+        self._ensure_live()
+        more = self._runtime.step()
+        self._feedback()
+        return more
+
+    def _drive(self, done: Callable[[], bool]) -> None:
+        self._ensure_live()
+        while not done() and self._step():
+            pass
+
+    def run_until_idle(self, initial: Optional[Schedule] = None
+                       ) -> ServiceReport:
+        """Drain every admitted task (arrivals included) and report.
+        The session stays open: later ``submit``s re-activate the loop."""
+        self._ensure_live(initial)
+        while self._step():
+            pass
+        rt = self._runtime.report()
+        return ServiceReport(
+            task_results=dict(rt.results), makespan=rt.makespan,
+            utilization=rt.utilization, replans=rt.replans,
+            plans_adopted=rt.plans_adopted,
+            plans_rejected=rt.plans_rejected, events=list(rt.events),
+            cancelled=rt.cancelled, task_starts=dict(rt.task_starts),
+            task_ends=dict(rt.task_ends), runtime=rt)
+
+    # ------------------------------------------------------------ feedback
+    def _feedback(self) -> None:
+        """Record realized durations/step times of newly finished tasks
+        into the ProfileStore (the profiler feedback loop)."""
+        ends = self._runtime.task_end_times
+        if len(ends) == self._fb_seen:      # no new completions: stay O(1)
+            return
+        self._fb_seen = len(ends)
+        starts = self._runtime.task_start_times
+        for name, end in ends.items():
+            if name in self._recorded or self._runtime.is_cancelled(name):
+                continue
+            self._recorded.add(name)
+            meta = self._meta[name]
+            if meta.profile_key is None:
+                continue
+            wall = None
+            if meta.driver is not None:
+                obs = getattr(meta.driver, "observed_wall_step_s", None)
+                wall = obs() if callable(obs) else None
+            self.profile_store.record(
+                meta.profile_key,
+                realized_duration=end - starts[name],
+                estimated_duration=meta.unscaled_duration,
+                wall_step_time_s=wall)
+
+    # ------------------------------------------------------------ status
+    def status(self, name: str) -> TaskStatus:
+        assert name in self._meta, f"unknown task {name}"
+        meta = self._meta[name]
+        rt = self._runtime
+        started = rt.task_start_times.get(name) if rt._live else None
+        ended = rt.task_end_times.get(name) if rt._live else None
+        if rt._live and rt.is_cancelled(name):
+            state = TaskState.CANCELLED
+        elif ended is not None:
+            state = TaskState.COMPLETED
+        elif started is not None:
+            state = TaskState.RUNNING
+        else:
+            state = TaskState.PENDING
+        return TaskStatus(name=name, state=state,
+                          submitted_at=meta.submitted_at,
+                          started_at=started, finished_at=ended,
+                          now=self.now)
+
+    def handles(self) -> List[TaskHandle]:
+        return list(self._handles.values())
+
+    def _runtime_events(self) -> List[ProgressEvent]:
+        return self._runtime.event_log if self._runtime._live else []
+
+    def _results(self) -> Dict[str, Any]:
+        return self._runtime.results_map

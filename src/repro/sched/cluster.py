@@ -18,9 +18,11 @@ divergence/overfit exit, completion), the runtime
 
 Anomaly safety: greedy replanning under shrinking durations is vulnerable
 to Graham list-scheduling anomalies (a "better" plan under estimates can
-realize worse). The runtime therefore only *adopts* a re-solved plan when
-it starts every pending task no later than the task's static planned start
-(``s_j``). Together with non-delay dispatch this yields the hard guarantee
+realize worse). With ``delay_delta=None`` (the default, and what the
+batch-mode engine path uses) the runtime only *adopts* a re-solved plan
+when it starts every pending task no later than the task's incumbent
+planned start (``s_j``). Together with non-delay dispatch this yields the
+hard guarantee
 
     realized start(j) <= s_j  for every task j
     => elastic makespan = max_j(start_j + actual_j)
@@ -28,6 +30,25 @@ it starts every pending task no later than the task's static planned start
 
 on every instance whose actual durations never exceed the estimates — which
 holds structurally for ALTO tasks, where events only remove work.
+
+Service sessions (dynamic arrivals) instead use the **bounded-delay
+adoption rule** (``delay_delta=δ``): a candidate plan that delays some
+pending task past its incumbent bound by ``max_delay`` is adopted only if
+its projected makespan beats the regret fallback's by at least
+``δ * max_delay``; otherwise the fallback — incumbent placements untouched,
+new arrivals appended over the projected skyline — is adopted. Every unit
+of promised delay is therefore bought by at least δ units of projected
+makespan win, and a task's bound moves only when that price was paid, so
+the plan's projected makespan is non-increasing between arrivals and the
+session never does worse than the never-delay (anomaly-safe) policy by
+more than the sum of bought delays — each of which shrank the projection
+by δ× more than it cost.
+
+The runtime is an incremental *session*: ``begin()`` opens the event loop,
+``step()`` advances it by one event (an arrival, a cancellation, or one
+driver chunk), ``submit(..., at=...)`` and ``cancel(...)`` may be called
+while the loop is live, and ``report()`` snapshots the state at idle.
+``run()`` keeps the original one-shot semantics (begin, drain, report).
 
 Drivers decouple the runtime from what a "task" is:
 
@@ -45,7 +66,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 from repro.core.early_exit import EarlyExitConfig
 from repro.sched.events import EventKind, ProgressEvent
 from repro.sched.inter_task import (Placement, Schedule, TaskSpec,
-                                    diff_schedules, solve, solve_residual)
+                                    diff_schedules, lpt_schedule, solve,
+                                    solve_residual)
 
 _EPS = 1e-9
 
@@ -102,199 +124,453 @@ class RuntimeReport:
     results: Dict[str, Any]
     task_starts: Dict[str, float]
     task_ends: Dict[str, float]
+    cancelled: Tuple[str, ...] = ()
 
     def per_gpu_utilization(self) -> List[float]:
         mk = max(self.makespan, _EPS)
         return [b / mk for b in self.gpu_busy]
 
 
+@dataclasses.dataclass(frozen=True)
+class _Submission:
+    spec: TaskSpec
+    factory: Callable[[], TaskDriver]
+    at: float
+
+
 class ElasticClusterRuntime:
-    """Event loop over a simulated G-GPU cluster (see module docstring)."""
+    """Incremental event-loop session over a simulated G-GPU cluster (see
+    module docstring). ``run()`` is the one-shot batch entry; the service
+    drives ``begin()``/``step()`` directly and injects ``submit(at=...)``
+    arrivals and ``cancel()`` requests while the loop is live."""
 
     def __init__(self, G: int, method: str = "cp", bnb_max_n: int = 9,
-                 validate: bool = True, max_zero_chunks: int = 10_000):
+                 validate: bool = True, max_zero_chunks: int = 10_000,
+                 delay_delta: Optional[float] = None):
         self.G = G
         self.method = method
         self.bnb_max_n = bnb_max_n
         self.validate = validate
         self.max_zero_chunks = max_zero_chunks
-        self._submitted: List[Tuple[TaskSpec, Callable[[], TaskDriver]]] = []
+        self.delay_delta = delay_delta
+        self.now = 0.0
+        self._subs: List[_Submission] = []
+        self._by_name: Dict[str, _Submission] = {}
+        self._live = False
+        self._seq = 0
 
+    # ---------------------------------------------------------- admission
     def submit(self, spec: TaskSpec,
-               driver_factory: Callable[[], TaskDriver]) -> None:
+               driver_factory: Callable[[], TaskDriver],
+               at: float = 0.0) -> None:
+        """Queue a task. Before ``begin()`` this only records it (duplicate
+        names surface at ``begin``, preserving batch semantics); on a live
+        session it becomes an arrival event at virtual time ``at`` (clamped
+        to now) that the next ``step()`` admits into the running loop."""
         assert spec.gpus <= self.G, f"{spec.name} needs {spec.gpus} > {self.G}"
-        self._submitted.append((spec, driver_factory))
+        if not self._live:
+            sub = _Submission(spec, driver_factory, max(at, 0.0))
+            self._subs.append(sub)
+            return
+        name = spec.name
+        assert name not in self._by_name, f"duplicate task name {name}"
+        at = max(at, self.now)
+        sub = _Submission(dataclasses.replace(spec, release=at),
+                          driver_factory, at)
+        self._by_name[name] = sub           # _subs was consumed by begin()
+        self._future[name] = at
+        self._push_ctrl(at, "arrive", name)
 
-    # ------------------------------------------------------------------ run
-    def run(self, initial: Optional[Schedule] = None) -> RuntimeReport:
-        specs = [s for s, _ in self._submitted]
-        names = [s.name for s in specs]
+    def cancel(self, name: str, at: Optional[float] = None) -> bool:
+        """Schedule cancellation of a task at virtual time ``at`` (default:
+        now). Cancelling a running task frees its GPUs and triggers a
+        replan; a pending / not-yet-arrived task is simply withdrawn.
+        Returns False when the task is already terminal."""
+        assert self._live, "cancel() requires a live session (begin/run)"
+        assert name in self._by_name, f"unknown task {name}"
+        if name in self._results or name in self._cancel_set:
+            return False
+        at = self.now if at is None else max(at, self.now)
+        self._push_ctrl(at, "cancel", name)
+        return True
+
+    def _push_ctrl(self, at: float, kind: str, name: str) -> None:
+        self._seq += 1
+        heapq.heappush(self._ctrl, (at, self._seq, kind, name))
+
+    # ---------------------------------------------------------- session
+    def begin(self, initial: Optional[Schedule] = None) -> None:
+        """Open the event loop: plan + admit the t<=0 batch, queue future
+        arrivals. ``initial`` (batch mode) supplies the static plan whose
+        starts become the anomaly-safety bounds."""
+        assert not self._live, "session already live"
+        names = [s.spec.name for s in self._subs]
         assert len(set(names)) == len(names), "duplicate task names"
-        static = initial if initial is not None else solve(
-            specs, self.G, self.method)
-        if self.validate:
-            static.validate(self.G)
-        by_name = {s.name: (s, f) for s, f in self._submitted}
-        assert set(p.task.name for p in static.placements) == set(names), \
-            "schedule does not cover the submitted task set"
+        self._by_name = {s.spec.name: s for s in self._subs}
+        batch = [s for s in self._subs if s.at <= 0.0]
+        future = [s for s in self._subs if s.at > 0.0]
 
-        # static planned starts = the per-task admission bounds (anomaly
-        # safety) and the incumbent pending plan
-        s_bound = {p.task.name: p.start for p in static.placements}
-        plan: Dict[str, Tuple[float, Tuple[int, ...]]] = {
-            p.task.name: (p.start, p.gpu_ids) for p in static.placements}
+        self._owner: List[Optional[str]] = [None] * self.G
+        self._running: Dict[str, _Running] = {}
+        self._pending = {s.spec.name for s in batch}
+        self._heap: List[Tuple[float, str]] = []
+        self._ctrl: List[Tuple[float, int, str, str]] = []
+        self._future: Dict[str, float] = {}
+        self._events: List[ProgressEvent] = []
+        self._results: Dict[str, Any] = {}
+        self._task_starts: Dict[str, float] = {}
+        self._task_ends: Dict[str, float] = {}
+        self._realized: List[Placement] = []
+        self._gpu_busy = [0.0] * self.G
+        self._replans = self._adopted = self._rejected = 0
+        self._cancel_set: set = set()
+        self._bounds: Dict[str, float] = {}
+        self._plan: Dict[str, Tuple[float, Tuple[int, ...]]] = {}
+        self.now = 0.0
+        self._live = True
 
-        owner: List[Optional[str]] = [None] * self.G
-        running: Dict[str, _Running] = {}
-        pending = set(names)
-        heap: List[Tuple[float, str]] = []
-        events: List[ProgressEvent] = []
-        results: Dict[str, Any] = {}
-        task_starts: Dict[str, float] = {}
-        task_ends: Dict[str, float] = {}
-        realized: List[Placement] = []
-        gpu_busy = [0.0] * self.G
-        replans = adopted = rejected = 0
-
-        for name in sorted(pending):
-            events.append(ProgressEvent(
-                kind=EventKind.TASK_SUBMITTED, task=name, time=0.0))
-
-        def proj_skyline(T: float) -> List[float]:
-            """Per-GPU projected free time: running tasks keep their GPUs
-            until local_time + residual; free GPUs are free at T."""
-            sky = [T] * self.G
-            for r in running.values():
-                end = max(r.local_time + r.residual, T)
-                for g in r.gpu_ids:
-                    sky[g] = end
-            return sky
-
-        def replan(T: float) -> None:
-            nonlocal replans, adopted, rejected
-            if not pending:
-                return
-            replans += 1
-            resid = [dataclasses.replace(
-                by_name[n][0], duration=max(plan_resid(n), _EPS))
-                for n in sorted(pending)]
-            cand = solve_residual(resid, self.G, proj_skyline(T),
-                                  self.method, self.bnb_max_n)
+        if batch:
+            static = initial if initial is not None else solve(
+                [s.spec for s in batch], self.G, self.method)
             if self.validate:
-                cand.validate(self.G)
-            ok = all(p.start <= s_bound[p.task.name] + _EPS
-                     for p in cand.placements)
-            if ok:
-                old = Schedule(
-                    [Placement(by_name[n][0], plan[n][0], plan[n][1])
-                     for n in sorted(pending)], 0.0, False, 0.0)
-                moved = sum(d.moved_earlier
-                            for d in diff_schedules(old, cand))
-                for p in cand.placements:
-                    plan[p.task.name] = (p.start, p.gpu_ids)
-                adopted += 1
-                events.append(ProgressEvent(
-                    kind=EventKind.REPLAN, task="", time=T,
-                    reason="adopted", detail=f"moved_earlier={moved}"))
-            else:
-                rejected += 1
-                events.append(ProgressEvent(
-                    kind=EventKind.REPLAN, task="", time=T,
-                    reason="rejected", detail="would delay past static start"))
+                static.validate(self.G)
+            assert (set(p.task.name for p in static.placements)
+                    == self._pending), \
+                "schedule does not cover the submitted task set"
+            # static planned starts = the per-task admission bounds (anomaly
+            # safety) and the incumbent pending plan
+            for p in static.placements:
+                self._bounds[p.task.name] = p.start
+                self._plan[p.task.name] = (p.start, p.gpu_ids)
+        else:
+            assert initial is None or not initial.placements
 
-        def plan_resid(name: str) -> float:
-            # pending tasks have done no work: residual = estimated duration
-            return by_name[name][0].duration
+        for name in sorted(self._pending):
+            self._events.append(ProgressEvent(
+                kind=EventKind.TASK_SUBMITTED, task=name, time=0.0))
+        for s in future:
+            self._future[s.spec.name] = s.at
+            self._by_name[s.spec.name] = dataclasses.replace(
+                s, spec=dataclasses.replace(s.spec, release=s.at))
+            self._push_ctrl(s.at, "arrive", s.spec.name)
 
-        def admit(T: float) -> None:
-            """Start every pending task whose planned GPUs are free, in
-            planned-start order; earlier-planned tasks reserve their GPUs
-            so later tasks cannot cause priority inversion."""
-            reserved: set = set()
-            for name in sorted(pending,
-                               key=lambda n: (plan[n][0], n)):
-                gpus = plan[name][1]
-                if any(owner[g] is not None for g in gpus) or \
-                        (set(gpus) & reserved):
-                    reserved.update(gpus)
-                    continue
-                spec, factory = by_name[name]
-                driver = factory()
-                driver.start(T)
-                run = _Running(spec=spec, driver=driver, gpu_ids=gpus,
-                               start=T, local_time=T,
-                               residual=spec.duration)
-                running[name] = run
-                pending.discard(name)
-                for g in gpus:
-                    owner[g] = name
-                task_starts[name] = T
-                heapq.heappush(heap, (run.local_time, name))
-                events.append(ProgressEvent(
-                    kind=EventKind.TASK_STARTED, task=name, time=T,
-                    detail=f"gpus={','.join(map(str, gpus))}"))
-
-        admit(0.0)
-        if pending and not running:
+        self._admit(0.0)
+        if self._pending and not self._running:
             raise RuntimeError("no task placeable at t=0 "
                                "(schedule/capacity mismatch)")
 
-        while heap:
-            _, name = heapq.heappop(heap)
-            run = running.get(name)
-            if run is None:
-                continue
-            chunk = run.driver.step_chunk()
-            if chunk.dt <= 0 and not chunk.done:
-                run.zero_chunks += 1
-                if run.zero_chunks > self.max_zero_chunks:
-                    raise RuntimeError(f"task {name} stopped progressing")
-            else:
-                run.zero_chunks = 0
-            run.local_time += chunk.dt
-            T = run.local_time
-            # residual upper bounds must be non-increasing in projected-end
-            # terms: clamp so local_time + residual never grows
-            est = run.driver.residual_estimate()
-            run.residual = max(0.0, min(est, run.residual - chunk.dt))
-            for e in chunk.events:
-                events.append(e.stamped(T))
-                if e.kind is EventKind.TASK_COMPLETED:
-                    run.saw_completed = True
-            shrink = any(e.shrinks() for e in chunk.events)
-            if chunk.done:
-                del running[name]
-                for g in run.gpu_ids:
-                    owner[g] = None
-                    gpu_busy[g] += T - run.start
-                task_ends[name] = T
-                results[name] = run.driver.result()
-                realized.append(Placement(
-                    dataclasses.replace(run.spec, duration=T - run.start),
-                    run.start, run.gpu_ids))
-                if not run.saw_completed:
-                    events.append(ProgressEvent(
-                        kind=EventKind.TASK_COMPLETED, task=name, time=T))
-                replan(T)
-                admit(T)
-            else:
-                if shrink:
-                    replan(T)
-                    admit(T)
-                heapq.heappush(heap, (run.local_time, name))
+    def idle(self) -> bool:
+        return (self._live and not self._running and not self._ctrl
+                and not self._pending)
 
-        assert not pending, f"unstarted tasks: {sorted(pending)}"
-        makespan = max(task_ends.values(), default=0.0)
-        schedule = Schedule(realized, makespan, optimal=False,
+    def step(self) -> bool:
+        """Advance the loop by one event: the earliest of the next control
+        event (arrival / cancellation) and the next driver chunk. Returns
+        False once the session is idle."""
+        assert self._live, "begin() not called"
+        next_chunk = self._peek_chunk()
+        next_ctrl = self._ctrl[0][0] if self._ctrl else None
+        if next_chunk is None and next_ctrl is None:
+            if self._pending:
+                # defensive: re-solve and admit whatever is admissible
+                self._replan(self.now)
+                self._admit(self.now)
+                if self._pending and not self._running:
+                    raise RuntimeError(
+                        f"unplaceable pending tasks: {sorted(self._pending)}")
+                return True
+            return False
+        if next_ctrl is not None and (next_chunk is None
+                                      or next_ctrl <= next_chunk):
+            at, _, kind, name = heapq.heappop(self._ctrl)
+            self._process_ctrl(max(at, self.now), kind, name)
+        else:
+            self._step_chunk()
+        return True
+
+    def _peek_chunk(self) -> Optional[float]:
+        while self._heap and self._heap[0][1] not in self._running:
+            heapq.heappop(self._heap)        # stale (completed / cancelled)
+        return self._heap[0][0] if self._heap else None
+
+    # ---------------------------------------------------------- internals
+    def _process_ctrl(self, T: float, kind: str, name: str) -> None:
+        self.now = max(self.now, T)
+        if kind == "arrive":
+            if name in self._cancel_set:
+                return                       # cancelled before arrival
+            self._future.pop(name, None)
+            self._pending.add(name)
+            spec = self._by_name[name].spec
+            self._events.append(ProgressEvent(
+                kind=EventKind.TASK_ARRIVED, task=name, time=T,
+                detail=f"gpus={spec.gpus} d={spec.duration:.3f}"))
+            self._replan(T)
+            self._admit(T)
+            return
+        # cancel
+        if name in self._results or name in self._cancel_set:
+            return
+        self._cancel_set.add(name)
+        self._events.append(ProgressEvent(
+            kind=EventKind.TASK_CANCELLED, task=name, time=T))
+        run = self._running.pop(name, None)
+        if run is not None:
+            for g in run.gpu_ids:
+                self._owner[g] = None
+                self._gpu_busy[g] += T - run.start
+            self._task_ends[name] = T
+            self._realized.append(Placement(
+                dataclasses.replace(run.spec, duration=T - run.start),
+                run.start, run.gpu_ids))
+        else:
+            self._pending.discard(name)
+            self._future.pop(name, None)
+        self._plan.pop(name, None)
+        self._bounds.pop(name, None)
+        self._replan(T)
+        self._admit(T)
+
+    def _step_chunk(self) -> None:
+        _, name = heapq.heappop(self._heap)
+        run = self._running.get(name)
+        if run is None:
+            return
+        chunk = run.driver.step_chunk()
+        if chunk.dt <= 0 and not chunk.done:
+            run.zero_chunks += 1
+            if run.zero_chunks > self.max_zero_chunks:
+                raise RuntimeError(f"task {name} stopped progressing")
+        else:
+            run.zero_chunks = 0
+        run.local_time += chunk.dt
+        T = run.local_time
+        self.now = max(self.now, T)
+        # residual upper bounds must be non-increasing in projected-end
+        # terms: clamp so local_time + residual never grows
+        est = run.driver.residual_estimate()
+        run.residual = max(0.0, min(est, run.residual - chunk.dt))
+        for e in chunk.events:
+            self._events.append(e.stamped(T))
+            if e.kind is EventKind.TASK_COMPLETED:
+                run.saw_completed = True
+        shrink = any(e.shrinks() for e in chunk.events)
+        if chunk.done:
+            del self._running[name]
+            self._plan.pop(name, None)      # a long-lived session must not
+            self._bounds.pop(name, None)    # accumulate finished tasks
+            for g in run.gpu_ids:
+                self._owner[g] = None
+                self._gpu_busy[g] += T - run.start
+            self._task_ends[name] = T
+            self._results[name] = run.driver.result()
+            self._realized.append(Placement(
+                dataclasses.replace(run.spec, duration=T - run.start),
+                run.start, run.gpu_ids))
+            if not run.saw_completed:
+                self._events.append(ProgressEvent(
+                    kind=EventKind.TASK_COMPLETED, task=name, time=T))
+            self._replan(T)
+            self._admit(T)
+        else:
+            if shrink:
+                self._replan(T)
+                self._admit(T)
+            heapq.heappush(self._heap, (run.local_time, name))
+
+    def _proj_skyline(self, T: float) -> List[float]:
+        """Per-GPU projected free time: running tasks keep their GPUs
+        until local_time + residual; free GPUs are free at T."""
+        sky = [T] * self.G
+        for r in self._running.values():
+            end = max(r.local_time + r.residual, T)
+            for g in r.gpu_ids:
+                sky[g] = end
+        return sky
+
+    def _plan_resid(self, name: str) -> float:
+        # pending tasks have done no work: residual = estimated duration
+        return self._by_name[name].spec.duration
+
+    def _queue_spec(self, name: str, T: float) -> TaskSpec:
+        spec = self._by_name[name].spec
+        release = self._future.get(name, min(spec.release, T))
+        return dataclasses.replace(
+            spec, duration=max(self._plan_resid(name), _EPS),
+            release=release)
+
+    def _fallback_plan(self, queue: List[str], sky: List[float]
+                       ) -> Tuple[Dict[str, Tuple[float, Tuple[int, ...]]],
+                                  float]:
+        """Regret fallback: incumbent placements untouched, unplanned names
+        (new arrivals) appended over the incumbent-reserved skyline.
+        Returns (plan entries for unplanned names, projected makespan)."""
+        free = list(sky)
+        mk = max(free, default=0.0)
+        known = sorted((n for n in queue if n in self._plan),
+                       key=lambda n: (self._plan[n][0], n))
+        for n in known:
+            start, gpus = self._plan[n]
+            s = max(start, max(free[g] for g in gpus))
+            end = s + max(self._plan_resid(n), _EPS)
+            for g in gpus:
+                free[g] = end
+            mk = max(mk, end)
+        new = [self._queue_spec(n, mk) for n in sorted(queue)
+               if n not in self._plan]
+        entries: Dict[str, Tuple[float, Tuple[int, ...]]] = {}
+        if new:
+            tail = lpt_schedule(new, self.G, free)
+            for p in tail.placements:
+                entries[p.task.name] = (p.start, p.gpu_ids)
+            mk = max(mk, tail.makespan)
+        return entries, mk
+
+    def _replan(self, T: float) -> None:
+        """Re-solve placement of the queue (arrived-pending plus announced
+        future arrivals, release-constrained) over the projected skyline,
+        then run the adoption rule: strict (never delay past a bound) when
+        ``delay_delta`` is None, bounded-delay otherwise."""
+        queue = sorted(self._pending) + sorted(self._future)
+        if not queue:
+            return
+        self._replans += 1
+        sky = self._proj_skyline(T)
+        resid = [self._queue_spec(n, T) for n in queue]
+        cand = solve_residual(resid, self.G, sky, self.method, self.bnb_max_n)
+        if self.validate:
+            cand.validate(self.G)
+        delays = {p.task.name: p.start - self._bounds[p.task.name]
+                  for p in cand.placements if p.task.name in self._bounds}
+        max_delay = max(delays.values(), default=0.0)
+        if max_delay <= _EPS:
+            self._adopt(cand, T, reason="adopted")
+            return
+        # the fallback replay is only needed to price a delaying plan or to
+        # place first-time names; strict batch mode with a fully planned
+        # queue skips it entirely
+        unplanned = any(n not in self._plan for n in queue)
+        if self.delay_delta is None and not unplanned:
+            self._rejected += 1
+            self._events.append(ProgressEvent(
+                kind=EventKind.REPLAN, task="", time=T, reason="rejected",
+                detail="would delay past static start"))
+            return
+        fb_entries, fb_mk = self._fallback_plan(queue, sky)
+        win = fb_mk - cand.makespan
+        if (self.delay_delta is not None
+                and win >= self.delay_delta * max_delay - _EPS):
+            self._adopt(cand, T, reason="adopted_bounded_delay",
+                        detail=f"win={win:.3f} max_delay={max_delay:.3f}")
+            return
+        # regret fallback: keep incumbent entries, append new arrivals
+        self._plan.update(fb_entries)
+        for n, (start, _) in fb_entries.items():
+            self._bounds.setdefault(n, start)
+        self._rejected += 1
+        detail = ("would delay past static start" if self.delay_delta is None
+                  else f"win={win:.3f} < delta*max_delay="
+                       f"{self.delay_delta * max_delay:.3f}")
+        self._events.append(ProgressEvent(
+            kind=EventKind.REPLAN, task="", time=T, reason="rejected",
+            detail=detail))
+
+    def _adopt(self, cand: Schedule, T: float, reason: str,
+               detail: str = "") -> None:
+        old = Schedule(
+            [Placement(self._by_name[n].spec, self._plan[n][0],
+                       self._plan[n][1])
+             for n in sorted(self._plan)], 0.0, False, 0.0)
+        moved = sum(d.moved_earlier for d in diff_schedules(old, cand))
+        for p in cand.placements:
+            name = p.task.name
+            self._plan[name] = (p.start, p.gpu_ids)
+            # a bound moves later only when the bounded-delay rule paid for
+            # it; first-time names (arrivals) get their planned start
+            prev = self._bounds.get(name)
+            self._bounds[name] = p.start if prev is None else max(prev,
+                                                                  p.start)
+        self._adopted += 1
+        self._events.append(ProgressEvent(
+            kind=EventKind.REPLAN, task="", time=T, reason=reason,
+            detail=detail or f"moved_earlier={moved}"))
+
+    def _admit(self, T: float) -> None:
+        """Start every pending task whose planned GPUs are free, in
+        planned-start order; earlier-planned tasks reserve their GPUs
+        so later tasks cannot cause priority inversion."""
+        reserved: set = set()
+        for name in sorted(self._pending,
+                           key=lambda n: (self._plan[n][0], n)):
+            gpus = self._plan[name][1]
+            if any(self._owner[g] is not None for g in gpus) or \
+                    (set(gpus) & reserved):
+                reserved.update(gpus)
+                continue
+            sub = self._by_name[name]
+            driver = sub.factory()
+            driver.start(T)
+            run = _Running(spec=sub.spec, driver=driver, gpu_ids=gpus,
+                           start=T, local_time=T,
+                           residual=sub.spec.duration)
+            self._running[name] = run
+            self._pending.discard(name)
+            for g in gpus:
+                self._owner[g] = name
+            self._task_starts[name] = T
+            heapq.heappush(self._heap, (run.local_time, name))
+            self._events.append(ProgressEvent(
+                kind=EventKind.TASK_STARTED, task=name, time=T,
+                detail=f"gpus={','.join(map(str, gpus))}"))
+
+    # ---------------------------------------------------------- observability
+    @property
+    def event_log(self) -> List[ProgressEvent]:
+        return self._events
+
+    @property
+    def results_map(self) -> Dict[str, Any]:
+        return self._results
+
+    @property
+    def task_start_times(self) -> Dict[str, float]:
+        return self._task_starts
+
+    @property
+    def task_end_times(self) -> Dict[str, float]:
+        return self._task_ends
+
+    def is_cancelled(self, name: str) -> bool:
+        return name in self._cancel_set
+
+    # ---------------------------------------------------------- reporting
+    def report(self) -> RuntimeReport:
+        """Snapshot the session at idle (all admitted work drained)."""
+        assert self._live, "begin() not called"
+        assert not self._pending, f"unstarted tasks: {sorted(self._pending)}"
+        makespan = max(self._task_ends.values(), default=0.0)
+        schedule = Schedule(list(self._realized), makespan, optimal=False,
                             solve_time_s=0.0)
         if self.validate:
             schedule.validate(self.G)
-        util = (sum(gpu_busy) / (self.G * makespan)) if makespan > 0 else 0.0
+        util = (sum(self._gpu_busy) / (self.G * makespan)
+                if makespan > 0 else 0.0)
         return RuntimeReport(
-            makespan=makespan, realized=schedule, events=events,
-            replans=replans, plans_adopted=adopted, plans_rejected=rejected,
-            gpu_busy=gpu_busy, utilization=util, results=results,
-            task_starts=task_starts, task_ends=task_ends)
+            makespan=makespan, realized=schedule, events=list(self._events),
+            replans=self._replans, plans_adopted=self._adopted,
+            plans_rejected=self._rejected, gpu_busy=list(self._gpu_busy),
+            utilization=util, results=dict(self._results),
+            task_starts=dict(self._task_starts),
+            task_ends=dict(self._task_ends),
+            cancelled=tuple(sorted(self._cancel_set)))
+
+    # ------------------------------------------------------------------ run
+    def run(self, initial: Optional[Schedule] = None) -> RuntimeReport:
+        """One-shot batch semantics: open the session, drain it, report."""
+        self.begin(initial)
+        while self.step():
+            pass
+        return self.report()
 
 
 # --------------------------------------------------------------------------
@@ -547,6 +823,8 @@ class ExecutorTaskDriver(TaskDriver):
         self._bounds: List[int] = []
         self._result = None
         self._last_bound: Optional[int] = None
+        self._wall_s = 0.0
+        self._steps = 0
 
     def start(self, now: float) -> None:
         gen = self.executor.run_task_chunks(
@@ -561,6 +839,8 @@ class ExecutorTaskDriver(TaskDriver):
                 dt=report.steps_executed * self.step_time_s,
                 events=report.events, done=False))
             self._bounds.append(report.remaining_steps_bound)
+            self._wall_s += report.wall_time_s
+            self._steps += report.steps_executed
         assert self._chunks, "executor produced no chunks"
         # completion events ride the final chunk so the runtime replans
         # exactly once, with the GPUs actually freed
@@ -577,6 +857,10 @@ class ExecutorTaskDriver(TaskDriver):
         if self._last_bound is None:        # not stepped yet: no information
             return float("inf")             # runtime clamps to spec duration
         return self._last_bound * self.step_time_s
+
+    def observed_wall_step_s(self) -> Optional[float]:
+        """Realized host seconds per executor step (profiler feedback)."""
+        return self._wall_s / self._steps if self._steps else None
 
     def result(self):
         return self._result

@@ -28,17 +28,23 @@ from repro.sched.inter_task import TaskSpec, solve
 class EventKind(enum.Enum):
     """Lifecycle transitions a running task reports to the runtime."""
     TASK_SUBMITTED = "task_submitted"
+    TASK_ARRIVED = "task_arrived"           # dynamic admission into a live loop
     TASK_STARTED = "task_started"
     WARMUP_SELECTION = "warmup_selection"   # Pattern-3 drops at the boundary
     JOB_EXITED = "job_exited"               # divergence / overfit / budget
     TASK_PROGRESS = "task_progress"         # chunk heartbeat (no shrink)
     TASK_COMPLETED = "task_completed"
+    TASK_CANCELLED = "task_cancelled"       # tenant cancel (frees capacity)
     REPLAN = "replan"                       # runtime re-solved the queue
 
 # Kinds that can shrink a task's residual duration and therefore trigger
 # a replan of the pending queue.
 SHRINK_KINDS = frozenset({EventKind.WARMUP_SELECTION, EventKind.JOB_EXITED,
-                          EventKind.TASK_COMPLETED})
+                          EventKind.TASK_COMPLETED, EventKind.TASK_CANCELLED})
+
+# Terminal kinds for a task (the service's handle-state transitions).
+TERMINAL_KINDS = frozenset({EventKind.TASK_COMPLETED,
+                            EventKind.TASK_CANCELLED})
 
 
 @dataclasses.dataclass(frozen=True)

@@ -33,6 +33,7 @@ class TaskSpec:
     name: str
     duration: float          # estimated d_i (profiled)
     gpus: int                # g_i (from base-model size)
+    release: float = 0.0     # r_i: earliest allowed start (dynamic arrival)
 
 
 @dataclasses.dataclass
@@ -54,10 +55,11 @@ class Schedule:
     solve_time_s: float
 
     def validate(self, G: int) -> None:
-        """No-overlap per GPU + capacity + demand satisfied."""
+        """No-overlap per GPU + capacity + demand + release satisfied."""
         for p in self.placements:
             assert len(set(p.gpu_ids)) == p.task.gpus, p
             assert all(0 <= g < G for g in p.gpu_ids), p
+            assert p.start >= p.task.release - 1e-9, p
         for a, b in itertools.combinations(self.placements, 2):
             if a.start < b.end - 1e-9 and b.start < a.end - 1e-9:
                 assert not (set(a.gpu_ids) & set(b.gpu_ids)), (a, b)
@@ -72,7 +74,8 @@ def lower_bound(tasks: Sequence[TaskSpec], G: int,
         return max(base, default=0.0)
     earliest = min(base)
     area = (sum(base) + sum(t.duration * t.gpus for t in tasks)) / G
-    longest = earliest + max(t.duration for t in tasks)
+    # a task can start no earlier than both its release and the cluster
+    longest = max(max(earliest, t.release) + t.duration for t in tasks)
     # tasks needing more than half the cluster can never overlap each other
     big = earliest + sum(t.duration for t in tasks if t.gpus > G / 2)
     return max(area, longest, big, max(base))
@@ -84,14 +87,15 @@ def list_schedule(order: Sequence[TaskSpec], G: int,
     enough GPUs are free; concrete ids picked from the per-GPU skyline.
 
     ``free_at`` seeds the per-GPU skyline (residual re-solves over a
-    half-busy cluster); defaults to an idle cluster."""
+    half-busy cluster); defaults to an idle cluster. Tasks with a
+    ``release`` (announced future arrivals) never start before it."""
     free_at = [0.0] * G if free_at is None else list(free_at)
     placements: List[Placement] = []
     for t in order:
         # earliest time when >= g GPUs are free: g-th smallest free_at
         times = sorted(range(G), key=lambda g: free_at[g])
         chosen = times[:t.gpus]
-        start = max(free_at[g] for g in chosen)
+        start = max(max(free_at[g] for g in chosen), t.release)
         # better: any set of g GPUs minimizing start; the g earliest-free
         # GPUs minimize the max -> optimal choice for non-delay placement
         for g in chosen:
@@ -158,20 +162,21 @@ def branch_and_bound(tasks: Sequence[TaskSpec], G: int,
         base = sum(free_at)
         lb = max(used_mk,
                  (base + rem_area) / G,
-                 max(min(free_at) + tasks[i].duration for i in remaining))
+                 max(max(min(free_at), tasks[i].release) + tasks[i].duration
+                     for i in remaining))
         if lb >= best_mk - 1e-12:
             return
-        # symmetry: skip duplicate (duration,gpus) pairs at the same depth
+        # symmetry: skip duplicate (duration,gpus,release) at the same depth
         seen = set()
         # heuristic child order: larger area first
         for i in sorted(remaining, key=lambda j: -areas[j]):
-            sig = (tasks[i].duration, tasks[i].gpus)
+            sig = (tasks[i].duration, tasks[i].gpus, tasks[i].release)
             if sig in seen:
                 continue
             seen.add(sig)
             t = tasks[i]
             times = sorted(free_at)
-            start = times[t.gpus - 1]
+            start = max(times[t.gpus - 1], t.release)
             # apply placement to the g earliest-free GPUs
             new_free = list(free_at)
             idxs = sorted(range(G), key=lambda g: free_at[g])[:t.gpus]

@@ -146,6 +146,113 @@ def reestimate_duration(step_time_s: float, K: int, Z: int,
     return residual_duration(steps, step_time_s)
 
 
+# --------------------------------------------------------------------------
+# Profiler feedback loop (service sessions, paper §7.2 / ROADMAP item)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ProfileRecord:
+    """Observed execution statistics for one profile key (EMA-smoothed)."""
+    duration_frac: float      # realized_duration / estimated_duration
+    wall_step_time_s: Optional[float] = None  # realized host per-step seconds
+    observations: int = 0
+
+
+class ProfileStore:
+    """Session-scoped feedback store closing the profiler loop.
+
+    Two layers:
+
+      * **Observed records** keyed by an arch-level profile key (e.g.
+        ``(cfg.name, gpus)``): every completed task reports its realized
+        step time and realized/estimated duration ratio. Later admissions
+        in the same session consult ``step_time``/``duration_scale`` so
+        they are scheduled from observed rather than analytic estimates
+        (early exits make worst-case analytic durations systematically
+        pessimistic — paper Fig. 9 reports 72-83% sample savings).
+      * **Spec cache** keyed by ``(task_name, early-exit signature)``:
+        ``Engine.schedule`` and ``Engine.batched_execution`` profile the
+        same tasks back to back; the cache de-duplicates that work. Cache
+        entries are versioned — any new observation invalidates previously
+        computed specs so feedback takes effect immediately.
+    """
+
+    def __init__(self, ema: float = 0.5):
+        assert 0.0 < ema <= 1.0
+        self.ema = ema
+        self._records: Dict[Tuple, ProfileRecord] = {}
+        self._specs: Dict[Tuple, Tuple[int, object]] = {}
+        self._version = 0
+
+    # ---- observed records --------------------------------------------------
+    def record(self, key: Tuple, *, realized_duration: float,
+               estimated_duration: float,
+               wall_step_time_s: Optional[float] = None) -> None:
+        """Log one completed task. ``realized/estimated`` must both be in
+        the session's *virtual* timeline and the estimate must be the
+        UNSCALED worst case (recording vs an already-scaled estimate would
+        compound the ratio). Wall step time is the only host-clock
+        quantity; virtual step times are never recorded — for real
+        executors the realized virtual step time IS the analytic one, so
+        an observation would be circular."""
+        frac = (realized_duration / estimated_duration
+                if estimated_duration > 0 else 1.0)
+        frac = min(max(frac, 0.0), 1.0)     # estimates are upper bounds
+
+        def ema(new, old):
+            if new is None:
+                return old
+            if old is None:
+                return new
+            return self.ema * new + (1 - self.ema) * old
+
+        prev = self._records.get(key)
+        if prev is None:
+            self._records[key] = ProfileRecord(
+                duration_frac=frac, wall_step_time_s=wall_step_time_s,
+                observations=1)
+        else:
+            self._records[key] = ProfileRecord(
+                duration_frac=ema(frac, prev.duration_frac),
+                wall_step_time_s=ema(wall_step_time_s,
+                                     prev.wall_step_time_s),
+                observations=prev.observations + 1)
+        self._version += 1                  # invalidates all cached specs
+
+    def wall_step_time(self, key: Tuple) -> Optional[float]:
+        """Realized host seconds per executor step (observability; kept
+        out of the virtual timeline on purpose)."""
+        rec = self._records.get(key)
+        return rec.wall_step_time_s if rec is not None else None
+
+    def duration_scale(self, key: Tuple) -> float:
+        """Multiplier for analytic worst-case durations (1.0 = no data)."""
+        rec = self._records.get(key)
+        return rec.duration_frac if rec is not None else 1.0
+
+    def scaled_duration(self, key: Tuple, duration: float) -> float:
+        """Apply the observed realized/worst-case ratio to an UNSCALED
+        worst-case duration (single scaling point for engine + service)."""
+        scale = self.duration_scale(key)
+        if scale >= 1.0:
+            return duration
+        return max(duration * scale, 1e-9)
+
+    def observations(self, key: Tuple) -> int:
+        rec = self._records.get(key)
+        return rec.observations if rec is not None else 0
+
+    # ---- spec cache --------------------------------------------------------
+    def get_spec(self, key: Tuple):
+        hit = self._specs.get(key)
+        if hit is None or hit[0] != self._version:
+            return None
+        return hit[1]
+
+    def put_spec(self, key: Tuple, spec) -> None:
+        self._specs[key] = (self._version, spec)
+
+
 def gpus_for_model(cfg: ModelConfig, hbm_bytes: float = HBM_BYTES,
                    overhead: float = 1.35) -> int:
     """GPU/chip requirement from base-model size (paper §7.2)."""
