@@ -1,0 +1,253 @@
+"""Cross-task co-location vs exclusive placement on a heterogeneous mix.
+
+The paper's central systems claim: concurrent tuning jobs over a SHARED
+frozen backbone expose optimizations single-job designs cannot — the
+fused grouped GEMM can co-locate surviving adapters from *different
+tasks* to reclaim freed capacity (mLoRA-style multiplexing). This bench
+quantifies the claim end to end, in two parts:
+
+1. **Cluster A/B (virtual time).** A heterogeneous small-task mix — one
+   long fusable host task, exclusive hog tasks pinning the remaining
+   GPUs, and a stream of small same-fuse-key tasks — is executed through
+   the elastic runtime twice: ``colocate=False`` (exclusive placement:
+   small tasks queue for free GPUs) and ``colocate=True`` (pending small
+   tasks fuse onto the live host replica the moment §A.3 cross-task
+   admission accepts them). Reported: makespan, effective cluster
+   utilization (identical per-task work area over G x makespan — the
+   same work, delivered in less GPU-time), replica occupancy, and the
+   fused-task map. Per-task results must be identical in both runs
+   (co-location changes *when* work runs, never *what* it computes).
+
+2. **Isolation check (real training).** Two small tasks run on one real
+   ``SharedBackboneExecutor`` — co-located — and each alone; per-task
+   best-val losses must match exactly (the loss-isolation property the
+   tentpole relies on, tests/test_lora_isolation.py proves bitwise).
+
+Emits BENCH_colocation.json. ``--smoke`` shrinks the mix (CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_arch
+from repro.core.early_exit import EarlyExitConfig
+from repro.core.executor import (SharedBackboneExecutor, TaskLifecycle,
+                                 run_colocated)
+from repro.data.synthetic import SlotBatcher, make_task_dataset
+from repro.models import model as M
+from repro.sched import profiler
+from repro.sched.cluster import (ElasticClusterRuntime, SimulatedTaskDriver,
+                                 execute_static, sim_colo_spec,
+                                 sim_task_spec)
+from repro.sched.events import EventKind
+from repro.sched.inter_task import solve
+
+FUSE_ARCH = "stablelm-3b"          # the shared-backbone family (1 GPU)
+HOG_MIX = [("glm4-9b", 2), ("granite-8b", 1)]
+
+
+def build_workload(num_small: int, seed: int = 0):
+    """(spec, factory, colo) triples: one fusable host, exclusive hogs,
+    and a stream of small fusable tasks that exclusive placement must
+    queue behind busy GPUs. ``seed`` jitters the budgets (small-task
+    sizes, host length) so robustness of the speedup is checkable."""
+    rng = np.random.default_rng(seed)
+    cfg = get_arch(FUSE_ARCH)
+    st_host = profiler.profile_task(cfg, 8, 4, 1024, 1).step_time_s
+    st_small = profiler.profile_task(cfg, 2, 4, 1024, 1).step_time_s
+    fuse_key = (FUSE_ARCH, 1, 4, 1024, "sft")
+    tasks = []
+
+    def sim(name, *, K, Z, total, warm, step_time, gpus, colo):
+        spec = sim_task_spec(name, K=K, Z=Z, total_steps=total,
+                             warmup_steps=warm, step_time_s=step_time,
+                             gpus=gpus)
+
+        def factory(name=name, K=K, Z=Z, total=total, warm=warm,
+                    step_time=step_time):
+            return SimulatedTaskDriver(name, K=K, Z=Z, total_steps=total,
+                                       warmup_steps=warm,
+                                       step_time_s=step_time)
+        return (spec, factory, colo)
+
+    # host: Z=8 slots; Pattern-3 keeps top 2 of 8, so 6 replica slots
+    # free the moment the warmup boundary passes
+    host_total = int(rng.integers(1100, 1400))
+    host_warm = host_total // 20
+    host = sim("host", K=8, Z=8, total=host_total, warm=host_warm,
+               step_time=st_host, gpus=1,
+               colo=sim_colo_spec(fuse_key, K=8, Z=8))
+    tasks.append(host)
+    host_dur = host[0].duration
+    # hogs: other archs, exclusive, pin the remaining GPUs until just
+    # before the host ends — exclusive small tasks must queue behind them
+    for arch, gpus in HOG_MIX:
+        hcfg = get_arch(arch)
+        st = profiler.profile_task(hcfg, 4, 4, 1024, gpus).step_time_s
+        warm = 50
+        # K=16 on Z=4: lifecycle steps = 3*warm + total (4 waves + top-4
+        # continue); invert for a duration ~0.97x the host's
+        total = max(int(0.97 * host_dur / st) - 3 * warm, warm + 10)
+        tasks.append(sim(f"hog-{arch}", K=16, Z=4, total=total, warm=warm,
+                         step_time=st, gpus=gpus, colo=None))
+    # small tasks: same fuse key, short budgets — the co-location payload
+    for i in range(num_small):
+        total = int(rng.integers(350, 850))
+        tasks.append(sim(f"small-{i}", K=2, Z=2, total=total,
+                         warm=max(total // 20, 1), step_time=st_small,
+                         gpus=1, colo=sim_colo_spec(fuse_key, K=2, Z=2)))
+    return tasks
+
+
+def run_cluster(tasks, G: int) -> dict:
+    specs = [s for s, _, _ in tasks]
+    plan = solve(specs, G, "cp")
+    plan.validate(G)
+    static = execute_static(plan, G, {s.name: f for s, f, _ in tasks})
+
+    out = {}
+    for mode, colocate in (("exclusive", False), ("colocated", True)):
+        rt = ElasticClusterRuntime(G, colocate=colocate)
+        for s, f, c in tasks:
+            rt.submit(s, f, colo=c)
+        rep = rt.run(initial=plan)
+        assert rep.makespan <= static.makespan + 1e-9, \
+            f"{mode} elastic regressed past the static plan"
+        out[mode] = rep
+
+    excl, colo = out["exclusive"], out["colocated"]
+    # identical work, attributed identically, in both runs
+    assert excl.results == colo.results, "co-location changed task results"
+    assert colo.colocated, "no task fused — workload does not exercise " \
+        "co-location"
+    assert colo.makespan < excl.makespan - 1e-9, \
+        "co-location did not improve the makespan"
+
+    # effective utilization: the same per-task work area (realized solo
+    # durations x gpus, taken from the exclusive run) over G x makespan —
+    # how densely each strategy packs identical work
+    area = sum((excl.task_ends[s.name] - excl.task_starts[s.name]) * s.gpus
+               for s, _, _ in tasks)
+
+    def report(rep) -> dict:
+        return {
+            "makespan_s": rep.makespan,
+            "utilization_effective": area / (len(rep.gpu_busy)
+                                             * rep.makespan),
+            "gpu_occupancy": rep.utilization,
+            "replans": rep.replans,
+            "task_starts": {k: round(v, 4)
+                            for k, v in rep.task_starts.items()},
+            "task_ends": {k: round(v, 4) for k, v in rep.task_ends.items()},
+            "fused_tasks": dict(rep.colocated),
+            "fuse_events": sum(1 for e in rep.events
+                               if e.kind is EventKind.TASK_FUSED),
+        }
+
+    excl_r, colo_r = report(excl), report(colo)
+    assert colo_r["utilization_effective"] > \
+        excl_r["utilization_effective"] + 1e-9, \
+        "co-location did not lift effective utilization"
+    return {
+        "G": G,
+        "num_tasks": len(tasks),
+        "tasks": [{"name": s.name, "gpus": s.gpus,
+                   "est_duration_s": round(s.duration, 4),
+                   "fusable": c is not None} for s, _, c in tasks],
+        "static_plan_makespan_s": static.makespan,
+        "exclusive": excl_r,
+        "colocated": colo_r,
+        "speedup": excl.makespan / max(colo.makespan, 1e-12),
+    }
+
+
+def run_isolation_check() -> dict:
+    """Real training: two tasks fused on one SharedBackboneExecutor vs
+    each alone — per-task best-val losses must be identical."""
+    cfg = dataclasses.replace(
+        get_arch("paper-llama-tiny").reduced(num_layers=2, d_model=64,
+                                             vocab=128), dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    datasets = {
+        "A": make_task_dataset("col-a", cfg.vocab_size, seq_len=16,
+                               num_train=32, num_val=8, difficulty=0.2,
+                               seed=1),
+        "B": make_task_dataset("col-b", cfg.vocab_size, seq_len=16,
+                               num_train=32, num_val=8, difficulty=0.6,
+                               seed=2),
+    }
+
+    seeds = {"A": 3, "B": 4}     # per task, not per position: a task's
+                                 # streams/keys must not depend on tenancy
+
+    def run(names):
+        ex = SharedBackboneExecutor(cfg, params, Z=4, per_adapter_batch=2,
+                                    eval_every=2, seed=0)
+        lcs = []
+        for name in names:
+            jobs = {f"{name}/j{k}": TrainConfig(
+                learning_rate=lr, lora_rank=4, max_steps=8)
+                for k, lr in enumerate((3e-3, 1e-3))}
+            lcs.append(TaskLifecycle(
+                ex, name, jobs, 8,
+                ee=EarlyExitConfig(warmup_ratio=0.25, select_ratio=1.0),
+                max_slots=2,
+                batcher=SlotBatcher(datasets[name], 2, 2,
+                                    seed=seeds[name]),
+                seed=seeds[name]))
+        return run_colocated(ex, lcs)
+
+    fused = run(["A", "B"])
+    solo = {name: run([name])[name] for name in ("A", "B")}
+    out = {}
+    for name in ("A", "B"):
+        identical = fused[name].best_val == solo[name].best_val
+        out[name] = {"solo_best_val": solo[name].best_val,
+                     "fused_best_val": fused[name].best_val,
+                     "identical": identical}
+        assert identical, f"co-location perturbed task {name}'s losses"
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small instance (CI)")
+    ap.add_argument("--gpus", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_colocation.json")
+    args = ap.parse_args(argv)
+
+    tasks = build_workload(num_small=6 if args.smoke else 12,
+                           seed=args.seed)
+    result = run_cluster(tasks, args.gpus)
+    result["isolation"] = run_isolation_check()
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    e, c = result["exclusive"], result["colocated"]
+    print(f"exclusive makespan : {e['makespan_s']:.3f}s "
+          f"(eff util {e['utilization_effective']:.2%})")
+    print(f"colocated makespan : {c['makespan_s']:.3f}s "
+          f"(eff util {c['utilization_effective']:.2%}, "
+          f"{c['fuse_events']} tasks fused onto "
+          f"{len(set(c['fused_tasks'].values()))} replica(s))")
+    print(f"speedup            : {result['speedup']:.2f}x")
+    iso = result["isolation"]
+    print("isolation          : " + ", ".join(
+        f"{n} best_val {v['fused_best_val']:.4f} "
+        f"({'identical' if v['identical'] else 'DIFFERS'})"
+        for n, v in iso.items()))
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -42,7 +42,13 @@ def _i_slot(tree: Dict, slot: int, sub: Dict) -> Dict:
 
 
 class SlotManager:
-    """Owns the device arrays for one executor's Z adapter slots."""
+    """Owns the device arrays for one executor's Z adapter slots.
+
+    Slots are tagged with the *task* that owns them (``slot_tasks``) so one
+    frozen-backbone replica can host adapter slots belonging to different
+    tasks concurrently (cross-task co-location): the shared executor
+    attributes per-slot losses, checkpoints, and evictions to the owning
+    task's lifecycle through these tags."""
 
     def __init__(self, cfg: ModelConfig, Z: int,
                  target_shapes: Dict, key: jax.Array):
@@ -56,10 +62,11 @@ class SlotManager:
             key, cfg, Z, jnp.zeros((Z,), jnp.int32), target_shapes)
         self.opt_state = adamw.init_state(self.lora, Z)
         self.slot_jobs: List[Optional[str]] = [None] * Z
+        self.slot_tasks: List[Optional[str]] = [None] * Z
 
     # ---- admission ---------------------------------------------------------
     def admit(self, slot: int, job_id: str, tc: TrainConfig,
-              key: jax.Array) -> None:
+              key: jax.Array, task: Optional[str] = None) -> None:
         """Fresh job into a slot: new init, zeroed moments, job's hparams."""
         assert self.slot_jobs[slot] is None, f"slot {slot} occupied"
         rank = min(tc.lora_rank, self.cfg.lora.r_max)
@@ -74,8 +81,10 @@ class SlotManager:
             slot, lr=tc.learning_rate, wd=tc.weight_decay,
             beta1=tc.beta1, beta2=tc.beta2, grad_clip=tc.grad_clip)
         self.slot_jobs[slot] = job_id
+        self.slot_tasks[slot] = task
 
-    def restore(self, slot: int, snap: SlotSnapshot, tc: TrainConfig) -> None:
+    def restore(self, slot: int, snap: SlotSnapshot, tc: TrainConfig,
+                task: Optional[str] = None) -> None:
         """Rotate a snapshotted job back in (bit-exact continuation)."""
         assert self.slot_jobs[slot] is None, f"slot {slot} occupied"
         self.lora = _i_slot(self.lora, slot, snap.lora)
@@ -89,6 +98,7 @@ class SlotManager:
             slot, lr=tc.learning_rate, wd=tc.weight_decay,
             beta1=tc.beta1, beta2=tc.beta2, grad_clip=tc.grad_clip)
         self.slot_jobs[slot] = snap.job_id
+        self.slot_tasks[slot] = task
 
     # ---- eviction ----------------------------------------------------------
     def snapshot(self, slot: int) -> SlotSnapshot:
@@ -111,6 +121,7 @@ class SlotManager:
         self.active = self.active.at[slot].set(0)
         self.ranks = self.ranks.at[slot].set(0)
         self.slot_jobs[slot] = None
+        self.slot_tasks[slot] = None
 
     # ---- queries -----------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -119,6 +130,30 @@ class SlotManager:
     def occupied(self) -> Dict[str, int]:
         return {j: i for i, j in enumerate(self.slot_jobs) if j is not None}
 
+    def occupied_of(self, task: Optional[str]) -> Dict[str, int]:
+        """{job_id: slot} for the slots tagged with ``task``."""
+        return {j: i for i, j in enumerate(self.slot_jobs)
+                if j is not None and self.slot_tasks[i] == task}
+
     def adapter_of(self, job_id: str) -> Dict:
         slot = self.occupied()[job_id]
         return _x_slot(self.lora, slot)
+
+    def adapter_at(self, slot: int) -> Dict:
+        """Host copy of one slot's adapter params (task-tag agnostic — the
+        shared executor addresses slots by index, never by job id, so
+        co-located tasks may reuse job names without colliding)."""
+        assert self.slot_jobs[slot] is not None, f"slot {slot} empty"
+        return _x_slot(self.lora, slot)
+
+    def adapters_of(self, task: Optional[str]) -> Dict[str, Dict]:
+        """{job_id: [L, ...] adapter sub-tree} for one task's (possibly
+        non-contiguous) slots on a shared executor."""
+        occ = self.occupied_of(task)
+        if not occ:
+            return {}
+        jobs = sorted(occ)
+        stacked = LORA.gather_slots(self.lora, [occ[j] for j in jobs])
+        return {j: jax.tree_util.tree_map(
+                    lambda x, i=i: np.asarray(x[:, i]), stacked)
+                for i, j in enumerate(jobs)}

@@ -29,7 +29,7 @@ from repro.core.executor import BatchedExecutor, TaskResult
 from repro.data.synthetic import TaskDataset, make_task_dataset
 from repro.models import model as M
 from repro.sched import profiler
-from repro.sched.cluster import ExecutorTaskDriver
+from repro.sched.cluster import ColocationSpec, ExecutorTaskDriver
 from repro.sched.events import ProgressEvent
 from repro.sched.inter_task import Schedule, TaskSpec, solve
 from repro.sched.intra_task import fit_memory_model
@@ -114,6 +114,7 @@ class Engine:
                               else profiler.ProfileStore())
         self._param_cache: Dict[str, Dict] = {}
         self._dataset_cache: Dict[str, TaskDataset] = {}
+        self._mem_cache: Dict[str, object] = {}
 
     def _dataset(self, task: "Task") -> TaskDataset:
         """Resolve a task's dataset once per engine (profiling, slot
@@ -123,23 +124,54 @@ class Engine:
         return self._dataset_cache[task.task_name]
 
     # ---- intra-task slot sizing (paper §A.3 memory model) -------------------
+    def memory_model(self, task: Task):
+        """Fitted M_hat(B) = k0 + k1*B*L from analytic profile points (the
+        CPU stand-in for torch.cuda.max_memory_reserved sweeps). Shared by
+        slot sizing, the executor's backfill policy, and cross-task
+        co-location admission."""
+        key = task.task_name
+        if key not in self._mem_cache:
+            cfg = task.model_config()
+            jobs = task.jobs()
+            bsz = max(tc.per_adapter_batch for tc in jobs.values())
+            ds = self._dataset(task)
+            seq = ds.train.shape[1] - 1
+            pts = [(z * bsz, profiler.analytic_peak_memory(
+                cfg, z, bsz, seq, task.num_gpus)) for z in (1, 2, 4, 8)]
+            self._mem_cache[key] = fit_memory_model(
+                pts, seq, capacity=task.device_memory)
+        return self._mem_cache[key]
+
     def pick_slots(self, task: Task) -> int:
-        """Fit M_hat(B) = k0 + k1*B*L from analytic profile points (the
-        CPU stand-in for torch.cuda.max_memory_reserved sweeps) and admit
-        the largest slot count whose total batch fits the safety margin."""
+        """Admit the largest slot count whose total batch fits the memory
+        model's safety margin (bounded by the search-space size)."""
         if task.num_slots:
             return task.num_slots
+        jobs = task.jobs()
+        bsz = max(tc.per_adapter_batch for tc in jobs.values())
+        max_total = self.memory_model(task).max_batch()
+        z = max(min(max_total // max(bsz, 1), len(jobs), 16), 1)
+        return int(z)
+
+    def colocation_spec(self, task: Task) -> ColocationSpec:
+        """How this task fuses onto a shared frozen-backbone replica:
+        tasks agree on (arch, GPU demand, per-adapter batch, seq len,
+        loss kind); the replica's physical slot capacity is the memory
+        model's bound (NOT capped by this task's own search-space size —
+        a small task's replica has room for co-tenants)."""
         cfg = task.model_config()
         jobs = task.jobs()
         bsz = max(tc.per_adapter_batch for tc in jobs.values())
         ds = self._dataset(task)
         seq = ds.train.shape[1] - 1
-        pts = [(z * bsz, profiler.analytic_peak_memory(
-            cfg, z, bsz, seq, task.num_gpus)) for z in (1, 2, 4, 8)]
-        mem = fit_memory_model(pts, seq, capacity=task.device_memory)
-        max_total = mem.max_batch()
-        z = max(min(max_total // max(bsz, 1), len(jobs), 16), 1)
-        return int(z)
+        mem = self.memory_model(task)
+        replica = max(min(mem.max_batch() // max(bsz, 1), 16), 1)
+        return ColocationSpec(
+            fuse_key=(cfg.name, task.num_gpus, bsz, seq, task.loss_kind),
+            per_adapter_batch=bsz,
+            slots_needed=self.pick_slots(task),
+            replica_slots=int(replica),
+            mem=mem)
 
     # ---- profiling + inter-task scheduling ---------------------------------
     def profile_key(self, task: Task) -> tuple:
@@ -228,7 +260,7 @@ class Engine:
             cfg, self._base_params(cfg, task.seed),
             self._dataset(task), Z=Z, per_adapter_batch=bsz,
             ee=early_exit, eval_every=self.eval_every, seed=task.seed,
-            loss_kind=task.loss_kind)
+            loss_kind=task.loss_kind, mem_model=self.memory_model(task))
 
     def executor_driver_factory(self, task: Task,
                                 early_exit: EarlyExitConfig):
@@ -283,7 +315,11 @@ class Engine:
                 utilization=util)
 
         from repro.core.service import TuningService
-        service = TuningService(engine=self, delay_delta=None)
+        # colocate=False: the batch A/B contract is exclusive placement
+        # under the strict adoption rule; shared-replica fusion is the
+        # service path's lever (TuningService defaults it on)
+        service = TuningService(engine=self, delay_delta=None,
+                                colocate=False)
         for placement in schedule.placements:
             task = by_name[placement.task.name]
             # The schedule may have been solved under a different

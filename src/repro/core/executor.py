@@ -1,9 +1,36 @@
-"""Batched multi-LoRA executor: one task, Z concurrent adapter slots.
+"""Shared-backbone multi-task executor: Z adapter slots, many lifecycles.
 
-Implements the full per-task ALTO lifecycle (paper §4-§6):
+Implements the full per-task ALTO lifecycle (paper §4-§6) on top of a
+slot-multiplexing shared executor (paper's central claim: concurrent
+tuning jobs over one frozen backbone expose optimizations single-job
+designs cannot):
+
+  * ``SharedBackboneExecutor`` owns the frozen params, the ``SlotManager``
+    (Z slot-stacked adapters), and the jitted train/eval steps. Slots are
+    tagged with the task that owns them, so adapter slots belonging to
+    *different tasks* can be co-located on one backbone replica — the
+    fused grouped-GEMM path trains them all in a single step, and slot
+    isolation (tests/test_lora_isolation.py) guarantees each task's
+    losses are bitwise identical to running alone.
+  * ``TaskLifecycle`` is the per-task state machine — warmup with
+    rotation, Pattern-3 selection at the warmup boundary, continue-
+    training with online divergence/overfit detection and slot backfill —
+    that admits and evicts slots *through* the executor. All of its
+    decisions (batch streams, init keys, eval points) are task-local, so
+    a lifecycle behaves identically whether it runs alone or co-located.
+  * ``run_colocated`` drives several lifecycles over one executor with a
+    cross-task admission gate (slot headroom + the §A.3 memory model) —
+    pending small tasks backfill capacity the moment survivors free it.
+  * ``BatchedExecutor`` keeps the original single-task API (one task, Z
+    slots) as a thin wrapper: one executor, one lifecycle.
+
+The executor is shape-static: (Z, per-adapter batch, seq) never changes,
+so every admit/evict is an array update, not a recompile.
+
+Lifecycle (unchanged from the paper):
 
   1. WARMUP with rotation: all K candidate jobs get ``warmup_steps`` of
-     training, cycling through the Z device slots in waves when K > Z;
+     training, cycling through the task's slot allocation in waves;
      online pattern detection (divergence) is live during warmup; rotated
      jobs carry exact optimizer state via host snapshots.
   2. SELECTION at the warmup boundary: survivors ranked by val loss,
@@ -11,16 +38,14 @@ Implements the full per-task ALTO lifecycle (paper §4-§6):
   3. CONTINUE-TRAINING: survivors train to their step budget with online
      divergence + overfitting detection; overfit exits checkpoint their
      best-val adapter; freed slots are BACKFILLED from the pending queue
-     (intra-task online scheduling, §7.1) via the admission policy.
-
-The executor is shape-static: (Z, per-adapter batch, seq) never changes, so
-every admit/evict is an array update, not a recompile.
+     via the §A.3 admission policy (same-batch-size preferred, memory-
+     model bounded — ``sched/intra_task.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +59,7 @@ from repro.core.early_exit import (EarlyExitConfig, ExitDecision, ExitReason,
 from repro.data.synthetic import SlotBatcher, TaskDataset
 from repro.models import model as M
 from repro.sched.events import EventKind, ProgressEvent
+from repro.sched.intra_task import ExecutorSlots, MemoryModel, PendingJob
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,12 +70,19 @@ class ChunkReport:
     by stepping each executor one chunk at a time; ``steps_executed``
     converts to virtual cluster time via the profiled step time, and
     ``events`` carries every lifecycle transition that fired inside the
-    chunk (exits, selection, completion) so the runtime can replan."""
+    chunk (exits, selection, completion) so the runtime can replan.
+    ``task`` attributes the chunk to its lifecycle (co-located replicas
+    interleave chunks of several tasks), and ``slots_bound`` is a
+    monotone upper bound on the task's future concurrent slot use — the
+    quantity cross-task admission reclaims as survivors exit."""
     steps_executed: int
     events: Tuple[ProgressEvent, ...]
     phase: str
     remaining_steps_bound: int
     wall_time_s: float = 0.0     # realized host seconds (profiler feedback)
+    task: str = ""
+    slots_in_use: int = 0
+    slots_bound: int = 0
 
 
 @dataclasses.dataclass
@@ -67,7 +100,7 @@ class JobResult:
 @dataclasses.dataclass
 class TaskResult:
     task_name: str
-    best_job: str
+    best_job: Optional[str]     # None iff every job diverged (best_val=inf)
     best_val: float
     job_results: Dict[str, JobResult]
     wall_time_s: float
@@ -76,113 +109,555 @@ class TaskResult:
     exit_counts: Dict[str, int]
 
 
+# ---------------------------------------------------------------------------
+# Shared backbone executor
+# ---------------------------------------------------------------------------
+
+class SharedBackboneExecutor:
+    """One frozen-backbone replica: Z adapter slots shared by N tasks.
+
+    Owns the device state and the fused train/eval steps; task lifecycles
+    admit/evict slots through it and receive per-slot losses back. All
+    resident tasks must share (per-adapter batch, seq len, loss kind) —
+    the fuse-compatibility key the scheduler groups tasks by."""
+
+    def __init__(self, cfg: ModelConfig, params: Dict, *, Z: int,
+                 per_adapter_batch: int, eval_every: int = 5, seed: int = 0,
+                 loss_kind: str = "sft",
+                 mem_model: Optional[MemoryModel] = None):
+        self.cfg = cfg
+        self.params = params
+        self.Z = Z
+        self.b = per_adapter_batch
+        self.eval_every = eval_every
+        self.loss_kind = loss_kind
+        self.mem = mem_model
+        key = jax.random.PRNGKey(seed)
+        self.key, k_slots = jax.random.split(key)
+        self.slots = SlotManager(cfg, Z, M.target_shapes(cfg), k_slots)
+        self._train_step = jax.jit(
+            STEPS.make_train_step(cfg, loss_kind=loss_kind))
+        self._eval_step = jax.jit(
+            STEPS.make_eval_step(cfg, loss_kind=loss_kind))
+        self._lifecycles: Dict[str, "TaskLifecycle"] = {}
+        self._wall = 0.0
+
+    # ---- task registry -----------------------------------------------------
+    def add_task(self, lc: "TaskLifecycle") -> None:
+        assert lc.task_name not in self._lifecycles, lc.task_name
+        self._lifecycles[lc.task_name] = lc
+
+    def remove_task(self, task_name: str) -> None:
+        self._lifecycles.pop(task_name, None)
+
+    def resident_tasks(self) -> List["TaskLifecycle"]:
+        """Lifecycles with at least one occupied slot, registration order."""
+        return [lc for lc in self._lifecycles.values() if lc.resident]
+
+    def slot_headroom(self) -> int:
+        """Physical slots not claimed by any registered task's future-use
+        bound (what cross-task admission may hand to a new task)."""
+        return self.Z - sum(lc.slots_bound() for lc in
+                            self._lifecycles.values())
+
+    def can_admit_task(self, lc: "TaskLifecycle") -> bool:
+        """Cross-task admission gate: slot headroom plus the §A.3 memory
+        model under the safety margin (generalized to many tasks)."""
+        if lc.slots_bound() > self.slot_headroom():
+            return False
+        if self.mem is None:
+            return True
+        total = sum(x.slots_bound() for x in self._lifecycles.values())
+        return self.mem.fits((total + lc.slots_bound()) * self.b)
+
+    # ---- slot ops (called by lifecycles) -----------------------------------
+    def acquire_slot(self) -> int:
+        free = self.slots.free_slots()
+        assert free, "no free slot (admission gate violated)"
+        return free[0]
+
+    def admit(self, slot: int, task: str, job_id: str, tc: TrainConfig,
+              key: jax.Array) -> None:
+        self.slots.admit(slot, job_id, tc, key, task=task)
+
+    def restore(self, slot: int, task: str, snap: SlotSnapshot,
+                tc: TrainConfig) -> None:
+        self.slots.restore(slot, snap, tc, task=task)
+
+    def evict(self, slot: int) -> None:
+        self.slots.evict(slot)
+
+    def snapshot(self, slot: int) -> SlotSnapshot:
+        return self.slots.snapshot(slot)
+
+    def adapter_at(self, slot: int) -> Dict:
+        return self.slots.adapter_at(slot)
+
+    # ---- fused stepping ----------------------------------------------------
+    def _assemble(self) -> Dict[str, jnp.ndarray]:
+        """One fused [Z, ...] batch: each resident task's batcher yields
+        task-local lane rows, scattered into the physical slots its jobs
+        occupy. Unowned slots get zeros (their loss is masked anyway).
+        Every resident task's streams advance exactly one step — task-
+        local determinism, independent of co-tenants."""
+        bufs: Dict[str, np.ndarray] = {}
+        for lc in self.resident_tasks():
+            rows = lc.batcher.next_batch_dict()
+            for k, arr in rows.items():
+                if k not in bufs:
+                    bufs[k] = np.zeros((self.Z,) + arr.shape[1:], arr.dtype)
+                assert bufs[k].shape[1:] == arr.shape[1:], \
+                    f"co-located task {lc.task_name} batch shape mismatch"
+                for lane, slot in lc.resident.values():
+                    bufs[k][slot] = arr[lane]
+        return {k: jnp.asarray(v) for k, v in bufs.items()}
+
+    def run_steps(self, n: int) -> None:
+        """Train all active slots for n fused steps; dispatch per-slot
+        losses to the owning lifecycles' monitors."""
+        t0 = time.time()
+        for _ in range(n):
+            batch = self._assemble()
+            self.slots.lora, self.slots.opt_state, metrics = self._train_step(
+                self.params, self.slots.lora, self.slots.opt_state,
+                self.slots.hp, self.slots.active, self.slots.ranks, batch)
+            per_loss = np.asarray(metrics["per_slot_loss"])
+            for lc in self.resident_tasks():
+                for job, (_, slot) in lc.resident.items():
+                    lc.observe_train(job, float(per_loss[slot]))
+        # accumulate actual train/eval host time only — flush-to-flush
+        # deltas would also bill time the coordinator spent suspended
+        self._wall += time.time() - t0
+
+    def eval_task(self, lc: "TaskLifecycle") -> np.ndarray:
+        """Per-slot val losses for ``lc``'s dataset (broadcast to all Z
+        slots; slot isolation makes foreign-slot entries meaningless to
+        this task and identical-to-solo for its own)."""
+        t0 = time.time()
+        rows = lc.batcher.val_batch_dict()
+        batch = {k: jnp.asarray(np.broadcast_to(
+                     v[0][None], (self.Z,) + v.shape[1:]))
+                 for k, v in rows.items()}
+        val = np.asarray(self._eval_step(
+            self.params, self.slots.lora, self.slots.active, batch))
+        self._wall += time.time() - t0
+        return val
+
+    def take_wall(self) -> float:
+        wall, self._wall = self._wall, 0.0
+        return wall
+
+
+# ---------------------------------------------------------------------------
+# Per-task lifecycle state machine
+# ---------------------------------------------------------------------------
+
+class TaskLifecycle:
+    """Warmup-rotation -> selection -> continue/backfill for ONE task,
+    admitting/evicting slots through a (possibly shared) executor.
+
+    Everything the lifecycle does is a function of its own construction
+    arguments — batch streams, init keys, and eval points are task-local
+    (lane-indexed, not physical-slot-indexed) — so its loss trajectory is
+    bitwise identical whether the executor hosts it alone or co-located
+    with other tasks (the loss-isolation property, tested in
+    tests/test_lora_isolation.py)."""
+
+    def __init__(self, ex: SharedBackboneExecutor, task_name: str,
+                 jobs: Dict[str, TrainConfig], total_steps: int, *,
+                 ee: EarlyExitConfig = EarlyExitConfig(),
+                 max_slots: Optional[int] = None,
+                 batcher=None, dataset: Optional[TaskDataset] = None,
+                 seed: int = 0):
+        assert jobs, f"task {task_name} has no jobs"
+        self.ex = ex
+        self.task_name = task_name
+        self.jobs = dict(jobs)
+        self.total_steps = total_steps
+        self.ee = ee
+        self.m = min(max_slots or ex.Z, ex.Z)     # this task's slot budget
+        if batcher is None:
+            assert dataset is not None, "need a batcher or a dataset"
+            batcher = SlotBatcher(dataset, self.m, ex.b, seed=seed)
+        self.batcher = batcher
+        self.K = len(jobs)
+        self.warmup_steps = ee.warmup_steps(total_steps)
+        self._key = jax.random.PRNGKey(seed)
+        self._admissions = 0
+        self.monitors: Dict[str, JobMonitor] = {
+            j: JobMonitor(ee, j) for j in jobs}
+        self.snapshots: Dict[str, SlotSnapshot] = {}
+        self._best_ckpt: Dict[str, Dict] = {}
+        self.steps_done: Dict[str, int] = {}
+        self.resident: Dict[str, Tuple[int, int]] = {}   # job -> (lane, slot)
+        self._free_lanes: List[int] = list(range(self.m))
+        self._queue: List[str] = []
+        # §A.3 admission/backfill policy over this task's slot budget; the
+        # executor-level memory model bounds the *replica*, this instance
+        # bounds the task's own allocation
+        self._policy = ExecutorSlots(
+            ex.mem if ex.mem is not None else _PERMISSIVE_MEM, self.m)
+        job_ids = list(self.jobs)
+        self._waves: List[List[str]] = [job_ids[i:i + self.m]
+                                        for i in range(0, self.K, self.m)]
+        self._wave_idx = 0
+        self._wave_step = 0
+        self._cont_step = 0
+        self.phase = "idle"
+        self._events: List[ProgressEvent] = []
+        self._t0 = 0.0
+        self._result: Optional[TaskResult] = None
+
+    # ---- helpers -----------------------------------------------------------
+    def _next_key(self) -> jax.Array:
+        # fold_in(admission counter): per-job init keys depend only on this
+        # task's own admission history, never on co-tenant interleaving
+        self._admissions += 1
+        return jax.random.fold_in(self._key, self._admissions)
+
+    def _admit_job(self, job_id: str) -> None:
+        lane = self._free_lanes.pop(0)
+        slot = self.ex.acquire_slot()
+        tc = self.jobs[job_id]
+        if job_id in self.snapshots:
+            self.ex.restore(slot, self.task_name,
+                            self.snapshots.pop(job_id), tc)
+        else:
+            self.ex.admit(slot, self.task_name, job_id, tc, self._next_key())
+        self.resident[job_id] = (lane, slot)
+        self._policy.resident[job_id] = tc.per_adapter_batch
+
+    def _evict_job(self, job_id: str) -> int:
+        lane, slot = self.resident.pop(job_id)
+        self.ex.evict(slot)
+        self._free_lanes.append(lane)
+        self._free_lanes.sort()
+        return self._policy.evict(job_id)
+
+    def observe_train(self, job_id: str, loss: float) -> None:
+        self.monitors[job_id].observe_train(loss)
+        self.steps_done[job_id] = self.steps_done.get(job_id, 0) + 1
+
+    @property
+    def done(self) -> bool:
+        return self.phase == "done"
+
+    def drain_events(self) -> Tuple[ProgressEvent, ...]:
+        ev, self._events = tuple(self._events), []
+        return ev
+
+    # ---- capacity observability (cross-task admission) ---------------------
+    def slots_in_use(self) -> int:
+        return len(self.resident)
+
+    def slots_bound(self) -> int:
+        """Monotone upper bound on future concurrent slot use. Shrinks as
+        warmup waves drain and survivors exit — the freed capacity the
+        cross-task admission path reclaims for pending small tasks."""
+        if self.phase == "done":
+            return 0
+        if self.phase in ("idle", "warmup"):
+            alive_waves = [len([j for j in w if self.monitors[j].exited
+                                is None])
+                           for w in self._waves[self._wave_idx:]]
+            cont = min(self.m, self.ee.top_k(self.K))
+            return max(alive_waves + [cont, len(self.resident)])
+        return min(self.m, len(self.resident) + len(self._queue))
+
+    def remaining_steps_bound(self) -> int:
+        """Upper bound on executor steps left in this lifecycle, assuming
+        no further pattern exits (the residual d_i the elastic runtime
+        plans with; shrinks monotonically as events fire)."""
+        m = max(self.m, 1)
+        cont_budget = self.total_steps - self.warmup_steps
+        if self.phase in ("idle", "warmup"):
+            survivors = self.ee.top_k(self.K)
+            cont = -(-survivors // m) * cont_budget
+            waves_left = max(len(self._waves) - self._wave_idx - 1, 0)
+            in_wave = (self.warmup_steps - self._wave_step
+                       if self.phase == "warmup" else
+                       len(self._waves) and self.warmup_steps)
+            return in_wave + waves_left * self.warmup_steps + cont
+        if self.phase == "continue":
+            alive = list(self.resident) + list(self._queue)
+            rem = [max(self.total_steps - self.steps_done.get(j, 0), 0)
+                   for j in alive]
+            if not rem:
+                return 0
+            return -(-len(rem) // m) * max(rem)
+        return 0
+
+    # ---- phase machine -----------------------------------------------------
+    def begin(self) -> None:
+        assert self.phase == "idle"
+        self._t0 = time.time()
+        self.phase = "warmup"
+        self._start_wave()
+
+    def _start_wave(self) -> None:
+        for job_id in self._waves[self._wave_idx]:
+            self._admit_job(job_id)
+        self._wave_step = 0
+
+    def steps_until_boundary(self) -> int:
+        """Steps to this task's next decision point (eval-grid point, wave
+        end, or the nearest resident job's budget). Always >= 1 for a
+        non-done lifecycle; the coordinator steps the executor by the min
+        across co-located tasks so no task overshoots its boundary."""
+        ev = self.ex.eval_every
+        if self.phase == "warmup":
+            to_eval = ev - (self._wave_step % ev)
+            return min(self.warmup_steps - self._wave_step, to_eval)
+        if self.phase == "continue":
+            to_eval = ev - (self._cont_step % ev)
+            to_budget = min(
+                (self.total_steps - self.steps_done.get(j, 0)
+                 for j in self.resident), default=to_eval)
+            return max(min(to_eval, to_budget), 1)
+        return 1 << 30
+
+    def on_steps(self, n: int) -> None:
+        """Advance the task-local clock after the executor trained n fused
+        steps; process any boundary that landed. Eval points are defined on
+        the task's OWN step grid (every ``eval_every`` phase steps, wave
+        ends, budget hits) — a co-tenant's smaller chunk never adds an
+        eval, which is what keeps co-located loss histories identical to
+        solo ones."""
+        if self.phase == "warmup":
+            self._wave_step += n
+            if (self._wave_step % self.ex.eval_every == 0
+                    or self._wave_step >= self.warmup_steps):
+                self._eval_and_detect()
+            if self._wave_step >= self.warmup_steps:
+                self._end_wave()
+        elif self.phase == "continue":
+            self._cont_step += n
+            at_budget = any(self.steps_done.get(j, 0) >= self.total_steps
+                            for j in self.resident)
+            if self._cont_step % self.ex.eval_every == 0 or at_budget:
+                self._eval_and_detect()
+            self._settle_continue()
+
+    # ---- warmup ------------------------------------------------------------
+    def _end_wave(self) -> None:
+        # snapshot+rotate out whatever survived this wave
+        for job_id in list(self.resident):
+            lane, slot = self.resident[job_id]
+            self.snapshots[job_id] = self.ex.snapshot(slot)
+            self._evict_job(job_id)
+        self._wave_idx += 1
+        if self._wave_idx < len(self._waves):
+            self._start_wave()
+        else:
+            self._select_and_continue()
+
+    def _select_and_continue(self) -> None:
+        # Pattern-3 selection at the warmup boundary (underperformance)
+        kept, dropped = warmup_select(self.monitors, self.ee,
+                                      num_candidates=self.K)
+        for j in dropped:
+            self.monitors[j]._exit(ExitReason.UNDERPERFORMING,
+                                   self.steps_done.get(j, self.warmup_steps))
+            self.snapshots.pop(j, None)
+        if dropped:
+            self._events.append(ProgressEvent(
+                kind=EventKind.WARMUP_SELECTION, task=self.task_name,
+                reason=ExitReason.UNDERPERFORMING.value,
+                step=self.warmup_steps, dropped=tuple(dropped)))
+        self.phase = "continue"
+        self._cont_step = 0
+        self._queue = list(kept)
+        # §A.3 greedy decreasing-batch-size initial admission (stable sort:
+        # a homogeneous-batch queue keeps its val-loss ranking)
+        pending = [PendingJob(j, self.jobs[j].per_adapter_batch)
+                   for j in self._queue]
+        for pj in self._policy.admit_initial(pending):
+            del self._policy.resident[pj.job_id]     # _admit_job re-adds
+            self._queue.remove(pj.job_id)
+            self._admit_job(pj.job_id)
+        self._settle_continue()
+
+    # ---- continue ----------------------------------------------------------
+    def _backfill(self, vacated_b: int) -> None:
+        """§A.3 backfill into freed capacity: prefer a pending job with the
+        SAME per-adapter batch size (homogeneous packing hits the grouped-
+        GEMM fast path), mixed only when the memory model confirms it."""
+        if not self._queue or not self._free_lanes:
+            return
+        pending = [PendingJob(j, self.jobs[j].per_adapter_batch)
+                   for j in self._queue]
+        pick = self._policy.backfill(vacated_b, pending)
+        if pick is None:
+            return
+        del self._policy.resident[pick.job_id]       # _admit_job re-adds
+        self._queue.remove(pick.job_id)
+        self._admit_job(pick.job_id)
+
+    def _exit_job(self, job_id: str, decision: ExitDecision) -> None:
+        self._events.append(ProgressEvent(
+            kind=EventKind.JOB_EXITED, task=self.task_name, job=job_id,
+            reason=decision.reason.value, step=decision.step))
+        vacated_b = self._evict_job(job_id)
+        if self.phase == "continue":
+            self._backfill(vacated_b)
+
+    def _eval_and_detect(self) -> None:
+        if not self.resident:
+            return
+        val = self.ex.eval_task(self)
+        for job_id, (_, slot) in list(self.resident.items()):
+            mon = self.monitors[job_id]
+            prev_best = mon.best_val
+            decision = mon.observe_val(float(val[slot]),
+                                       self.steps_done.get(job_id, 0))
+            # checkpoint best-val adapter (cheap: host copy of one slot)
+            if mon.val_hist[-1] <= prev_best:
+                self._best_ckpt[job_id] = self.ex.adapter_at(slot)
+            if decision is not None:
+                self._exit_job(job_id, decision)
+
+    def _settle_continue(self) -> None:
+        """Complete at-budget jobs (possibly newly backfilled ones, who may
+        arrive already at budget when warmup == total budget) and finish
+        the task once queue + slots drain."""
+        changed = True
+        while changed:
+            changed = False
+            for job_id in list(self.resident):
+                if self.steps_done.get(job_id, 0) >= self.total_steps:
+                    self.monitors[job_id]._exit(
+                        ExitReason.COMPLETED, self.steps_done[job_id])
+                    self._events.append(ProgressEvent(
+                        kind=EventKind.JOB_EXITED, task=self.task_name,
+                        job=job_id, reason=ExitReason.COMPLETED.value,
+                        step=self.steps_done[job_id]))
+                    self._backfill(self._evict_job(job_id))
+                    changed = True
+        if not self.resident and not self._queue:
+            self._finish()
+
+    # ---- results -----------------------------------------------------------
+    def _finish(self) -> None:
+        self.phase = "done"
+        results: Dict[str, JobResult] = {}
+        for job_id, tc in self.jobs.items():
+            mon = self.monitors[job_id]
+            results[job_id] = JobResult(
+                job_id=job_id, config=tc, best_val=mon.best_val,
+                best_val_step=mon.best_val_step,
+                exit_reason=(mon.exited.reason if mon.exited else None),
+                steps_trained=mon.steps_trained,
+                samples_trained=mon.steps_trained * self.ex.b)
+        finite = {j: r for j, r in results.items()
+                  if np.isfinite(r.best_val)}
+        # all jobs can diverge (every val loss inf/nan): report an empty
+        # winner instead of crashing — the tenant sees best_job=None
+        best_job: Optional[str] = (
+            min(finite, key=lambda j: finite[j].best_val) if finite else None)
+        best_val = results[best_job].best_val if best_job else float("inf")
+        if best_job is not None:
+            results[best_job].adapter = self._best_ckpt.get(best_job)
+        total_samples = sum(r.samples_trained for r in results.values())
+        full_samples = self.K * self.total_steps * self.ex.b
+        exit_counts: Dict[str, int] = {}
+        for r in results.values():
+            if r.exit_reason is not None:
+                exit_counts[r.exit_reason.value] = (
+                    exit_counts.get(r.exit_reason.value, 0) + 1)
+        self._events.append(ProgressEvent(
+            kind=EventKind.TASK_COMPLETED, task=self.task_name,
+            detail=f"best={best_job}"))
+        self._result = TaskResult(
+            task_name=self.task_name, best_job=best_job, best_val=best_val,
+            job_results=results, wall_time_s=time.time() - self._t0,
+            total_samples=total_samples,
+            samples_saved_frac=1.0 - total_samples / max(full_samples, 1),
+            exit_counts=exit_counts)
+
+    def result(self) -> TaskResult:
+        assert self._result is not None, "lifecycle not finished"
+        return self._result
+
+
+_PERMISSIVE_MEM = MemoryModel(k0=0.0, k1=0.0, seq_len=1,
+                              capacity=float("inf"))
+
+
+# ---------------------------------------------------------------------------
+# Coordinators
+# ---------------------------------------------------------------------------
+
+def run_colocated(ex: SharedBackboneExecutor,
+                  lifecycles: Sequence[TaskLifecycle],
+                  ) -> Dict[str, TaskResult]:
+    """Drive several task lifecycles over ONE shared executor.
+
+    Tasks are admitted in order the moment the cross-task gate (slot
+    headroom + memory model, ``can_admit_task``) accepts them — a pending
+    small task starts as soon as survivors of the running tasks free
+    enough capacity, instead of waiting for a whole replica. The fused
+    executor steps by the min boundary across resident tasks, so every
+    task hits its own eval grid exactly as it would alone."""
+    waiting = list(lifecycles)
+    live: List[TaskLifecycle] = []
+    results: Dict[str, TaskResult] = {}
+    guard = 10 + 20 * sum(
+        lc.total_steps * max(lc.K, 1) for lc in lifecycles)
+
+    def try_admit() -> None:
+        for lc in list(waiting):
+            if ex.can_admit_task(lc):
+                ex.add_task(lc)
+                lc.begin()
+                waiting.remove(lc)
+                live.append(lc)
+
+    try_admit()
+    while (waiting or live) and guard > 0:
+        for lc in list(live):
+            if lc.done:
+                results[lc.task_name] = lc.result()
+                ex.remove_task(lc.task_name)
+                live.remove(lc)
+        try_admit()
+        if not live:
+            if waiting:
+                raise RuntimeError(
+                    f"unplaceable tasks: {[lc.task_name for lc in waiting]}")
+            break
+        n = min(lc.steps_until_boundary() for lc in live)
+        n = max(min(n, ex.eval_every), 1)
+        ex.run_steps(n)
+        guard -= n
+        for lc in live:
+            lc.on_steps(n)
+    assert guard > 0, "colocated coordinator stopped progressing"
+    return results
+
+
 class BatchedExecutor:
+    """Single-task compatibility wrapper: one SharedBackboneExecutor, one
+    TaskLifecycle, the original run_task / run_task_chunks API."""
+
     def __init__(self, cfg: ModelConfig, params: Dict, dataset: TaskDataset,
                  *, Z: int, per_adapter_batch: int,
                  ee: EarlyExitConfig = EarlyExitConfig(),
                  eval_every: int = 5, seed: int = 0,
-                 loss_kind: str = "sft", batcher=None):
+                 loss_kind: str = "sft", batcher=None,
+                 mem_model: Optional[MemoryModel] = None):
+        self.backbone = SharedBackboneExecutor(
+            cfg, params, Z=Z, per_adapter_batch=per_adapter_batch,
+            eval_every=eval_every, seed=seed, loss_kind=loss_kind,
+            mem_model=mem_model)
         self.cfg = cfg
-        self.params = params
         self.dataset = dataset
         self.Z = Z
         self.b = per_adapter_batch
         self.ee = ee
         self.eval_every = eval_every
-        key = jax.random.PRNGKey(seed)
-        self.key, k_slots = jax.random.split(key)
-        self.slots = SlotManager(cfg, Z, M.target_shapes(cfg), k_slots)
-        # custom batcher (e.g. PairSlotBatcher for DPO) or token LM default
-        self.batcher = batcher if batcher is not None else SlotBatcher(
-            dataset, Z, per_adapter_batch, seed=seed)
-        self._train_step = jax.jit(
-            STEPS.make_train_step(cfg, loss_kind=loss_kind))
-        self._eval_step = jax.jit(
-            STEPS.make_eval_step(cfg, loss_kind=loss_kind))
-        self.monitors: Dict[str, JobMonitor] = {}
-        self.snapshots: Dict[str, SlotSnapshot] = {}
-        self._best_ckpt: Dict[str, Dict] = {}
-        self._queue: List[Tuple[str, TrainConfig]] = []
-        self._budget: Optional[int] = None
-        # chunked-execution state (see run_task_chunks)
-        self._chunk_wall = 0.0
-        self._chunk_events: List[ProgressEvent] = []
-        self._task_name = ""
-        self._phase = "idle"
-        self._K = 0
-        self._total_steps = 0
-        self._warmup_steps = 0
-        self._waves_left = 0
-        self._steps_left_in_wave = 0
-        self._steps_done: Dict[str, int] = {}
-
-    def _next_key(self) -> jax.Array:
-        self.key, k = jax.random.split(self.key)
-        return k
-
-    # ------------------------------------------------------------------ util
-    def _run_steps(self, n: int, step_offset: Dict[str, int]) -> None:
-        """Train all active slots for n steps, with eval/pattern checks."""
-        t0 = time.time()
-        for i in range(n):
-            batch = {k: jnp.asarray(v)
-                     for k, v in self.batcher.next_batch_dict().items()}
-            self.slots.lora, self.slots.opt_state, metrics = self._train_step(
-                self.params, self.slots.lora, self.slots.opt_state,
-                self.slots.hp, self.slots.active, self.slots.ranks, batch)
-            per_loss = np.asarray(metrics["per_slot_loss"])
-            for job, slot in self.slots.occupied().items():
-                self.monitors[job].observe_train(float(per_loss[slot]))
-                step_offset[job] = step_offset.get(job, 0) + 1
-            if (i + 1) % self.eval_every == 0 or i == n - 1:
-                self._eval_and_detect(step_offset)
-            if self._budget is not None:
-                for job, slot in list(self.slots.occupied().items()):
-                    if step_offset.get(job, 0) >= self._budget:
-                        self.monitors[job]._exit(
-                            ExitReason.COMPLETED, step_offset[job])
-                        self._chunk_events.append(ProgressEvent(
-                            kind=EventKind.JOB_EXITED, task=self._task_name,
-                            job=job, reason=ExitReason.COMPLETED.value,
-                            step=step_offset[job]))
-                        self.slots.evict(slot)
-                        self._backfill(slot)
-        # accumulate actual train/eval host time only — flush-to-flush
-        # deltas would also bill time the generator spent suspended while
-        # other tasks' chunks executed
-        self._chunk_wall += time.time() - t0
-
-    def _eval_and_detect(self, step_offset: Dict[str, int]) -> None:
-        batch = {k: jnp.asarray(v)
-                 for k, v in self.batcher.val_batch_dict().items()}
-        val = np.asarray(self._eval_step(
-            self.params, self.slots.lora, self.slots.active, batch))
-        for job, slot in list(self.slots.occupied().items()):
-            mon = self.monitors[job]
-            prev_best = mon.best_val
-            decision = mon.observe_val(float(val[slot]), step_offset[job])
-            # checkpoint best-val adapter (cheap: host copy of one slot)
-            if mon.val_hist[-1] <= prev_best:
-                self._best_ckpt[job] = self.slots.adapter_of(job)
-            if decision is not None:
-                self._exit_job(job, slot, decision)
-
-    def _exit_job(self, job: str, slot: int, decision: ExitDecision) -> None:
-        self._chunk_events.append(ProgressEvent(
-            kind=EventKind.JOB_EXITED, task=self._task_name, job=job,
-            reason=decision.reason.value, step=decision.step))
-        self.slots.evict(slot)
-        self._backfill(slot)
-
-    def _backfill(self, slot: int) -> None:
-        """Intra-task online admission: prefer same-batch-size pending jobs
-        (homogeneous packing is structural here — one executor, one b)."""
-        if self._queue:
-            job_id, tc = self._queue.pop(0)
-            if job_id in self.snapshots:
-                self.slots.restore(slot, self.snapshots.pop(job_id), tc)
-            else:
-                self.slots.admit(slot, job_id, tc, self._next_key())
+        self.seed = seed
+        self._batcher = batcher
+        self.slots = self.backbone.slots      # compat: direct slot access
 
     # ------------------------------------------------------------------ run
     def run_task(self, task_name: str, jobs: Dict[str, TrainConfig],
@@ -195,162 +670,36 @@ class BatchedExecutor:
             except StopIteration as done:
                 return done.value
 
-    def remaining_steps_bound(self) -> int:
-        """Upper bound on executor steps left in the current lifecycle,
-        assuming no further pattern exits (the residual d_i the elastic
-        runtime plans with; shrinks monotonically as events fire)."""
-        Z = max(self.Z, 1)
-        cont_budget = self._total_steps - self._warmup_steps
-        if self._phase == "warmup":
-            survivors = self.ee.top_k(self._K)
-            cont = -(-survivors // Z) * cont_budget
-            return (self._steps_left_in_wave
-                    + self._waves_left * self._warmup_steps + cont)
-        if self._phase == "continue":
-            alive = list(self.slots.occupied()) + [j for j, _ in self._queue]
-            rem = [max(self._total_steps - self._steps_done.get(j, 0), 0)
-                   for j in alive]
-            if not rem:
-                return 0
-            return -(-len(rem) // Z) * max(rem)
-        return 0
-
-    def _flush_chunk(self, steps: int) -> ChunkReport:
-        events, self._chunk_events = tuple(self._chunk_events), []
-        wall, self._chunk_wall = self._chunk_wall, 0.0
-        return ChunkReport(steps_executed=steps, events=events,
-                           phase=self._phase,
-                           remaining_steps_bound=self.remaining_steps_bound(),
-                           wall_time_s=wall)
-
     def run_task_chunks(self, task_name: str, jobs: Dict[str, TrainConfig],
                         total_steps: int):
         """Generator form of the lifecycle: yields a ChunkReport after every
         bounded chunk (<= eval_every steps) so the elastic cluster runtime
         can interleave many tasks and replan on the events each chunk
         surfaces. ``return``s the TaskResult (StopIteration.value)."""
-        t0 = time.time()
-        self._chunk_wall = 0.0
-        K = len(jobs)
-        warmup = self.ee.warmup_steps(total_steps)
-        self.monitors = {j: JobMonitor(self.ee, j) for j in jobs}
-        self._best_ckpt = {}
-        self._queue = []
-        self._chunk_events = []
-        self._task_name = task_name
-        self._K = K
-        self._total_steps = total_steps
-        self._warmup_steps = warmup
-        job_items = list(jobs.items())
+        ex = self.backbone
+        batcher = (self._batcher if self._batcher is not None
+                   else SlotBatcher(self.dataset, self.Z, self.b,
+                                    seed=self.seed))
+        lc = TaskLifecycle(ex, task_name, jobs, total_steps, ee=self.ee,
+                           max_slots=self.Z, batcher=batcher, seed=self.seed)
+        ex.add_task(lc)
+        ex.take_wall()
+        lc.begin()
+        guard = 10 + 20 * total_steps * max(len(jobs), 1)
+        while not lc.done and guard > 0:
+            n = max(min(lc.steps_until_boundary(), self.eval_every), 1)
+            ex.run_steps(n)
+            guard -= n
+            lc.on_steps(n)
+            yield self._flush(lc, n)
+        assert guard > 0, f"task {task_name} stopped progressing"
+        yield self._flush(lc, 0)
+        ex.remove_task(task_name)
+        return lc.result()
 
-        # ---- phase 1: warmup waves (rotation when K > Z)
-        waves = [job_items[i:i + self.Z] for i in range(0, K, self.Z)]
-        steps_done: Dict[str, int] = {}
-        self._steps_done = steps_done
-        self._phase = "warmup"
-        self._waves_left = len(waves)
-        for wave in waves:
-            for s, (job_id, tc) in enumerate(wave):
-                self.slots.admit(s, job_id, tc, self._next_key())
-            self._queue = []
-            self._waves_left -= 1
-            rem = warmup
-            while rem > 0:
-                # eval_every-aligned slices reproduce run_task's eval points
-                n = min(self.eval_every, rem)
-                self._steps_left_in_wave = rem
-                self._run_steps(n, steps_done)
-                rem -= n
-                self._steps_left_in_wave = rem
-                yield self._flush_chunk(n)
-            # snapshot+rotate out whatever survived this wave
-            for job_id, slot in list(self.slots.occupied().items()):
-                self.snapshots[job_id] = self.slots.snapshot(slot)
-                self.slots.evict(slot)
-
-        # ---- phase 2: warmup-boundary selection (underperformance)
-        kept, dropped = warmup_select(self.monitors, self.ee,
-                                      num_candidates=K)
-        for j in dropped:
-            self.monitors[j]._exit(ExitReason.UNDERPERFORMING,
-                                   steps_done.get(j, warmup))
-            self.snapshots.pop(j, None)
-        self._phase = "continue"
-        if dropped:
-            self._chunk_events.append(ProgressEvent(
-                kind=EventKind.WARMUP_SELECTION, task=task_name,
-                reason=ExitReason.UNDERPERFORMING.value,
-                step=warmup, dropped=tuple(dropped)))
-
-        # ---- phase 3: continue-training with online detection + backfill
-        self._budget = total_steps
-        self._queue = [(j, jobs[j]) for j in kept]
-        for slot in self.slots.free_slots():
-            if not self._queue:
-                break
-            self._backfill(slot)
-        yield self._flush_chunk(0)
-        guard = 10 * total_steps * max(len(kept) // max(self.Z, 1), 1) + 10
-        while self.slots.occupied() and guard > 0:
-            # jobs already at budget (warmup == total_steps) complete
-            # without training another step
-            for job, slot in list(self.slots.occupied().items()):
-                if steps_done.get(job, 0) >= total_steps:
-                    self.monitors[job]._exit(
-                        ExitReason.COMPLETED, steps_done[job])
-                    self._chunk_events.append(ProgressEvent(
-                        kind=EventKind.JOB_EXITED, task=task_name, job=job,
-                        reason=ExitReason.COMPLETED.value,
-                        step=steps_done[job]))
-                    self.slots.evict(slot)
-                    self._backfill(slot)
-            if not self.slots.occupied():
-                yield self._flush_chunk(0)
-                break
-            # clamp to the occupied jobs' remaining budget so the realized
-            # step count never exceeds the profiler's worst-case estimate
-            # (no ghost steps on empty slots after the last eviction)
-            rem = max(total_steps - steps_done.get(j, 0)
-                      for j in self.slots.occupied())
-            chunk = min(self.eval_every, rem)
-            self._run_steps(chunk, steps_done)
-            guard -= chunk
-            yield self._flush_chunk(chunk)
-        self._budget = None
-        for job_id, slot in list(self.slots.occupied().items()):
-            self.monitors[job_id]._exit(
-                ExitReason.COMPLETED, steps_done.get(job_id, total_steps))
-            self.slots.evict(slot)
-        self._phase = "done"
-
-        # ---- results
-        results: Dict[str, JobResult] = {}
-        for job_id, tc in jobs.items():
-            mon = self.monitors[job_id]
-            results[job_id] = JobResult(
-                job_id=job_id, config=tc, best_val=mon.best_val,
-                best_val_step=mon.best_val_step,
-                exit_reason=(mon.exited.reason if mon.exited else None),
-                steps_trained=mon.steps_trained,
-                samples_trained=mon.steps_trained * self.b)
-        finite = {j: r for j, r in results.items()
-                  if np.isfinite(r.best_val)}
-        best_job = min(finite, key=lambda j: finite[j].best_val)
-        results[best_job].adapter = self._best_ckpt.get(best_job)
-        total_samples = sum(r.samples_trained for r in results.values())
-        full_samples = K * total_steps * self.b
-        exit_counts: Dict[str, int] = {}
-        for r in results.values():
-            if r.exit_reason is not None:
-                exit_counts[r.exit_reason.value] = (
-                    exit_counts.get(r.exit_reason.value, 0) + 1)
-        self._chunk_events.append(ProgressEvent(
-            kind=EventKind.TASK_COMPLETED, task=task_name,
-            detail=f"best={best_job}"))
-        yield self._flush_chunk(0)
-        return TaskResult(
-            task_name=task_name, best_job=best_job,
-            best_val=results[best_job].best_val, job_results=results,
-            wall_time_s=time.time() - t0, total_samples=total_samples,
-            samples_saved_frac=1.0 - total_samples / max(full_samples, 1),
-            exit_counts=exit_counts)
+    def _flush(self, lc: TaskLifecycle, steps: int) -> ChunkReport:
+        return ChunkReport(
+            steps_executed=steps, events=lc.drain_events(), phase=lc.phase,
+            remaining_steps_bound=lc.remaining_steps_bound(),
+            wall_time_s=self.backbone.take_wall(), task=lc.task_name,
+            slots_in_use=lc.slots_in_use(), slots_bound=lc.slots_bound())

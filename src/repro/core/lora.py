@@ -174,6 +174,16 @@ def slot_update(tree: Dict, slot: int, new_tree_slot: Dict) -> Dict:
     return jax.tree_util.tree_map(upd, tree, new_tree_slot)
 
 
+def gather_slots(tree: Dict, slots: "list[int]") -> Dict:
+    """Extract a sub-tree of the given slots (leading Z axis becomes
+    len(slots)). Used to address one TASK's adapters inside a shared
+    multi-task executor — slots co-located on one backbone need not be
+    contiguous."""
+    import numpy as _np
+    idx = _np.asarray(slots, _np.int32)
+    return jax.tree_util.tree_map(lambda x: x[:, idx], tree)
+
+
 def zero_slot(tree: Dict, slot: int) -> Dict:
     """Zero a slot's adapter params (eviction)."""
     def z(x: jnp.ndarray) -> jnp.ndarray:

@@ -38,8 +38,8 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 from repro.core.early_exit import EarlyExitConfig
 from repro.sched import profiler
-from repro.sched.cluster import (ElasticClusterRuntime, RuntimeReport,
-                                 TaskDriver)
+from repro.sched.cluster import (ColocationSpec, ElasticClusterRuntime,
+                                 RuntimeReport, TaskDriver)
 from repro.sched.events import ProgressEvent
 from repro.sched.inter_task import Schedule, TaskSpec
 
@@ -137,6 +137,7 @@ class ServiceReport:
     task_starts: Dict[str, float]
     task_ends: Dict[str, float]
     runtime: RuntimeReport
+    colocated: Dict[str, str] = dataclasses.field(default_factory=dict)
 
 
 class TuningService:
@@ -156,7 +157,12 @@ class TuningService:
                  eval_every: Optional[int] = None,
                  method: str = "cp", delay_delta: Optional[float] = 2.0,
                  profile_store: Optional[profiler.ProfileStore] = None,
-                 engine=None):
+                 engine=None, colocate: bool = True,
+                 profile_path: Optional[str] = None):
+        if profile_store is None and profile_path is not None:
+            # persistence across sessions (ROADMAP service hardening):
+            # feedback observed by earlier service processes seeds this one
+            profile_store = profiler.ProfileStore.load_or_new(profile_path)
         if engine is None:
             from repro.core.engine import Engine
             engine = Engine(strategy=strategy or "adapter_parallel",
@@ -177,8 +183,10 @@ class TuningService:
         self.engine = engine
         self.profile_store = engine.profile_store
         self.total_gpus = engine.total_gpus
+        self.profile_path = profile_path
         self._runtime = ElasticClusterRuntime(
-            engine.total_gpus, method=method, delay_delta=delay_delta)
+            engine.total_gpus, method=method, delay_delta=delay_delta,
+            colocate=colocate)
         self._meta: Dict[str, _TaskMeta] = {}
         self._handles: Dict[str, TaskHandle] = {}
         self._recorded: set = set()
@@ -202,18 +210,23 @@ class TuningService:
         factory = self.engine.executor_driver_factory(task, early_exit)
         return self.submit_spec(
             spec, factory, at=at, profile_key=self.engine.profile_key(task),
-            scale_duration=not explicit)
+            scale_duration=not explicit,
+            colo=self.engine.colocation_spec(task))
 
     def submit_spec(self, spec: TaskSpec,
                     driver_factory: Callable[[], TaskDriver],
                     at: float = 0.0, profile_key: Optional[Tuple] = None,
-                    scale_duration: bool = True) -> TaskHandle:
+                    scale_duration: bool = True,
+                    colo: Optional[ColocationSpec] = None) -> TaskHandle:
         """Low-level admission: any ``TaskDriver`` factory (simulated
         drivers for benchmarks / property tests). When ``profile_key`` is
         given and ``scale_duration`` is on, the estimated duration is
         rescaled by the store's observed realized/estimated ratio for that
         key — the feedback loop. Feedback is always *recorded* against the
-        unscaled estimate so the ratio never compounds."""
+        unscaled estimate so the ratio never compounds. ``colo`` marks the
+        task fusable: instead of waiting for free GPUs, a small pending
+        task is routed onto a live shared-backbone replica with the same
+        fuse key the moment cross-task admission accepts it."""
         name = spec.name
         assert name not in self._meta, f"duplicate task name {name}"
         unscaled = spec.duration
@@ -230,7 +243,7 @@ class TuningService:
             meta.driver = drv            # kept for wall-time feedback
             return drv
 
-        self._runtime.submit(spec, wrapped, at=at)
+        self._runtime.submit(spec, wrapped, at=at, colo=colo)
         self._meta[name] = meta
         handle = TaskHandle(self, name)
         self._handles[name] = handle
@@ -278,13 +291,24 @@ class TuningService:
         while self._step():
             pass
         rt = self._runtime.report()
+        if self.profile_path is not None:
+            self.profile_store.save(self.profile_path)
         return ServiceReport(
             task_results=dict(rt.results), makespan=rt.makespan,
             utilization=rt.utilization, replans=rt.replans,
             plans_adopted=rt.plans_adopted,
             plans_rejected=rt.plans_rejected, events=list(rt.events),
             cancelled=rt.cancelled, task_starts=dict(rt.task_starts),
-            task_ends=dict(rt.task_ends), runtime=rt)
+            task_ends=dict(rt.task_ends), runtime=rt,
+            colocated=dict(rt.colocated))
+
+    def save_profile(self, path: Optional[str] = None) -> None:
+        """Persist the session's ProfileStore (feedback survives process
+        restarts; ``profile_path`` sessions also save automatically at
+        every ``run_until_idle``)."""
+        target = path or self.profile_path
+        assert target, "no profile path configured"
+        self.profile_store.save(target)
 
     # ------------------------------------------------------------ feedback
     def _feedback(self) -> None:

@@ -68,6 +68,8 @@ from repro.sched.events import EventKind, ProgressEvent
 from repro.sched.inter_task import (Placement, Schedule, TaskSpec,
                                     diff_schedules, lpt_schedule, solve,
                                     solve_residual)
+from repro.sched.intra_task import (ColoRequest, MemoryModel,
+                                    admit_cross_task)
 
 _EPS = 1e-9
 
@@ -78,6 +80,23 @@ class DriverChunk:
     dt: float                              # virtual seconds consumed
     events: Tuple[ProgressEvent, ...] = ()
     done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ColocationSpec:
+    """A task's shared-backbone co-location profile.
+
+    Tasks with EQUAL ``fuse_key`` (arch, GPU demand, per-adapter batch,
+    seq len, loss kind) may share one frozen-backbone replica: the
+    replica hosting the task has ``replica_slots`` physical adapter
+    slots, the task itself needs at most ``slots_needed`` of them
+    concurrently, and ``mem`` is the replica's fitted §A.3 memory model
+    (safety-margin bounded) that cross-task admission checks against."""
+    fuse_key: Tuple
+    per_adapter_batch: int
+    slots_needed: int
+    replica_slots: int
+    mem: Optional[MemoryModel] = None
 
 
 class TaskDriver:
@@ -95,8 +114,159 @@ class TaskDriver:
         """Upper bound (seconds) on remaining work; must shrink over time."""
         raise NotImplementedError
 
+    def slots_bound(self) -> Optional[int]:
+        """Monotone upper bound on the task's future concurrent adapter-
+        slot use, or None if unknown. Cross-task admission uses it to
+        reclaim replica capacity the moment survivors free it."""
+        return None
+
     def result(self) -> Any:
         return None
+
+
+# --------------------------------------------------------------------------
+# Co-located replica: several task timelines multiplexed on one GPU set
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Hosted:
+    driver: TaskDriver
+    colo: Optional[ColocationSpec]
+    offset: float                     # replica-local time at attach
+    elapsed: float = 0.0              # own-timeline seconds consumed
+    done: bool = False
+    end: Optional[float] = None       # replica-local completion time
+
+    @property
+    def clock(self) -> float:
+        return self.offset + self.elapsed
+
+
+class ColocatedReplicaDriver(TaskDriver):
+    """One frozen-backbone replica hosting adapter slots from SEVERAL
+    tasks, multiplexed behind the ordinary ``TaskDriver`` interface.
+
+    The replica owns ONE GPU set (the host task's). Each hosted task
+    keeps its own timeline; ``step_chunk`` always advances the lagging
+    timeline and reports the movement of the replica-wide frontier
+    (max over task clocks), so concurrent tasks consume wall-clock once —
+    the fused grouped-GEMM utilization win the paper claims. Per-task
+    residuals, completion times, and results stay individually
+    addressable (``residual_of`` / ``end_of`` / ``result_of``), and every
+    event a hosted task emits already carries its own task attribution.
+
+    Soundness: the runtime only attaches a task whose residual fits
+    inside the replica's current projected end (and whose incumbent start
+    bound has not passed), so attaching never extends the projected
+    occupancy — the elastic <= static argument survives co-location."""
+
+    def __init__(self, name: str, driver: TaskDriver,
+                 colo: Optional[ColocationSpec], elapsed: float = 0.0):
+        self.name = name
+        self._subs: Dict[str, _Hosted] = {
+            name: _Hosted(driver, colo, 0.0, elapsed)}
+        self._frontier = elapsed
+
+    # ---- capacity ----------------------------------------------------------
+    @property
+    def capacity(self) -> Optional[ColocationSpec]:
+        return self._subs[self.name].colo
+
+    def _bound_of(self, h: _Hosted) -> int:
+        b = h.driver.slots_bound()
+        if b is not None:
+            return b
+        return h.colo.slots_needed if h.colo is not None else 0
+
+    def resident_requests(self) -> List[ColoRequest]:
+        """Live tasks' current demand on the replica (for cross-task
+        admission): shrinking slot bounds reclaim freed capacity."""
+        return [ColoRequest(n, self._bound_of(h),
+                            h.colo.per_adapter_batch if h.colo else 0)
+                for n, h in sorted(self._subs.items()) if not h.done]
+
+    # ---- membership --------------------------------------------------------
+    def attach(self, name: str, driver: TaskDriver,
+               colo: Optional[ColocationSpec]) -> None:
+        assert name not in self._subs, f"{name} already hosted"
+        self._subs[name] = _Hosted(driver, colo, self._frontier)
+
+    def cancel_hosted(self, name: str) -> None:
+        h = self._subs[name]
+        h.done = True
+        h.end = h.clock
+
+    def sub_names(self) -> List[str]:
+        return list(self._subs)
+
+    def hosted_names(self) -> List[str]:
+        return [n for n in self._subs if n != self.name]
+
+    def end_of(self, name: str) -> Optional[float]:
+        """Replica-local completion time (absolute = replica start + this)."""
+        return self._subs[name].end
+
+    def result_of(self, name: str) -> Any:
+        h = self._subs[name]
+        return h.driver.result() if h.done else None
+
+    def result(self) -> Any:
+        return self.result_of(self.name)
+
+    # ---- TaskDriver --------------------------------------------------------
+    def start(self, now: float) -> None:
+        self._subs[self.name].driver.start(now)
+
+    def step_chunk(self) -> DriverChunk:
+        """Advance the lagging task timeline one chunk; return the
+        frontier movement. Zero-progress catch-up chunks are absorbed
+        internally so the runtime's stall detector never trips on a
+        long-lagging timeline."""
+        start = self._frontier
+        events: List[ProgressEvent] = []
+        spins = 0
+        while True:
+            live = [(h.clock, n) for n, h in sorted(self._subs.items())
+                    if not h.done]
+            if not live:
+                return DriverChunk(dt=self._frontier - start,
+                                   events=tuple(events), done=True)
+            spins += 1
+            if spins > 10_000:
+                # a sub-driver is emitting empty zero-dt chunks: hand a
+                # zero chunk back so the runtime's stall detector sees it
+                return DriverChunk(dt=self._frontier - start,
+                                   events=tuple(events), done=False)
+            _, pick = min(live)
+            h = self._subs[pick]
+            chunk = h.driver.step_chunk()
+            h.elapsed += chunk.dt
+            events.extend(chunk.events)
+            if chunk.done:
+                h.done = True
+                h.end = h.clock
+            self._frontier = max(self._frontier, h.clock)
+            if all(s.done for s in self._subs.values()):
+                return DriverChunk(dt=self._frontier - start,
+                                   events=tuple(events), done=True)
+            if self._frontier > start + _EPS or events:
+                return DriverChunk(dt=self._frontier - start,
+                                   events=tuple(events), done=False)
+
+    def residual_estimate(self) -> float:
+        ends = [h.clock + h.driver.residual_estimate()
+                for h in self._subs.values() if not h.done]
+        if not ends:
+            return 0.0
+        return max(max(ends) - self._frontier, 0.0)
+
+    def residual_of(self, name: str) -> float:
+        h = self._subs[name]
+        return 0.0 if h.done else h.driver.residual_estimate()
+
+    def slots_bound(self) -> Optional[int]:
+        return sum(self._bound_of(h) for h in self._subs.values()
+                   if not h.done)
 
 
 @dataclasses.dataclass
@@ -125,6 +295,7 @@ class RuntimeReport:
     task_starts: Dict[str, float]
     task_ends: Dict[str, float]
     cancelled: Tuple[str, ...] = ()
+    colocated: Dict[str, str] = dataclasses.field(default_factory=dict)
 
     def per_gpu_utilization(self) -> List[float]:
         mk = max(self.makespan, _EPS)
@@ -136,6 +307,7 @@ class _Submission:
     spec: TaskSpec
     factory: Callable[[], TaskDriver]
     at: float
+    colo: Optional[ColocationSpec] = None
 
 
 class ElasticClusterRuntime:
@@ -146,13 +318,15 @@ class ElasticClusterRuntime:
 
     def __init__(self, G: int, method: str = "cp", bnb_max_n: int = 9,
                  validate: bool = True, max_zero_chunks: int = 10_000,
-                 delay_delta: Optional[float] = None):
+                 delay_delta: Optional[float] = None,
+                 colocate: bool = False):
         self.G = G
         self.method = method
         self.bnb_max_n = bnb_max_n
         self.validate = validate
         self.max_zero_chunks = max_zero_chunks
         self.delay_delta = delay_delta
+        self.colocate = colocate
         self.now = 0.0
         self._subs: List[_Submission] = []
         self._by_name: Dict[str, _Submission] = {}
@@ -162,21 +336,25 @@ class ElasticClusterRuntime:
     # ---------------------------------------------------------- admission
     def submit(self, spec: TaskSpec,
                driver_factory: Callable[[], TaskDriver],
-               at: float = 0.0) -> None:
+               at: float = 0.0,
+               colo: Optional[ColocationSpec] = None) -> None:
         """Queue a task. Before ``begin()`` this only records it (duplicate
         names surface at ``begin``, preserving batch semantics); on a live
         session it becomes an arrival event at virtual time ``at`` (clamped
-        to now) that the next ``step()`` admits into the running loop."""
+        to now) that the next ``step()`` admits into the running loop.
+        ``colo`` marks the task fusable: when the session runs with
+        ``colocate=True``, a pending fusable task may be co-located onto a
+        live same-``fuse_key`` replica instead of waiting for free GPUs."""
         assert spec.gpus <= self.G, f"{spec.name} needs {spec.gpus} > {self.G}"
         if not self._live:
-            sub = _Submission(spec, driver_factory, max(at, 0.0))
+            sub = _Submission(spec, driver_factory, max(at, 0.0), colo)
             self._subs.append(sub)
             return
         name = spec.name
         assert name not in self._by_name, f"duplicate task name {name}"
         at = max(at, self.now)
         sub = _Submission(dataclasses.replace(spec, release=at),
-                          driver_factory, at)
+                          driver_factory, at, colo)
         self._by_name[name] = sub           # _subs was consumed by begin()
         self._future[name] = at
         self._push_ctrl(at, "arrive", name)
@@ -226,6 +404,7 @@ class ElasticClusterRuntime:
         self._cancel_set: set = set()
         self._bounds: Dict[str, float] = {}
         self._plan: Dict[str, Tuple[float, Tuple[int, ...]]] = {}
+        self._hosted: Dict[str, str] = {}        # fused task -> host task
         self.now = 0.0
         self._live = True
 
@@ -323,6 +502,29 @@ class ElasticClusterRuntime:
             self._realized.append(Placement(
                 dataclasses.replace(run.spec, duration=T - run.start),
                 run.start, run.gpu_ids))
+            if isinstance(run.driver, ColocatedReplicaDriver):
+                # cancelling the replica owner drops every hosted task's
+                # slots with it — cancel the unfinished tenants FIRST
+                # (their backbone is gone; harvesting them would report
+                # truncated runs as completions and poison the profiler
+                # feedback), then record the already-finished ones
+                for sub in run.driver.hosted_names():
+                    if sub in self._task_ends or sub in self._cancel_set:
+                        continue
+                    if run.driver.end_of(sub) is None:
+                        self._cancel_set.add(sub)
+                        self._task_ends[sub] = T
+                        self._events.append(ProgressEvent(
+                            kind=EventKind.TASK_CANCELLED, task=sub, time=T,
+                            detail=f"host {name} cancelled"))
+                self._harvest_replica(run, T)
+        elif name in self._hosted:
+            host = self._hosted[name]
+            hrun = self._running.get(host)
+            if hrun is not None and isinstance(hrun.driver,
+                                               ColocatedReplicaDriver):
+                hrun.driver.cancel_hosted(name)
+            self._task_ends[name] = T
         else:
             self._pending.discard(name)
             self._future.pop(name, None)
@@ -353,7 +555,20 @@ class ElasticClusterRuntime:
         for e in chunk.events:
             self._events.append(e.stamped(T))
             if e.kind is EventKind.TASK_COMPLETED:
-                run.saw_completed = True
+                if e.task == name or not e.task:
+                    run.saw_completed = True
+                elif e.task in self._hosted:
+                    # a co-located task finished inside the replica: its
+                    # result is final now even though the replica (and its
+                    # GPU set) keeps running the other tenants
+                    self._record_hosted_end(run, e.task)
+        if isinstance(run.driver, ColocatedReplicaDriver):
+            # hosted timelines can finish without a TASK_COMPLETED event
+            # riding the same chunk (real executors emit it one chunk
+            # early); sweep for freshly-finished tenants either way
+            for sub in run.driver.hosted_names():
+                if run.driver.end_of(sub) is not None:
+                    self._record_hosted_end(run, sub)
         shrink = any(e.shrinks() for e in chunk.events)
         if chunk.done:
             del self._running[name]
@@ -362,8 +577,11 @@ class ElasticClusterRuntime:
             for g in run.gpu_ids:
                 self._owner[g] = None
                 self._gpu_busy[g] += T - run.start
-            self._task_ends[name] = T
-            self._results[name] = run.driver.result()
+            if isinstance(run.driver, ColocatedReplicaDriver):
+                self._harvest_replica(run, T)
+            else:
+                self._task_ends[name] = T
+                self._results[name] = run.driver.result()
             self._realized.append(Placement(
                 dataclasses.replace(run.spec, duration=T - run.start),
                 run.start, run.gpu_ids))
@@ -377,6 +595,31 @@ class ElasticClusterRuntime:
                 self._replan(T)
                 self._admit(T)
             heapq.heappush(self._heap, (run.local_time, name))
+
+    def _record_hosted_end(self, run: "_Running", sub: str) -> None:
+        if sub in self._task_ends or sub in self._cancel_set:
+            return
+        w = run.driver
+        assert isinstance(w, ColocatedReplicaDriver)
+        end = w.end_of(sub)
+        if end is None:
+            return
+        self._task_ends[sub] = run.start + end
+        self._results[sub] = w.result_of(sub)
+
+    def _harvest_replica(self, run: "_Running", T: float) -> None:
+        """Record completion times/results of every task a finishing (or
+        cancelled) replica hosted, the owner included. Per-task ends are
+        the tasks' OWN completion points on the replica timeline — the
+        replica's GPU occupancy (run.start..T) is what gpu_busy bills."""
+        w = run.driver
+        assert isinstance(w, ColocatedReplicaDriver)
+        for sub in w.sub_names():
+            if sub in self._cancel_set or sub in self._task_ends:
+                continue
+            end = w.end_of(sub)
+            self._task_ends[sub] = run.start + end if end is not None else T
+            self._results[sub] = w.result_of(sub)
 
     def _proj_skyline(self, T: float) -> List[float]:
         """Per-GPU projected free time: running tasks keep their GPUs
@@ -498,7 +741,11 @@ class ElasticClusterRuntime:
     def _admit(self, T: float) -> None:
         """Start every pending task whose planned GPUs are free, in
         planned-start order; earlier-planned tasks reserve their GPUs
-        so later tasks cannot cause priority inversion."""
+        so later tasks cannot cause priority inversion. With
+        ``colocate=True``, tasks still pending afterwards (i.e. waiting
+        for GPUs) are offered to live same-fuse-key replicas — the
+        fuse-vs-exclusive decision: immediately placeable tasks place
+        exclusively, blocked fusable tasks fuse."""
         reserved: set = set()
         for name in sorted(self._pending,
                            key=lambda n: (self._plan[n][0], n)):
@@ -522,6 +769,73 @@ class ElasticClusterRuntime:
             self._events.append(ProgressEvent(
                 kind=EventKind.TASK_STARTED, task=name, time=T,
                 detail=f"gpus={','.join(map(str, gpus))}"))
+        if self.colocate and self._pending and self._running:
+            if self._try_fuse(T):
+                # fused tasks left the queue: re-solve what remains and
+                # admit anything the smaller plan makes placeable (the
+                # recursion terminates — fusing strictly shrinks pending)
+                self._replan(T)
+                self._admit(T)
+
+    def _try_fuse(self, T: float) -> bool:
+        """Co-locate pending fusable tasks onto live replicas. A task may
+        fuse onto a replica when (a) their fuse keys match, (b) §A.3
+        cross-task admission accepts it (slot headroom + memory model,
+        greedy decreasing-batch-size across all pending small tasks), and
+        (c) soundness: the task's residual fits inside the replica's
+        projected end and the replica clock has not passed the task's
+        incumbent start bound — so fusing never extends the replica's
+        occupancy nor starts anyone later than the plan promised."""
+        cands = [n for n in sorted(self._pending)
+                 if self._by_name[n].colo is not None]
+        fused_any = False
+        for host in sorted(self._running):
+            if not cands:
+                break
+            run = self._running[host]
+            cap = self._by_name[host].colo
+            if cap is None:
+                continue
+            ok = []
+            for n in cands:
+                c = self._by_name[n].colo
+                if c.fuse_key != cap.fuse_key:
+                    continue
+                if self._plan_resid(n) > run.residual + _EPS:
+                    continue                 # would extend the replica
+                bound = self._bounds.get(n)
+                if bound is not None and run.local_time > bound + _EPS:
+                    continue                 # would start later than promised
+                ok.append(n)
+            if not ok:
+                continue
+            if not isinstance(run.driver, ColocatedReplicaDriver):
+                run.driver = ColocatedReplicaDriver(
+                    host, run.driver, cap,
+                    elapsed=run.local_time - run.start)
+            w = run.driver
+            admitted = admit_cross_task(
+                w.resident_requests(),
+                [ColoRequest(n, self._by_name[n].colo.slots_needed,
+                             self._by_name[n].colo.per_adapter_batch)
+                 for n in ok],
+                cap.replica_slots, cap.mem)
+            for n in admitted:
+                sub = self._by_name[n]
+                driver = sub.factory()
+                driver.start(T)
+                w.attach(n, driver, sub.colo)
+                self._pending.discard(n)
+                self._plan.pop(n, None)
+                self._bounds.pop(n, None)
+                self._hosted[n] = host
+                self._task_starts[n] = T
+                cands.remove(n)
+                fused_any = True
+                self._events.append(ProgressEvent(
+                    kind=EventKind.TASK_FUSED, task=n, time=T,
+                    detail=f"host={host}"))
+        return fused_any
 
     # ---------------------------------------------------------- observability
     @property
@@ -562,7 +876,8 @@ class ElasticClusterRuntime:
             utilization=util, results=dict(self._results),
             task_starts=dict(self._task_starts),
             task_ends=dict(self._task_ends),
-            cancelled=tuple(sorted(self._cancel_set)))
+            cancelled=tuple(sorted(self._cancel_set)),
+            colocated=dict(self._hosted))
 
     # ------------------------------------------------------------------ run
     def run(self, initial: Optional[Schedule] = None) -> RuntimeReport:
@@ -777,6 +1092,20 @@ class SimulatedTaskDriver(TaskDriver):
                 steps = -(-len(alive) // self.Z) * max(rem, 0)
         return steps * self.step_time_s
 
+    def slots_bound(self) -> Optional[int]:
+        """Upper bound on future concurrent slot use — shrinks as waves
+        drain and jobs exit, which is the capacity cross-task co-location
+        reclaims."""
+        if self._done:
+            return 0
+        cont = min(self.Z, self.top_k)
+        if self._phase == "warmup":
+            alive_waves = [len(self._alive(w))
+                           for w in self._waves[self._wave_idx:]]
+            return max(alive_waves + [cont])
+        return min(self.Z,
+                   len(self._alive(self._active) + self._alive(self._queue)))
+
     def result(self) -> Dict[str, Any]:
         return {"task": self.name,
                 "steps_trained": int(sum(self._trained)),
@@ -795,6 +1124,20 @@ def sim_task_spec(name: str, *, K: int, Z: int, total_steps: int,
     steps = profiler.lifecycle_steps(K, Z, warmup, total_steps,
                                      survivors=top_k)
     return TaskSpec(name=name, duration=steps * step_time_s, gpus=gpus)
+
+
+def sim_colo_spec(fuse_key: Tuple, *, K: int, Z: int,
+                  per_adapter_batch: int = 4,
+                  replica_slots: Optional[int] = None,
+                  mem: Optional[MemoryModel] = None) -> ColocationSpec:
+    """ColocationSpec for a simulated task: it needs at most min(Z, K)
+    concurrent slots, and a replica it hosts exposes ``replica_slots``
+    physical slots (defaults to its own Z)."""
+    return ColocationSpec(
+        fuse_key=fuse_key, per_adapter_batch=per_adapter_batch,
+        slots_needed=min(Z, K),
+        replica_slots=replica_slots if replica_slots is not None else Z,
+        mem=mem)
 
 
 # --------------------------------------------------------------------------
@@ -821,8 +1164,10 @@ class ExecutorTaskDriver(TaskDriver):
         self.step_time_s = step_time_s
         self._chunks: List[DriverChunk] = []
         self._bounds: List[int] = []
+        self._slot_bounds: List[int] = []
         self._result = None
         self._last_bound: Optional[int] = None
+        self._last_slots: Optional[int] = None
         self._wall_s = 0.0
         self._steps = 0
 
@@ -839,6 +1184,7 @@ class ExecutorTaskDriver(TaskDriver):
                 dt=report.steps_executed * self.step_time_s,
                 events=report.events, done=False))
             self._bounds.append(report.remaining_steps_bound)
+            self._slot_bounds.append(report.slots_bound)
             self._wall_s += report.wall_time_s
             self._steps += report.steps_executed
         assert self._chunks, "executor produced no chunks"
@@ -851,12 +1197,16 @@ class ExecutorTaskDriver(TaskDriver):
         assert self._chunks is not None and self._chunks, "start() not called"
         chunk = self._chunks.pop(0)
         self._last_bound = self._bounds.pop(0)
+        self._last_slots = self._slot_bounds.pop(0)
         return chunk
 
     def residual_estimate(self) -> float:
         if self._last_bound is None:        # not stepped yet: no information
             return float("inf")             # runtime clamps to spec duration
         return self._last_bound * self.step_time_s
+
+    def slots_bound(self) -> Optional[int]:
+        return self._last_slots
 
     def observed_wall_step_s(self) -> Optional[float]:
         """Realized host seconds per executor step (profiler feedback)."""

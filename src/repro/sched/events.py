@@ -33,6 +33,7 @@ class EventKind(enum.Enum):
     WARMUP_SELECTION = "warmup_selection"   # Pattern-3 drops at the boundary
     JOB_EXITED = "job_exited"               # divergence / overfit / budget
     TASK_PROGRESS = "task_progress"         # chunk heartbeat (no shrink)
+    TASK_FUSED = "task_fused"               # co-located onto a live replica
     TASK_COMPLETED = "task_completed"
     TASK_CANCELLED = "task_cancelled"       # tenant cancel (frees capacity)
     REPLAN = "replan"                       # runtime re-solved the queue

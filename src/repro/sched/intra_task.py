@@ -113,3 +113,49 @@ class IntraTaskScheduler:
                 self.resident[j.job_id] = j.per_adapter_batch
                 return j
         return None
+
+
+# The executor's per-slot admission/backfill policy is the same object —
+# exported under the name the executor layer uses (§A.3 "executor slots").
+ExecutorSlots = IntraTaskScheduler
+
+
+# --------------------------------------------------------------------------
+# Cross-task admission (shared-backbone co-location)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ColoRequest:
+    """One task's demand on a shared replica: its concurrent-slot upper
+    bound and per-adapter batch size (M_hat sees slots * b tokens)."""
+    name: str
+    slots: int
+    per_adapter_batch: int
+
+
+def admit_cross_task(resident: Sequence[ColoRequest],
+                     pending: Sequence[ColoRequest],
+                     capacity_slots: int,
+                     mem: Optional[MemoryModel] = None) -> List[str]:
+    """§A.3 admission generalized across TASK boundaries: greedily admit
+    pending tasks in decreasing per-adapter-batch order (ties broken by
+    name for determinism) while the replica's slot capacity holds and the
+    fitted memory model M_hat(total batch) stays inside the safety margin.
+
+    ``resident`` are tasks already co-located on the replica (the host
+    included); their ``slots`` should be *current future-use bounds*, so
+    capacity freed by early exits is reclaimable the moment it frees.
+    Returns the admitted task names, in admission order."""
+    used_slots = sum(r.slots for r in resident)
+    used_batch = sum(r.slots * r.per_adapter_batch for r in resident)
+    admitted: List[str] = []
+    for r in sorted(pending, key=lambda r: (-r.per_adapter_batch, r.name)):
+        if used_slots + r.slots > capacity_slots:
+            continue
+        batch = used_batch + r.slots * r.per_adapter_batch
+        if mem is not None and not mem.fits(batch):
+            continue
+        admitted.append(r.name)
+        used_slots += r.slots
+        used_batch = batch
+    return admitted

@@ -14,6 +14,8 @@ On this CPU container, two estimators coexist:
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from typing import Callable, Dict, Optional, Tuple
 
@@ -251,6 +253,46 @@ class ProfileStore:
 
     def put_spec(self, key: Tuple, spec) -> None:
         self._specs[key] = (self._version, spec)
+
+    # ---- persistence (service sessions survive process restarts) -----------
+    def save(self, path: str) -> None:
+        """JSON-persist the observed records (the spec cache is derived
+        state tied to in-process objects and is not saved). Keys must be
+        JSON-representable tuples — which the engine's (arch, gpus) keys
+        are."""
+        data = {
+            "version": 1,
+            "ema": self.ema,
+            "records": [
+                {"key": list(k),
+                 "duration_frac": r.duration_frac,
+                 "wall_step_time_s": r.wall_step_time_s,
+                 "observations": r.observations}
+                for k, r in sorted(self._records.items(),
+                                   key=lambda kv: repr(kv[0]))],
+        }
+        with open(path, "w") as f:
+            json.dump(data, f, indent=2)
+
+    @classmethod
+    def load(cls, path: str) -> "ProfileStore":
+        with open(path) as f:
+            data = json.load(f)
+        store = cls(ema=float(data.get("ema", 0.5)))
+        for rec in data.get("records", []):
+            store._records[tuple(rec["key"])] = ProfileRecord(
+                duration_frac=float(rec["duration_frac"]),
+                wall_step_time_s=(None if rec.get("wall_step_time_s") is None
+                                  else float(rec["wall_step_time_s"])),
+                observations=int(rec.get("observations", 1)))
+        return store
+
+    @classmethod
+    def load_or_new(cls, path: str) -> "ProfileStore":
+        """Load a persisted store, or start fresh if the file is absent."""
+        if os.path.exists(path):
+            return cls.load(path)
+        return cls()
 
 
 def gpus_for_model(cfg: ModelConfig, hbm_bytes: float = HBM_BYTES,

@@ -9,7 +9,8 @@ from hypothesis import strategies as st
 
 from repro.sched import profiler
 from repro.sched.cluster import (ElasticClusterRuntime, SimulatedTaskDriver,
-                                 execute_static, sim_task_spec)
+                                 execute_static, sim_colo_spec,
+                                 sim_task_spec)
 from repro.sched.events import EventKind, ProgressEvent
 from repro.sched.inter_task import (TaskSpec, diff_schedules, list_schedule,
                                     solve, solve_residual)
@@ -242,3 +243,148 @@ def test_progress_event_stamping():
     assert e.shrinks()
     assert e.stamped(3.5).time == 3.5
     assert not ProgressEvent(kind=EventKind.TASK_PROGRESS, task="t").shrinks()
+
+
+# ---------------------------------------------------------------------------
+# cross-task co-location (shared-backbone replicas)
+# ---------------------------------------------------------------------------
+
+FUSE_KEY = ("arch-a", 1, 4, 64, "sft")
+
+
+def colo_workload(G=2):
+    """One fusable long host + an exclusive hog + fusable small tasks:
+    exclusive placement must queue the small tasks behind busy GPUs."""
+    return [
+        make_task("host", K=8, Z=4, total=400, warm=20, step_time=0.01,
+                  gpus=1, exits={}) + (sim_colo_spec(FUSE_KEY, K=8, Z=4),),
+        make_task("hog", K=8, Z=4, total=400, warm=20, step_time=0.01,
+                  gpus=1, exits={}) + (None,),
+        make_task("s1", K=2, Z=2, total=60, warm=3, step_time=0.01,
+                  gpus=1, exits={}) + (sim_colo_spec(FUSE_KEY, K=2, Z=2),),
+        make_task("s2", K=2, Z=2, total=60, warm=3, step_time=0.01,
+                  gpus=1, exits={}) + (sim_colo_spec(FUSE_KEY, K=2, Z=2),),
+    ]
+
+
+def run_colo(tasks, G, colocate):
+    specs = [s for s, _, _ in tasks]
+    plan = solve(specs, G, "cp")
+    static = execute_static(plan, G, {s.name: f for s, f, _ in tasks})
+    rt = ElasticClusterRuntime(G, colocate=colocate)
+    for s, f, c in tasks:
+        rt.submit(s, f, colo=c)
+    return plan, static, rt.run(initial=plan)
+
+
+def test_colocation_fuses_and_beats_exclusive():
+    G = 2
+    _, static, excl = run_colo(colo_workload(G), G, colocate=False)
+    _, _, colo = run_colo(colo_workload(G), G, colocate=True)
+    # small tasks fused onto the host replica instead of queueing
+    assert colo.colocated == {"s1": "host", "s2": "host"}
+    assert excl.colocated == {}
+    assert EventKind.TASK_FUSED in {e.kind for e in colo.events}
+    # fused small tasks start earlier and the cluster clears sooner
+    assert colo.task_starts["s1"] < excl.task_starts["s1"] - 1e-9
+    assert colo.makespan < excl.makespan - 1e-9
+    assert colo.makespan <= static.makespan + 1e-9
+    # every task still delivers its result, attributed per task
+    assert set(colo.results) == {"host", "hog", "s1", "s2"}
+    for name in ("s1", "s2"):
+        assert colo.results[name]["task"] == name
+        assert colo.task_ends[name] <= colo.task_ends["host"] + 1e-9 or \
+            colo.task_ends[name] <= colo.makespan + 1e-9
+    # the realized schedule (replica owners only) still validates
+    colo.realized.validate(G)
+
+
+def test_colocation_deterministic():
+    a = run_colo(colo_workload(2), 2, colocate=True)[2]
+    b = run_colo(colo_workload(2), 2, colocate=True)[2]
+    assert a.makespan == b.makespan
+    assert a.task_starts == b.task_starts
+    assert a.task_ends == b.task_ends
+    assert ([(e.kind, e.task, e.time) for e in a.events]
+            == [(e.kind, e.task, e.time) for e in b.events])
+
+
+def test_colocation_respects_replica_capacity():
+    """A guest whose slot need exceeds the replica's reclaimable headroom
+    must NOT fuse (it waits for exclusive placement instead)."""
+    G = 2
+    tasks = [
+        make_task("host", K=8, Z=4, total=400, warm=20, step_time=0.01,
+                  gpus=1, exits={}) + (sim_colo_spec(FUSE_KEY, K=8, Z=4),),
+        make_task("hog", K=8, Z=4, total=400, warm=20, step_time=0.01,
+                  gpus=1, exits={}) + (None,),
+        # needs 4 slots; host's continue-phase bound is top_k(8)=2, so
+        # headroom never reaches 4 on a 4-slot replica
+        make_task("wide", K=8, Z=4, total=60, warm=3, step_time=0.01,
+                  gpus=1, exits={}) + (sim_colo_spec(FUSE_KEY, K=8, Z=4),),
+    ]
+    _, static, rep = run_colo(tasks, G, colocate=True)
+    assert rep.colocated == {}
+    assert rep.makespan <= static.makespan + 1e-9
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 10_000), G=st.sampled_from([2, 4]))
+def test_property_colocation_never_worse_than_static(seed, G):
+    """elastic <= static survives co-location: fusion only ever starts
+    pending work earlier inside existing replica occupancy."""
+    rng = np.random.default_rng(seed)
+    tasks = []
+    for i, (spec, factory) in enumerate(random_workload(rng, G)):
+        fusable = rng.random() < 0.7
+        colo = None
+        if fusable:
+            # reconstruct lifecycle shape from the driver for the spec
+            drv = factory()
+            colo = sim_colo_spec(("shared", spec.gpus), K=drv.K, Z=drv.Z)
+        tasks.append((spec, factory, colo))
+    specs = [s for s, _, _ in tasks]
+    plan = solve(specs, G, "cp")
+    static = execute_static(plan, G, {s.name: f for s, f, _ in tasks})
+    rt = ElasticClusterRuntime(G, colocate=True)
+    for s, f, c in tasks:
+        rt.submit(s, f, colo=c)
+    rep = rt.run(initial=plan)
+    assert rep.makespan <= static.makespan + 1e-9
+    rep.realized.validate(G)
+    assert set(rep.results) == {s.name for s, _, _ in tasks}
+    for name, host in rep.colocated.items():
+        assert rep.task_starts[name] <= \
+            {p.task.name: p.start for p in plan.placements}[name] + 1e-9
+        assert host in rep.task_starts
+
+
+def test_cancelling_host_cancels_unfinished_guests():
+    """Cancelling a replica owner drops its unfinished tenants' slots:
+    they must surface as CANCELLED (no results, no fake completions),
+    while tenants that already finished keep their results."""
+    G = 2
+    tasks = colo_workload(G)
+    specs = [s for s, _, _ in tasks]
+    plan = solve(specs, G, "cp")
+    rt = ElasticClusterRuntime(G, colocate=True)
+    for s, f, c in tasks:
+        rt.submit(s, f, colo=c)
+    rt.begin(plan)
+    # drive until both small tasks fused, then past s1's completion
+    while rt.step():
+        fused = {e.task for e in rt.event_log
+                 if e.kind is EventKind.TASK_FUSED}
+        if "s1" in rt.results_map and "s2" in fused:
+            break
+    assert "s2" not in rt.results_map          # s2 still mid-flight
+    rt.cancel("host")
+    while rt.step():
+        pass
+    rep = rt.report()
+    assert "host" in rep.cancelled
+    assert "s2" in rep.cancelled               # unfinished guest cancelled
+    assert "s2" not in rep.results
+    assert rep.results["s1"]["task"] == "s1"   # finished guest kept
+    kinds = [(e.kind, e.task) for e in rep.events]
+    assert (EventKind.TASK_CANCELLED, "s2") in kinds

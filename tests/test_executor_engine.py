@@ -121,3 +121,53 @@ def test_slot_batcher_homogeneous_and_epochs():
     assert all(e >= 2 for e in b.epochs)        # cycled epochs
     vt, vl = b.val_batch()
     np.testing.assert_array_equal(vt[0], vt[1])  # same val rows per slot
+
+
+def test_all_jobs_diverge_returns_empty_winner(env):
+    """Every job diverging (all best_vals non-finite) must yield a
+    TaskResult with best_job=None / best_val=inf, not a crash."""
+    cfg, ds, params = env
+    ex = BatchedExecutor(cfg, params, ds, Z=2, per_adapter_batch=4,
+                         ee=EarlyExitConfig(warmup_ratio=0.2,
+                                            select_ratio=1.0),
+                         eval_every=2, seed=0)
+    jobs = {
+        "boom1": TrainConfig(learning_rate=1e9, lora_rank=8, max_steps=10,
+                             grad_clip=0.0),
+        "boom2": TrainConfig(learning_rate=5e9, lora_rank=8, max_steps=10,
+                             grad_clip=0.0),
+    }
+    res = ex.run_task("task", jobs, total_steps=10)
+    assert res.best_job is None
+    assert res.best_val == float("inf")
+    for r in res.job_results.values():
+        assert r.exit_reason is not None
+        assert r.adapter is None
+
+
+def test_backfill_wired_through_intra_task_policy(env, monkeypatch):
+    """§A.3 wiring: continue-phase backfill must go through the
+    sched/intra_task ExecutorSlots policy (same-batch-size-preferring
+    admission), not a FIFO queue pop."""
+    from repro.sched import intra_task
+
+    calls = []
+    orig = intra_task.ExecutorSlots.backfill
+
+    def spy(self, vacated_b, queue):
+        calls.append((vacated_b, [j.job_id for j in queue]))
+        return orig(self, vacated_b, queue)
+
+    monkeypatch.setattr(intra_task.ExecutorSlots, "backfill", spy)
+    cfg, ds, params = env
+    ex = BatchedExecutor(cfg, params, ds, Z=2, per_adapter_batch=4,
+                         ee=EarlyExitConfig(warmup_ratio=0.25,
+                                            select_ratio=1.0),
+                         eval_every=2, seed=0)
+    jobs = {f"j{i}": TrainConfig(learning_rate=1e-3, lora_rank=4,
+                                 max_steps=8) for i in range(4)}
+    res = ex.run_task("task", jobs, total_steps=8)
+    # 4 kept jobs on 2 slots: completions vacate slots that the policy
+    # (not a FIFO pop) backfills
+    assert calls, "backfill bypassed the intra-task policy"
+    assert all(r.steps_trained >= 8 for r in res.job_results.values())

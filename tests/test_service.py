@@ -356,3 +356,80 @@ def test_engine_report_ergonomics_both_paths(tiny_env):
     assert elastic.utilization > 0.0
     for rep in (static, elastic):
         assert set(rep.task_results) == {"solo"}
+
+
+# ---------------------------------------------------------------------------
+# ProfileStore persistence + shared-replica routing
+# ---------------------------------------------------------------------------
+
+def test_profile_store_save_load_roundtrip(tmp_path):
+    path = str(tmp_path / "profile.json")
+    store = profiler.ProfileStore(ema=0.4)
+    store.record(("arch-a", 2), realized_duration=30.0,
+                 estimated_duration=100.0, wall_step_time_s=0.02)
+    store.record(("arch-a", 2), realized_duration=50.0,
+                 estimated_duration=100.0)
+    store.record(("arch-b", 1), realized_duration=80.0,
+                 estimated_duration=100.0, wall_step_time_s=0.5)
+    store.save(path)
+    loaded = profiler.ProfileStore.load(path)
+    assert loaded.ema == store.ema
+    for key in (("arch-a", 2), ("arch-b", 1)):
+        assert loaded.duration_scale(key) == store.duration_scale(key)
+        assert loaded.wall_step_time(key) == store.wall_step_time(key)
+        assert loaded.observations(key) == store.observations(key)
+    assert profiler.ProfileStore.load_or_new(
+        str(tmp_path / "absent.json")).observations(("arch-a", 2)) == 0
+
+
+def test_service_persists_feedback_across_sessions(tmp_path):
+    """ROADMAP service hardening: feedback observed by one service
+    process seeds the next one's admissions (shorter estimates)."""
+    path = str(tmp_path / "profile.json")
+    spec, factory = sim_task("t0", K=8, Z=4, total=100, warm=5,
+                             step_time=0.02, gpus=1,
+                             exits={j: 10 for j in range(8)})
+
+    svc1 = TuningService(total_gpus=2, profile_path=path)
+    svc1.submit_spec(spec, factory, profile_key=("arch-a", 1))
+    svc1.run_until_idle()                     # saves the store on idle
+    assert svc1.profile_store.observations(("arch-a", 1)) == 1
+
+    svc2 = TuningService(total_gpus=2, profile_path=path)
+    assert svc2.profile_store.observations(("arch-a", 1)) == 1
+    h = svc2.submit_spec(dataclasses.replace(spec, name="t1"), factory,
+                         profile_key=("arch-a", 1))
+    # admission consulted the loaded feedback: estimate shrank
+    assert svc2._meta["t1"].spec.duration < spec.duration - 1e-9
+    h.result()
+
+
+def test_service_routes_small_tasks_onto_live_replicas():
+    """A small fusable submission lands on a live shared replica instead
+    of waiting for free GPUs (colocate defaults on)."""
+    from repro.sched.cluster import sim_colo_spec
+
+    key = ("arch-a", 1, 4, 64, "sft")
+    host_spec, host_f = sim_task("host", K=8, Z=4, total=400, warm=20,
+                                 step_time=0.01, gpus=1)
+    hog_spec, hog_f = sim_task("hog", K=8, Z=4, total=400, warm=20,
+                               step_time=0.01, gpus=1)
+    small_spec, small_f = sim_task("small", K=2, Z=2, total=60, warm=3,
+                                   step_time=0.01, gpus=1)
+
+    def session(colocate):
+        svc = TuningService(total_gpus=2, colocate=colocate)
+        svc.submit_spec(host_spec, host_f,
+                        colo=sim_colo_spec(key, K=8, Z=4))
+        svc.submit_spec(hog_spec, hog_f)
+        svc.submit_spec(small_spec, small_f, at=1.0,
+                        colo=sim_colo_spec(key, K=2, Z=2))
+        return svc.run_until_idle()
+
+    fused = session(colocate=True)
+    excl = session(colocate=False)
+    assert fused.colocated == {"small": "host"}
+    assert excl.colocated == {}
+    assert fused.task_starts["small"] < excl.task_starts["small"] - 1e-9
+    assert fused.makespan < excl.makespan - 1e-9
+    assert set(fused.task_results) == {"host", "hog", "small"}
