@@ -1,0 +1,292 @@
+"""Ragged co-location vs same-key-only fusion on a MIXED-batch-size mix.
+
+PR 3's cross-task co-location fused only tasks whose fuse key matched the
+host exactly — per-adapter batch size (and seq len) baked in — so a
+heterogeneous tuning mix (the paper's core workload) mostly fell back to
+exclusive replicas. Ragged slots relax the key to (arch, gpus, loss) and
+admit guests over the §A.3 TOKEN budget instead of same-width slot
+counts: adapters with different batch sizes train in one fused step via
+the ragged grouped-GEMM path. This bench quantifies the relaxation, in
+two parts:
+
+1. **Cluster A/B/C (virtual time).** One long fusable host (b=4),
+   exclusive hog tasks pinning the remaining GPUs, and a stream of small
+   fusable tasks with MIXED widths (b in {8, 4, 2}) run through the
+   elastic runtime three ways: ``exclusive`` (no fusion), ``samekey``
+   (PR3 rule: fuse keys embed (b, seq) — only the b=4 smalls can fuse),
+   and ``ragged`` (width-free keys, token-budget admission — every small
+   is a candidate). Per-task results must be identical in all three
+   runs; ragged must strictly beat samekey on makespan AND effective
+   utilization (same work area over G x makespan).
+
+2. **Isolation check (real training).** Tasks with DIFFERENT per-adapter
+   batch sizes fused on one real ``SharedBackboneExecutor`` vs each
+   alone: loss histories must be bitwise identical and best-vals equal
+   (the ragged loss-isolation property, tests/test_lora_isolation.py).
+
+Emits BENCH_ragged.json. ``--smoke`` shrinks the mix (CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_arch
+from repro.core.early_exit import EarlyExitConfig
+from repro.core.executor import (SharedBackboneExecutor, TaskLifecycle,
+                                 run_colocated)
+from repro.data.synthetic import SlotBatcher, make_task_dataset
+from repro.models import model as M
+from repro.sched import profiler
+from repro.sched.cluster import (ElasticClusterRuntime, SimulatedTaskDriver,
+                                 execute_static, sim_colo_spec,
+                                 sim_task_spec)
+from repro.sched.events import EventKind
+from repro.sched.inter_task import solve
+from repro.sched.intra_task import MemoryModel
+
+FUSE_ARCH = "stablelm-3b"          # the shared-backbone family (1 GPU)
+HOG_MIX = [("glm4-9b", 2), ("granite-8b", 1)]
+SEQ = 1024
+SMALL_WIDTHS = (8, 2, 4)           # the mixed-batch payload, cycling
+RELAXED_KEY = (FUSE_ARCH, 1, "sft")
+
+
+def build_workload(num_small: int, seed: int = 0):
+    """(spec, factory, colo) triples. ``colo.fuse_key`` is the RELAXED
+    (width-free) key; run_cluster rewrites it per mode."""
+    rng = np.random.default_rng(seed)
+    cfg = get_arch(FUSE_ARCH)
+    st_host = profiler.profile_task(cfg, 8, 4, SEQ, 1).step_time_s
+    # replica memory model: token-linear, wide enough that the slot
+    # headroom — not memory — is usually the binding constraint, but
+    # tight enough that admission is genuinely budgeted
+    mem = MemoryModel(k0=0.0, k1=1.0, seq_len=SEQ, capacity=90_000,
+                      safety_margin=0.9)
+    tasks = []
+
+    def sim(name, *, K, Z, total, warm, step_time, gpus, colo):
+        spec = sim_task_spec(name, K=K, Z=Z, total_steps=total,
+                             warmup_steps=warm, step_time_s=step_time,
+                             gpus=gpus)
+
+        def factory(name=name, K=K, Z=Z, total=total, warm=warm,
+                    step_time=step_time):
+            return SimulatedTaskDriver(name, K=K, Z=Z, total_steps=total,
+                                       warmup_steps=warm,
+                                       step_time_s=step_time)
+        return (spec, factory, colo)
+
+    # host: Z=8 slots, b=4; Pattern-3 keeps top 2 of 8, freeing 6 slots
+    host_total = int(rng.integers(1100, 1400))
+    host = sim("host", K=8, Z=8, total=host_total,
+               warm=host_total // 20, step_time=st_host, gpus=1,
+               colo=sim_colo_spec(RELAXED_KEY, K=8, Z=8,
+                                  per_adapter_batch=4, seq_len=SEQ,
+                                  mem=mem))
+    tasks.append(host)
+    host_dur = host[0].duration
+    # hogs: other archs, exclusive, pin the remaining GPUs
+    for arch, gpus in HOG_MIX:
+        hcfg = get_arch(arch)
+        st = profiler.profile_task(hcfg, 4, 4, SEQ, gpus).step_time_s
+        warm = 50
+        total = max(int(0.97 * host_dur / st) - 3 * warm, warm + 10)
+        tasks.append(sim(f"hog-{arch}", K=16, Z=4, total=total, warm=warm,
+                         step_time=st, gpus=gpus, colo=None))
+    # small tasks: MIXED per-adapter batch sizes — the ragged payload
+    for i in range(num_small):
+        b = SMALL_WIDTHS[i % len(SMALL_WIDTHS)]
+        st_small = profiler.profile_task(cfg, 2, b, SEQ, 1).step_time_s
+        total = int(rng.integers(350, 850))
+        tasks.append(sim(f"small-b{b}-{i}", K=2, Z=2, total=total,
+                         warm=max(total // 20, 1), step_time=st_small,
+                         gpus=1,
+                         colo=sim_colo_spec(RELAXED_KEY, K=2, Z=2,
+                                            per_adapter_batch=b,
+                                            seq_len=SEQ)))
+    return tasks
+
+
+def _with_mode_keys(tasks, mode: str):
+    """exclusive: drop colo; samekey: bake (b, seq) into the key (the
+    pre-ragged fuse rule); ragged: relaxed keys as built."""
+    out = []
+    for spec, factory, colo in tasks:
+        if colo is not None:
+            if mode == "exclusive":
+                colo = None
+            elif mode == "samekey":
+                colo = dataclasses.replace(
+                    colo, fuse_key=RELAXED_KEY + (colo.per_adapter_batch,
+                                                  colo.seq_len))
+        out.append((spec, factory, colo))
+    return out
+
+
+def run_cluster(tasks, G: int) -> dict:
+    specs = [s for s, _, _ in tasks]
+    plan = solve(specs, G, "cp")
+    plan.validate(G)
+    static = execute_static(plan, G, {s.name: f for s, f, _ in tasks})
+
+    out = {}
+    for mode in ("exclusive", "samekey", "ragged"):
+        rt = ElasticClusterRuntime(G, colocate=(mode != "exclusive"))
+        for s, f, c in _with_mode_keys(tasks, mode):
+            rt.submit(s, f, colo=c)
+        rep = rt.run(initial=plan)
+        assert rep.makespan <= static.makespan + 1e-9, \
+            f"{mode} elastic regressed past the static plan"
+        out[mode] = rep
+
+    excl, same, ragg = out["exclusive"], out["samekey"], out["ragged"]
+    # identical work, attributed identically, across all three strategies
+    assert excl.results == same.results == ragg.results, \
+        "fusion strategy changed task results"
+    assert ragg.colocated, "ragged mode fused nothing"
+    mixed = {n for n in ragg.colocated if n not in same.colocated}
+    assert mixed, "no mixed-width task fused — the relaxation is idle"
+    assert ragg.makespan < same.makespan - 1e-9, \
+        "ragged fusion did not beat same-key-only fusion"
+    assert same.makespan <= excl.makespan + 1e-9
+
+    # effective utilization: identical per-task work area (realized solo
+    # durations x gpus from the exclusive run) over G x makespan
+    area = sum((excl.task_ends[s.name] - excl.task_starts[s.name]) * s.gpus
+               for s, _, _ in tasks)
+
+    def report(rep) -> dict:
+        return {
+            "makespan_s": rep.makespan,
+            "utilization_effective": area / (len(rep.gpu_busy)
+                                             * rep.makespan),
+            "gpu_occupancy": rep.utilization,
+            "replans": rep.replans,
+            "fused_tasks": dict(rep.colocated),
+            "fuse_events": sum(1 for e in rep.events
+                               if e.kind is EventKind.TASK_FUSED),
+            "task_starts": {k: round(v, 4)
+                            for k, v in rep.task_starts.items()},
+            "task_ends": {k: round(v, 4) for k, v in rep.task_ends.items()},
+        }
+
+    excl_r, same_r, ragg_r = report(excl), report(same), report(ragg)
+    assert ragg_r["utilization_effective"] > \
+        same_r["utilization_effective"] + 1e-9, \
+        "ragged fusion did not lift effective utilization past same-key"
+    return {
+        "G": G,
+        "num_tasks": len(tasks),
+        "tasks": [{"name": s.name, "gpus": s.gpus,
+                   "est_duration_s": round(s.duration, 4),
+                   "per_adapter_batch": (c.per_adapter_batch
+                                         if c is not None else None),
+                   "fusable": c is not None} for s, _, c in tasks],
+        "static_plan_makespan_s": static.makespan,
+        "exclusive": excl_r,
+        "samekey": same_r,
+        "ragged": ragg_r,
+        "speedup_vs_exclusive": excl.makespan / max(ragg.makespan, 1e-12),
+        "speedup_vs_samekey": same.makespan / max(ragg.makespan, 1e-12),
+    }
+
+
+def run_isolation_check() -> dict:
+    """Real training: mixed-width tasks (b=2 vs b=4) fused on one
+    SharedBackboneExecutor vs each alone — loss histories bitwise
+    identical, best-vals equal."""
+    cfg = dataclasses.replace(
+        get_arch("paper-llama-tiny").reduced(num_layers=2, d_model=64,
+                                             vocab=128), dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    widths = {"A": 2, "B": 4}
+    seeds = {"A": 3, "B": 4}
+    datasets = {
+        "A": make_task_dataset("rg-a", cfg.vocab_size, seq_len=16,
+                               num_train=32, num_val=8, difficulty=0.2,
+                               seed=1),
+        "B": make_task_dataset("rg-b", cfg.vocab_size, seq_len=16,
+                               num_train=32, num_val=8, difficulty=0.6,
+                               seed=2),
+    }
+
+    def run(names):
+        ex = SharedBackboneExecutor(cfg, params, Z=4, per_adapter_batch=4,
+                                    eval_every=2, seed=0)
+        lcs = []
+        for name in names:
+            jobs = {f"{name}/j{k}": TrainConfig(
+                learning_rate=lr, lora_rank=4, max_steps=8,
+                per_adapter_batch=widths[name])
+                for k, lr in enumerate((3e-3, 1e-3))}
+            lcs.append(TaskLifecycle(
+                ex, name, jobs, 8,
+                ee=EarlyExitConfig(warmup_ratio=0.25, select_ratio=1.0),
+                max_slots=2,
+                batcher=SlotBatcher(datasets[name], 2, widths[name],
+                                    seed=seeds[name]),
+                seed=seeds[name]))
+        results = run_colocated(ex, lcs)
+        hists = {lc.task_name: {j: (tuple(m.val_hist),
+                                    tuple(m.raw_train_hist))
+                                for j, m in lc.monitors.items()}
+                 for lc in lcs}
+        return results, hists
+
+    fused, fused_h = run(["A", "B"])
+    out = {}
+    for name in ("A", "B"):
+        solo, solo_h = run([name])
+        bitwise = fused_h[name] == solo_h[name]
+        identical = fused[name].best_val == solo[name].best_val
+        out[name] = {"width": widths[name],
+                     "solo_best_val": solo[name].best_val,
+                     "fused_best_val": fused[name].best_val,
+                     "losses_bitwise_identical": bitwise,
+                     "best_val_identical": identical}
+        assert bitwise, f"different-width guest perturbed {name}'s losses"
+        assert identical, f"ragged fusion changed task {name}'s best-val"
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small instance (CI)")
+    ap.add_argument("--gpus", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_ragged.json")
+    args = ap.parse_args(argv)
+
+    tasks = build_workload(num_small=6 if args.smoke else 12,
+                           seed=args.seed)
+    result = run_cluster(tasks, args.gpus)
+    result["isolation"] = run_isolation_check()
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    for mode in ("exclusive", "samekey", "ragged"):
+        r = result[mode]
+        print(f"{mode:9s} makespan : {r['makespan_s']:.3f}s "
+              f"(eff util {r['utilization_effective']:.2%}, "
+              f"{r['fuse_events']} fused)")
+    print(f"speedup vs samekey  : {result['speedup_vs_samekey']:.2f}x "
+          f"(vs exclusive {result['speedup_vs_exclusive']:.2f}x)")
+    iso = result["isolation"]
+    print("isolation           : " + ", ".join(
+        f"{n}(b={v['width']}) best_val {v['fused_best_val']:.4f} "
+        f"({'bitwise' if v['losses_bitwise_identical'] else 'DIFFERS'})"
+        for n, v in iso.items()))
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,13 +23,20 @@ from repro.optim import adamw
 
 @dataclasses.dataclass
 class SlotSnapshot:
-    """Host copy of one job's device state (for warmup rotation)."""
+    """Host copy of one job's device state (for warmup rotation).
+
+    ``per_adapter_batch``/``seq_len`` record the job's slot WIDTH — slots
+    are ragged (variable-width) since co-located tasks may train with
+    different batch sizes — so a restore re-establishes the exact same
+    token footprint the job had before rotation."""
     job_id: str
     lora: Dict                    # [L, ...] single-adapter tree
     mu: Dict
     nu: Dict
     count: int
     rank: int
+    per_adapter_batch: int = 0
+    seq_len: int = 0
 
 
 def _x_slot(tree: Dict, slot: int) -> Dict:
@@ -48,7 +55,13 @@ class SlotManager:
     frozen-backbone replica can host adapter slots belonging to different
     tasks concurrently (cross-task co-location): the shared executor
     attributes per-slot losses, checkpoints, and evictions to the owning
-    task's lifecycle through these tags."""
+    task's lifecycle through these tags.
+
+    Slot WIDTH is a per-slot property (``slot_b``/``slot_seq``): co-located
+    tasks may train with different per-adapter batch sizes and seq lens
+    (ragged slots). The executor packs each slot's own (b, seq) rows into
+    its lane and routes per-slot token-row counts to the ragged grouped-
+    GEMM path; ``slot_tokens`` is what admission budgets against."""
 
     def __init__(self, cfg: ModelConfig, Z: int,
                  target_shapes: Dict, key: jax.Array):
@@ -63,11 +76,15 @@ class SlotManager:
         self.opt_state = adamw.init_state(self.lora, Z)
         self.slot_jobs: List[Optional[str]] = [None] * Z
         self.slot_tasks: List[Optional[str]] = [None] * Z
+        self.slot_b: List[int] = [0] * Z        # per-slot batch width
+        self.slot_seq: List[int] = [0] * Z      # per-slot seq len
 
     # ---- admission ---------------------------------------------------------
     def admit(self, slot: int, job_id: str, tc: TrainConfig,
-              key: jax.Array, task: Optional[str] = None) -> None:
-        """Fresh job into a slot: new init, zeroed moments, job's hparams."""
+              key: jax.Array, task: Optional[str] = None,
+              b: int = 0, seq: int = 0) -> None:
+        """Fresh job into a slot: new init, zeroed moments, job's hparams,
+        and the job's own (b, seq) width."""
         assert self.slot_jobs[slot] is None, f"slot {slot} occupied"
         rank = min(tc.lora_rank, self.cfg.lora.r_max)
         one = LORA.init_lora_tree(
@@ -82,10 +99,13 @@ class SlotManager:
             beta1=tc.beta1, beta2=tc.beta2, grad_clip=tc.grad_clip)
         self.slot_jobs[slot] = job_id
         self.slot_tasks[slot] = task
+        self.slot_b[slot] = b or tc.per_adapter_batch
+        self.slot_seq[slot] = seq
 
     def restore(self, slot: int, snap: SlotSnapshot, tc: TrainConfig,
                 task: Optional[str] = None) -> None:
-        """Rotate a snapshotted job back in (bit-exact continuation)."""
+        """Rotate a snapshotted job back in (bit-exact continuation,
+        including its slot width)."""
         assert self.slot_jobs[slot] is None, f"slot {slot} occupied"
         self.lora = _i_slot(self.lora, slot, snap.lora)
         mu = _i_slot(self.opt_state.mu, slot, snap.mu)
@@ -99,6 +119,8 @@ class SlotManager:
             beta1=tc.beta1, beta2=tc.beta2, grad_clip=tc.grad_clip)
         self.slot_jobs[slot] = snap.job_id
         self.slot_tasks[slot] = task
+        self.slot_b[slot] = snap.per_adapter_batch or tc.per_adapter_batch
+        self.slot_seq[slot] = snap.seq_len
 
     # ---- eviction ----------------------------------------------------------
     def snapshot(self, slot: int) -> SlotSnapshot:
@@ -111,6 +133,8 @@ class SlotManager:
             nu=_x_slot(self.opt_state.nu, slot),
             count=int(self.opt_state.count[slot]),
             rank=int(self.ranks[slot]),
+            per_adapter_batch=self.slot_b[slot],
+            seq_len=self.slot_seq[slot],
         )
 
     def evict(self, slot: int) -> None:
@@ -122,10 +146,22 @@ class SlotManager:
         self.ranks = self.ranks.at[slot].set(0)
         self.slot_jobs[slot] = None
         self.slot_tasks[slot] = None
+        self.slot_b[slot] = 0
+        self.slot_seq[slot] = 0
 
     # ---- queries -----------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, j in enumerate(self.slot_jobs) if j is None]
+
+    def slot_tokens(self, slot: int) -> int:
+        """Token footprint of one slot per fused step (b * seq)."""
+        return self.slot_b[slot] * max(self.slot_seq[slot], 1)
+
+    def occupied_tokens(self) -> int:
+        """Total tokens per fused step across occupied slots — the ragged
+        quantity the §A.3 memory model budgets (M_hat is token-linear)."""
+        return sum(self.slot_tokens(i) for i, j in
+                   enumerate(self.slot_jobs) if j is not None)
 
     def occupied(self) -> Dict[str, int]:
         return {j: i for i, j in enumerate(self.slot_jobs) if j is not None}

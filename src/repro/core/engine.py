@@ -154,11 +154,17 @@ class Engine:
         return int(z)
 
     def colocation_spec(self, task: Task) -> ColocationSpec:
-        """How this task fuses onto a shared frozen-backbone replica:
-        tasks agree on (arch, GPU demand, per-adapter batch, seq len,
-        loss kind); the replica's physical slot capacity is the memory
-        model's bound (NOT capped by this task's own search-space size —
-        a small task's replica has room for co-tenants)."""
+        """How this task fuses onto a shared frozen-backbone replica.
+
+        The fuse key carries only what the fused step genuinely requires
+        — (arch, GPU demand, loss kind). Per-adapter batch size and seq
+        len are NOT in the key anymore: slots are ragged, so tasks with
+        different widths co-train in one step and the widths instead
+        enter §A.3 admission as a token budget (b x seq per slot, checked
+        against the replica's token-linear memory model). The replica's
+        physical slot capacity is the memory model's bound (NOT capped by
+        this task's own search-space size — a small task's replica has
+        room for co-tenants)."""
         cfg = task.model_config()
         jobs = task.jobs()
         bsz = max(tc.per_adapter_batch for tc in jobs.values())
@@ -167,11 +173,11 @@ class Engine:
         mem = self.memory_model(task)
         replica = max(min(mem.max_batch() // max(bsz, 1), 16), 1)
         return ColocationSpec(
-            fuse_key=(cfg.name, task.num_gpus, bsz, seq, task.loss_kind),
+            fuse_key=(cfg.name, task.num_gpus, task.loss_kind),
             per_adapter_batch=bsz,
             slots_needed=self.pick_slots(task),
             replica_slots=int(replica),
-            mem=mem)
+            mem=mem, seq_len=seq)
 
     # ---- profiling + inter-task scheduling ---------------------------------
     def profile_key(self, task: Task) -> tuple:

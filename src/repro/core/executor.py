@@ -24,8 +24,24 @@ designs cannot):
   * ``BatchedExecutor`` keeps the original single-task API (one task, Z
     slots) as a thin wrapper: one executor, one lifecycle.
 
-The executor is shape-static: (Z, per-adapter batch, seq) never changes,
-so every admit/evict is an array update, not a recompile.
+Slots are RAGGED (variable-width): each slot carries its own
+(per-adapter batch, seq len), so one replica can fuse tasks with
+*different* batch sizes in a single step. ``_assemble`` packs each slot's
+own rows into a [Z, b_cap, seq_cap] lane buffer (label padding = -1 =>
+masked out of every loss and gradient) and dispatches dense (all resident
+slots full-width — the homogeneous fast case, no padding, no masks) vs
+ragged (per-slot token-row counts ride the batch as ``slot_rows`` and
+route the LoRA projections through the ragged grouped-GEMM kernels).
+The kernel-level dead-tile skip covers BATCH raggedness (whole missing
+rows); a shorter-seq guest is exact via label masking but pays padded
+compute for its seq-pad columns (mid-lane padding is inexpressible as a
+row-prefix count). Admission budgets *tokens* (sum of b_z * seq_z), not
+same-width slot counts — the §A.3 memory model M_hat is token-linear, so
+heterogeneous widths share one replica soundly.
+
+The executor is shape-static at CAPACITY: (Z, b_cap, seq_cap) never
+changes, so every admit/evict — at any width — is an array update, not a
+recompile.
 
 Lifecycle (unchanged from the paper):
 
@@ -38,8 +54,8 @@ Lifecycle (unchanged from the paper):
   3. CONTINUE-TRAINING: survivors train to their step budget with online
      divergence + overfitting detection; overfit exits checkpoint their
      best-val adapter; freed slots are BACKFILLED from the pending queue
-     via the §A.3 admission policy (same-batch-size preferred, memory-
-     model bounded — ``sched/intra_task.py``).
+     via the §A.3 admission policy (memory-model token budget; ragged
+     slots need no width matching — ``sched/intra_task.py``).
 """
 from __future__ import annotations
 
@@ -74,7 +90,12 @@ class ChunkReport:
     ``task`` attributes the chunk to its lifecycle (co-located replicas
     interleave chunks of several tasks), and ``slots_bound`` is a
     monotone upper bound on the task's future concurrent slot use — the
-    quantity cross-task admission reclaims as survivors exit."""
+    quantity cross-task admission reclaims as survivors exit.
+    ``tokens_executed`` counts the REAL tokens trained inside the chunk
+    (padding excluded): with ragged slot widths, wall time per token —
+    not per step — is the calibrated profiler-feedback quantity, and
+    ``slot_tokens`` exposes each slot's per-step token footprint at flush
+    time (0 = slot free)."""
     steps_executed: int
     events: Tuple[ProgressEvent, ...]
     phase: str
@@ -83,6 +104,8 @@ class ChunkReport:
     task: str = ""
     slots_in_use: int = 0
     slots_bound: int = 0
+    tokens_executed: int = 0     # real (non-padding) tokens in the chunk
+    slot_tokens: Tuple[int, ...] = ()   # per-slot b*seq at flush (0 = free)
 
 
 @dataclasses.dataclass
@@ -117,18 +140,25 @@ class SharedBackboneExecutor:
     """One frozen-backbone replica: Z adapter slots shared by N tasks.
 
     Owns the device state and the fused train/eval steps; task lifecycles
-    admit/evict slots through it and receive per-slot losses back. All
-    resident tasks must share (per-adapter batch, seq len, loss kind) —
-    the fuse-compatibility key the scheduler groups tasks by."""
+    admit/evict slots through it and receive per-slot losses back.
+    Resident tasks must share the loss kind and fit within the replica's
+    (b_cap, seq_cap) lane capacity — but NOT each other's widths: slots
+    are ragged, so adapters with different per-adapter batch sizes (and
+    seq lens) train in the same fused step. Homogeneous full-width mixes
+    dispatch the dense path (bit-identical to the pre-ragged executor);
+    anything else packs per-slot rows and rides the ragged grouped-GEMM
+    kernels."""
 
     def __init__(self, cfg: ModelConfig, params: Dict, *, Z: int,
                  per_adapter_batch: int, eval_every: int = 5, seed: int = 0,
                  loss_kind: str = "sft",
-                 mem_model: Optional[MemoryModel] = None):
+                 mem_model: Optional[MemoryModel] = None,
+                 seq_cap: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.Z = Z
-        self.b = per_adapter_batch
+        self.b_cap = per_adapter_batch     # lane capacity, NOT a shared width
+        self.seq_cap = seq_cap             # None => max over resident slots
         self.eval_every = eval_every
         self.loss_kind = loss_kind
         self.mem = mem_model
@@ -141,6 +171,13 @@ class SharedBackboneExecutor:
             STEPS.make_eval_step(cfg, loss_kind=loss_kind))
         self._lifecycles: Dict[str, "TaskLifecycle"] = {}
         self._wall = 0.0
+        self._tokens = 0
+
+    @property
+    def b(self) -> int:
+        """Deprecated alias: the lane CAPACITY (max slot width), kept for
+        construction-time call sites; per-slot widths live in SlotManager."""
+        return self.b_cap
 
     # ---- task registry -----------------------------------------------------
     def add_task(self, lc: "TaskLifecycle") -> None:
@@ -162,13 +199,15 @@ class SharedBackboneExecutor:
 
     def can_admit_task(self, lc: "TaskLifecycle") -> bool:
         """Cross-task admission gate: slot headroom plus the §A.3 memory
-        model under the safety margin (generalized to many tasks)."""
+        model over the TOKEN budget (sum of per-slot b*seq) — ragged slots
+        mean same-width slot counting under-/over-charges; M_hat is
+        token-linear, so tokens are the sound budget unit."""
         if lc.slots_bound() > self.slot_headroom():
             return False
         if self.mem is None:
             return True
-        total = sum(x.slots_bound() for x in self._lifecycles.values())
-        return self.mem.fits((total + lc.slots_bound()) * self.b)
+        tokens = sum(x.tokens_bound() for x in self._lifecycles.values())
+        return self.mem.fits_tokens(tokens + lc.tokens_bound())
 
     # ---- slot ops (called by lifecycles) -----------------------------------
     def acquire_slot(self) -> int:
@@ -177,8 +216,9 @@ class SharedBackboneExecutor:
         return free[0]
 
     def admit(self, slot: int, task: str, job_id: str, tc: TrainConfig,
-              key: jax.Array) -> None:
-        self.slots.admit(slot, job_id, tc, key, task=task)
+              key: jax.Array, b: int = 0, seq: int = 0) -> None:
+        assert not b or b <= self.b_cap, f"slot width {b} > b_cap"
+        self.slots.admit(slot, job_id, tc, key, task=task, b=b, seq=seq)
 
     def restore(self, slot: int, task: str, snap: SlotSnapshot,
                 tc: TrainConfig) -> None:
@@ -194,33 +234,72 @@ class SharedBackboneExecutor:
         return self.slots.adapter_at(slot)
 
     # ---- fused stepping ----------------------------------------------------
-    def _assemble(self) -> Dict[str, jnp.ndarray]:
-        """One fused [Z, ...] batch: each resident task's batcher yields
-        task-local lane rows, scattered into the physical slots its jobs
-        occupy. Unowned slots get zeros (their loss is masked anyway).
-        Every resident task's streams advance exactly one step — task-
-        local determinism, independent of co-tenants."""
+    def _resolved_seq_cap(self) -> int:
+        if self.seq_cap is not None:
+            return self.seq_cap
+        occ = [self.slots.slot_seq[i] for i in range(self.Z)
+               if self.slots.slot_jobs[i] is not None]
+        cap = max(occ, default=0)
+        assert cap > 0, "no resident slot carries a seq len"
+        return cap
+
+    def _assemble(self) -> Tuple[Dict[str, jnp.ndarray], np.ndarray,
+                                 bool, int]:
+        """One fused [Z, b_cap, seq_cap] batch with RAGGED slot packing.
+
+        Each resident job's lane draws its OWN (b, seq) rows from its
+        task's batcher, scattered into the job's physical slot; the lane
+        tail is padding (tokens 0, labels -1 => masked out of loss and
+        gradient). Every resident job's stream advances exactly one step
+        at its own width — task-local determinism, independent of
+        co-tenants. Returns (batch, slot_rows, dense, real_tokens):
+        ``slot_rows[z]`` is slot z's valid token-row count in flattened
+        b*seq units (the ragged grouped-GEMM group sizes), ``dense`` is
+        True iff every resident slot is full-width (the homogeneous fast
+        case — no padding, identical to the pre-ragged dense step), and
+        ``real_tokens`` counts actual (non-padding) tokens this step."""
+        S_cap = self._resolved_seq_cap()
         bufs: Dict[str, np.ndarray] = {}
+        slot_rows = np.zeros((self.Z,), np.int32)
+        dense = True
+        tokens = 0
         for lc in self.resident_tasks():
-            rows = lc.batcher.next_batch_dict()
-            for k, arr in rows.items():
-                if k not in bufs:
-                    bufs[k] = np.zeros((self.Z,) + arr.shape[1:], arr.dtype)
-                assert bufs[k].shape[1:] == arr.shape[1:], \
-                    f"co-located task {lc.task_name} batch shape mismatch"
-                for lane, slot in lc.resident.values():
-                    bufs[k][slot] = arr[lane]
-        return {k: jnp.asarray(v) for k, v in bufs.items()}
+            for job, (lane, slot) in lc.resident.items():
+                rows = lc.lane_batch_dict(job)
+                b_j = self.slots.slot_b[slot]
+                s_j = self.slots.slot_seq[slot] or S_cap
+                for k, arr in rows.items():
+                    assert arr.shape[0] <= self.b_cap \
+                        and arr.shape[1] <= S_cap, \
+                        f"task {lc.task_name} rows exceed lane capacity"
+                    if k not in bufs:
+                        fill = -1 if k.startswith("labels") else 0
+                        bufs[k] = np.full(
+                            (self.Z, self.b_cap, S_cap) + arr.shape[2:],
+                            fill, arr.dtype)
+                    bufs[k][slot, :arr.shape[0], :arr.shape[1]] = arr
+                slot_rows[slot] = b_j * S_cap
+                tokens += b_j * s_j
+                if b_j != self.b_cap or s_j != S_cap:
+                    dense = False
+        return ({k: jnp.asarray(v) for k, v in bufs.items()},
+                slot_rows, dense, tokens)
 
     def run_steps(self, n: int) -> None:
         """Train all active slots for n fused steps; dispatch per-slot
-        losses to the owning lifecycles' monitors."""
+        losses to the owning lifecycles' monitors. Dense vs ragged is
+        decided per step: a homogeneous full-width mix never pays the
+        masking path, a mixed-width mix threads ``slot_rows`` through the
+        batch into the ragged grouped-GEMM kernels."""
         t0 = time.time()
         for _ in range(n):
-            batch = self._assemble()
+            batch, slot_rows, dense, tokens = self._assemble()
+            if not dense:
+                batch["slot_rows"] = jnp.asarray(slot_rows)
             self.slots.lora, self.slots.opt_state, metrics = self._train_step(
                 self.params, self.slots.lora, self.slots.opt_state,
                 self.slots.hp, self.slots.active, self.slots.ranks, batch)
+            self._tokens += tokens
             per_loss = np.asarray(metrics["per_slot_loss"])
             for lc in self.resident_tasks():
                 for job, (_, slot) in lc.resident.items():
@@ -246,6 +325,19 @@ class SharedBackboneExecutor:
     def take_wall(self) -> float:
         wall, self._wall = self._wall, 0.0
         return wall
+
+    def take_tokens(self) -> int:
+        """Real (non-padding) tokens trained since the last flush — the
+        per-token profiler-feedback denominator for ragged widths."""
+        tok, self._tokens = self._tokens, 0
+        return tok
+
+    def slot_token_widths(self) -> Tuple[int, ...]:
+        """Per-slot tokens per fused step (b_z * seq_z; 0 = free slot)."""
+        return tuple(
+            self.slots.slot_tokens(i)
+            if self.slots.slot_jobs[i] is not None else 0
+            for i in range(self.Z))
 
 
 # ---------------------------------------------------------------------------
@@ -278,8 +370,14 @@ class TaskLifecycle:
         self.m = min(max_slots or ex.Z, ex.Z)     # this task's slot budget
         if batcher is None:
             assert dataset is not None, "need a batcher or a dataset"
-            batcher = SlotBatcher(dataset, self.m, ex.b, seed=seed)
+            batcher = SlotBatcher(dataset, self.m, ex.b_cap, seed=seed)
         self.batcher = batcher
+        # this task's seq len: a per-slot property on the shared executor
+        # (co-tenants may differ; lanes are padded to the replica seq cap)
+        self.seq_len = int(getattr(batcher, "seq_len", 0) or
+                           (dataset.train.shape[1] - 1 if dataset is not None
+                            else 0))
+        assert self.seq_len > 0, f"task {task_name}: unknown seq len"
         self.K = len(jobs)
         self.warmup_steps = ee.warmup_steps(total_steps)
         self._key = jax.random.PRNGKey(seed)
@@ -315,6 +413,19 @@ class TaskLifecycle:
         self._admissions += 1
         return jax.random.fold_in(self._key, self._admissions)
 
+    def job_width(self, job_id: str) -> int:
+        """The job's OWN per-adapter batch size, capped at the replica's
+        lane capacity — slots are ragged, so every job trains at its own
+        width instead of the executor-wide maximum."""
+        b = self.jobs[job_id].per_adapter_batch or self.ex.b_cap
+        return max(min(b, self.ex.b_cap), 1)
+
+    def lane_batch_dict(self, job_id: str) -> Dict[str, np.ndarray]:
+        """One fused-step draw for a resident job: its lane's stream
+        advanced by its own width (task-local, co-tenant independent)."""
+        lane, _ = self.resident[job_id]
+        return self.batcher.lane_batch_dict(lane, self.job_width(job_id))
+
     def _admit_job(self, job_id: str) -> None:
         lane = self._free_lanes.pop(0)
         slot = self.ex.acquire_slot()
@@ -323,16 +434,17 @@ class TaskLifecycle:
             self.ex.restore(slot, self.task_name,
                             self.snapshots.pop(job_id), tc)
         else:
-            self.ex.admit(slot, self.task_name, job_id, tc, self._next_key())
+            self.ex.admit(slot, self.task_name, job_id, tc, self._next_key(),
+                          b=self.job_width(job_id), seq=self.seq_len)
         self.resident[job_id] = (lane, slot)
-        self._policy.resident[job_id] = tc.per_adapter_batch
+        self._policy.resident[job_id] = self.job_width(job_id)
 
-    def _evict_job(self, job_id: str) -> int:
+    def _evict_job(self, job_id: str) -> None:
         lane, slot = self.resident.pop(job_id)
         self.ex.evict(slot)
         self._free_lanes.append(lane)
         self._free_lanes.sort()
-        return self._policy.evict(job_id)
+        self._policy.evict(job_id)
 
     def observe_train(self, job_id: str, loss: float) -> None:
         self.monitors[job_id].observe_train(loss)
@@ -363,6 +475,21 @@ class TaskLifecycle:
             cont = min(self.m, self.ee.top_k(self.K))
             return max(alive_waves + [cont, len(self.resident)])
         return min(self.m, len(self.resident) + len(self._queue))
+
+    def width_bound(self) -> int:
+        """Upper bound on the widest slot this task will still occupy
+        (max per-adapter batch over non-exited jobs; shrinks as wide jobs
+        exit)."""
+        alive = [self.job_width(j) for j in self.jobs
+                 if self.monitors[j].exited is None]
+        return max(alive, default=0)
+
+    def tokens_bound(self) -> int:
+        """Monotone upper bound on this task's per-step TOKEN footprint
+        (slots x widest remaining width x seq len) — what the ragged
+        cross-task admission gate budgets against the §A.3 memory model
+        instead of same-width slot counts."""
+        return self.slots_bound() * self.width_bound() * self.seq_len
 
     def remaining_steps_bound(self) -> int:
         """Upper bound on executor steps left in this lifecycle, assuming
@@ -469,8 +596,7 @@ class TaskLifecycle:
         self._queue = list(kept)
         # §A.3 greedy decreasing-batch-size initial admission (stable sort:
         # a homogeneous-batch queue keeps its val-loss ranking)
-        pending = [PendingJob(j, self.jobs[j].per_adapter_batch)
-                   for j in self._queue]
+        pending = [PendingJob(j, self.job_width(j)) for j in self._queue]
         for pj in self._policy.admit_initial(pending):
             del self._policy.resident[pj.job_id]     # _admit_job re-adds
             self._queue.remove(pj.job_id)
@@ -478,15 +604,14 @@ class TaskLifecycle:
         self._settle_continue()
 
     # ---- continue ----------------------------------------------------------
-    def _backfill(self, vacated_b: int) -> None:
-        """§A.3 backfill into freed capacity: prefer a pending job with the
-        SAME per-adapter batch size (homogeneous packing hits the grouped-
-        GEMM fast path), mixed only when the memory model confirms it."""
+    def _backfill(self) -> None:
+        """§A.3 backfill into freed capacity: pure memory-model budget —
+        ragged slots removed the same-batch-size constraint (any width
+        that fits the token budget co-trains in the fused step)."""
         if not self._queue or not self._free_lanes:
             return
-        pending = [PendingJob(j, self.jobs[j].per_adapter_batch)
-                   for j in self._queue]
-        pick = self._policy.backfill(vacated_b, pending)
+        pending = [PendingJob(j, self.job_width(j)) for j in self._queue]
+        pick = self._policy.backfill(pending)
         if pick is None:
             return
         del self._policy.resident[pick.job_id]       # _admit_job re-adds
@@ -497,9 +622,9 @@ class TaskLifecycle:
         self._events.append(ProgressEvent(
             kind=EventKind.JOB_EXITED, task=self.task_name, job=job_id,
             reason=decision.reason.value, step=decision.step))
-        vacated_b = self._evict_job(job_id)
+        self._evict_job(job_id)
         if self.phase == "continue":
-            self._backfill(vacated_b)
+            self._backfill()
 
     def _eval_and_detect(self) -> None:
         if not self.resident:
@@ -531,7 +656,8 @@ class TaskLifecycle:
                         kind=EventKind.JOB_EXITED, task=self.task_name,
                         job=job_id, reason=ExitReason.COMPLETED.value,
                         step=self.steps_done[job_id]))
-                    self._backfill(self._evict_job(job_id))
+                    self._evict_job(job_id)
+                    self._backfill()
                     changed = True
         if not self.resident and not self._queue:
             self._finish()
@@ -547,7 +673,7 @@ class TaskLifecycle:
                 best_val_step=mon.best_val_step,
                 exit_reason=(mon.exited.reason if mon.exited else None),
                 steps_trained=mon.steps_trained,
-                samples_trained=mon.steps_trained * self.ex.b)
+                samples_trained=mon.steps_trained * self.job_width(job_id))
         finite = {j: r for j, r in results.items()
                   if np.isfinite(r.best_val)}
         # all jobs can diverge (every val loss inf/nan): report an empty
@@ -558,7 +684,8 @@ class TaskLifecycle:
         if best_job is not None:
             results[best_job].adapter = self._best_ckpt.get(best_job)
         total_samples = sum(r.samples_trained for r in results.values())
-        full_samples = self.K * self.total_steps * self.ex.b
+        full_samples = sum(self.total_steps * self.job_width(j)
+                           for j in self.jobs)
         exit_counts: Dict[str, int] = {}
         for r in results.values():
             if r.exit_reason is not None:
@@ -644,11 +771,14 @@ class BatchedExecutor:
                  ee: EarlyExitConfig = EarlyExitConfig(),
                  eval_every: int = 5, seed: int = 0,
                  loss_kind: str = "sft", batcher=None,
-                 mem_model: Optional[MemoryModel] = None):
+                 mem_model: Optional[MemoryModel] = None,
+                 seq_cap: Optional[int] = None):
+        if seq_cap is None and dataset is not None:
+            seq_cap = dataset.train.shape[1] - 1
         self.backbone = SharedBackboneExecutor(
             cfg, params, Z=Z, per_adapter_batch=per_adapter_batch,
             eval_every=eval_every, seed=seed, loss_kind=loss_kind,
-            mem_model=mem_model)
+            mem_model=mem_model, seq_cap=seq_cap)
         self.cfg = cfg
         self.dataset = dataset
         self.Z = Z
@@ -702,4 +832,6 @@ class BatchedExecutor:
             steps_executed=steps, events=lc.drain_events(), phase=lc.phase,
             remaining_steps_bound=lc.remaining_steps_bound(),
             wall_time_s=self.backbone.take_wall(), task=lc.task_name,
-            slots_in_use=lc.slots_in_use(), slots_bound=lc.slots_bound())
+            slots_in_use=lc.slots_in_use(), slots_bound=lc.slots_bound(),
+            tokens_executed=self.backbone.take_tokens(),
+            slot_tokens=self.backbone.slot_token_widths())

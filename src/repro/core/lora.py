@@ -51,6 +51,46 @@ def backend(name: str):
 
 
 # ---------------------------------------------------------------------------
+# Ragged slot widths (heterogeneous per-adapter batch sizes)
+# ---------------------------------------------------------------------------
+#
+# When co-located adapters train with different batch widths, slot z only
+# owns the first ``rows[z]`` token rows of its [T = b_max*seq] lane.
+# ``ragged_rows`` binds the per-slot row counts for the duration of a trace
+# (the executor's fused train step sets it from the batch it packed); every
+# ``lora_delta`` inside the trace then masks/skips the padded rows — the
+# jnp path by zeroing them, the Pallas path via the ragged grouped-GEMM
+# kernels that skip dead tiles outright.
+
+@contextlib.contextmanager
+def ragged_rows(rows: Optional[jnp.ndarray]):
+    """Bind per-slot valid token-row counts ([Z] int32, in flattened
+    lead-dims units) for lora_delta calls traced under this context."""
+    prev = getattr(_backend, "rows", None)
+    _backend.rows = rows
+    try:
+        yield
+    finally:
+        _backend.rows = prev
+
+
+def get_ragged_rows() -> Optional[jnp.ndarray]:
+    return getattr(_backend, "rows", None)
+
+
+def _apply_row_mask(x: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """Zero token rows >= rows[z]; row index runs over the flattened
+    non-feature lead dims (b*seq for [Z, b, S, d] activations)."""
+    Z = x.shape[0]
+    n = 1
+    for d in x.shape[1:-1]:
+        n *= d
+    idx = jnp.arange(n).reshape((1,) + x.shape[1:-1])
+    keep = idx < rows.reshape((Z,) + (1,) * (x.ndim - 2))
+    return jnp.where(keep[..., None], x, jnp.zeros((), x.dtype))
+
+
+# ---------------------------------------------------------------------------
 # Application
 # ---------------------------------------------------------------------------
 
@@ -59,16 +99,26 @@ def lora_delta(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
     """scale * (x @ A) @ B, grouped over the leading slot axis.
 
     x: [Z, ..., d_in]; A: [Z, d_in, r]; B: [Z, r, d_out]; scale: [] or [Z].
+    Under a ``ragged_rows`` binding, slot z's delta is computed over only
+    its first rows[z] token rows (zero delta + zero grads on the pad).
     """
     name = get_backend()
+    rows = get_ragged_rows()
     if name == "jnp":
+        if rows is not None:
+            x = _apply_row_mask(x, rows)
         return _lora_delta_jnp(x, A, B, scale)
     from repro.kernels.grouped_lora import ops as kops
     lead = x.shape[:-1]
     Z = x.shape[0]
     xt = x.reshape(Z, -1, x.shape[-1])
-    y = kops.grouped_lora(xt, A, B, _scale_vec(scale, Z, x.dtype),
-                          interpret=(name == "pallas_interpret"))
+    interpret = (name == "pallas_interpret")
+    if rows is not None:
+        y = kops.ragged_grouped_lora(xt, A, B, _scale_vec(scale, Z, x.dtype),
+                                     rows, interpret=interpret)
+    else:
+        y = kops.grouped_lora(xt, A, B, _scale_vec(scale, Z, x.dtype),
+                              interpret=interpret)
     return y.reshape(*lead, B.shape[-1])
 
 

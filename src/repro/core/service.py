@@ -59,6 +59,11 @@ class TaskCancelled(Exception):
     """Raised by ``TaskHandle.result()`` when the task was cancelled."""
 
 
+class QuotaExceeded(Exception):
+    """Raised by ``TuningService.submit`` when a tenant's concurrent
+    (non-terminal) task count would exceed ``max_tasks_per_tenant``."""
+
+
 @dataclasses.dataclass(frozen=True)
 class TaskStatus:
     name: str
@@ -76,6 +81,7 @@ class _TaskMeta:
     submitted_at: float
     profile_key: Optional[Tuple]
     driver: Optional[TaskDriver] = None
+    tenant: str = "default"
 
 
 class TaskHandle:
@@ -158,7 +164,8 @@ class TuningService:
                  method: str = "cp", delay_delta: Optional[float] = 2.0,
                  profile_store: Optional[profiler.ProfileStore] = None,
                  engine=None, colocate: bool = True,
-                 profile_path: Optional[str] = None):
+                 profile_path: Optional[str] = None,
+                 max_tasks_per_tenant: Optional[int] = None):
         if profile_store is None and profile_path is not None:
             # persistence across sessions (ROADMAP service hardening):
             # feedback observed by earlier service processes seeds this one
@@ -187,6 +194,7 @@ class TuningService:
         self._runtime = ElasticClusterRuntime(
             engine.total_gpus, method=method, delay_delta=delay_delta,
             colocate=colocate)
+        self.max_tasks_per_tenant = max_tasks_per_tenant
         self._meta: Dict[str, _TaskMeta] = {}
         self._handles: Dict[str, TaskHandle] = {}
         self._recorded: set = set()
@@ -194,16 +202,37 @@ class TuningService:
         self._pre_cancels: List[Tuple[str, Optional[float]]] = []
 
     # ------------------------------------------------------------ admission
+    def active_tasks_of(self, tenant: str) -> int:
+        """Number of this tenant's non-terminal (pending/running) tasks."""
+        return sum(1 for name, meta in self._meta.items()
+                   if meta.tenant == tenant
+                   and not self.status(name).state.terminal)
+
+    def _check_quota(self, tenant: str) -> None:
+        quota = self.max_tasks_per_tenant
+        if quota is None:
+            return
+        active = self.active_tasks_of(tenant)
+        if active >= quota:
+            raise QuotaExceeded(
+                f"tenant {tenant!r} has {active} active tasks "
+                f"(max_tasks_per_tenant={quota})")
+
     def submit(self, task, at: float = 0.0,
                early_exit: EarlyExitConfig = EarlyExitConfig(),
-               spec: Optional[TaskSpec] = None) -> TaskHandle:
+               spec: Optional[TaskSpec] = None,
+               tenant: str = "default") -> TaskHandle:
         """Submit an ``engine.Task`` at virtual time ``at``. Profiling
         consults the session's ``ProfileStore``, so durations reflect any
         feedback already observed. ``spec`` overrides the profiled spec
         with a worst-case estimate that is used verbatim (the engine's
         batch wrapper relies on it staying a true residual upper bound for
         the elastic<=static guarantee); profiled submissions apply the
-        feedback scale exactly once, in ``submit_spec``."""
+        feedback scale exactly once, in ``submit_spec``. ``tenant``
+        attributes the task for the per-tenant concurrency quota
+        (``max_tasks_per_tenant``): a submission that would push the
+        tenant past its quota raises ``QuotaExceeded`` before anything is
+        admitted."""
         explicit = spec is not None
         if spec is None:
             spec = self.engine.profile_raw(task, early_exit)
@@ -211,13 +240,14 @@ class TuningService:
         return self.submit_spec(
             spec, factory, at=at, profile_key=self.engine.profile_key(task),
             scale_duration=not explicit,
-            colo=self.engine.colocation_spec(task))
+            colo=self.engine.colocation_spec(task), tenant=tenant)
 
     def submit_spec(self, spec: TaskSpec,
                     driver_factory: Callable[[], TaskDriver],
                     at: float = 0.0, profile_key: Optional[Tuple] = None,
                     scale_duration: bool = True,
-                    colo: Optional[ColocationSpec] = None) -> TaskHandle:
+                    colo: Optional[ColocationSpec] = None,
+                    tenant: str = "default") -> TaskHandle:
         """Low-level admission: any ``TaskDriver`` factory (simulated
         drivers for benchmarks / property tests). When ``profile_key`` is
         given and ``scale_duration`` is on, the estimated duration is
@@ -226,9 +256,12 @@ class TuningService:
         unscaled estimate so the ratio never compounds. ``colo`` marks the
         task fusable: instead of waiting for free GPUs, a small pending
         task is routed onto a live shared-backbone replica with the same
-        fuse key the moment cross-task admission accepts it."""
+        fuse key the moment cross-task admission accepts it — since the
+        ragged refactor the key is width-free (arch/gpus/loss), so mixed
+        batch-size submissions land on live replicas too."""
         name = spec.name
         assert name not in self._meta, f"duplicate task name {name}"
+        self._check_quota(tenant)
         unscaled = spec.duration
         if profile_key is not None and scale_duration:
             spec = dataclasses.replace(
@@ -236,7 +269,7 @@ class TuningService:
                     profile_key, spec.duration))
         meta = _TaskMeta(spec=spec, unscaled_duration=unscaled,
                          submitted_at=max(at, self.now),
-                         profile_key=profile_key)
+                         profile_key=profile_key, tenant=tenant)
 
         def wrapped() -> TaskDriver:
             drv = driver_factory()
@@ -326,15 +359,20 @@ class TuningService:
             meta = self._meta[name]
             if meta.profile_key is None:
                 continue
-            wall = None
+            wall = wall_tok = None
             if meta.driver is not None:
                 obs = getattr(meta.driver, "observed_wall_step_s", None)
                 wall = obs() if callable(obs) else None
+                # per-token wall time: the calibrated quantity once fused
+                # steps mix heterogeneous slot widths (ragged co-location)
+                obs_t = getattr(meta.driver, "observed_wall_token_s", None)
+                wall_tok = obs_t() if callable(obs_t) else None
             self.profile_store.record(
                 meta.profile_key,
                 realized_duration=end - starts[name],
                 estimated_duration=meta.unscaled_duration,
-                wall_step_time_s=wall)
+                wall_step_time_s=wall,
+                wall_token_time_s=wall_tok)
 
     # ------------------------------------------------------------ status
     def status(self, name: str) -> TaskStatus:

@@ -7,6 +7,7 @@ through the slot-stacked LoRA tree.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Callable, Dict
 
@@ -14,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import lora as LORA
 from repro.core import losses as LS
 from repro.core.lora import mask_lora_tree
 from repro.models import model as M
@@ -23,18 +25,29 @@ from repro.optim import adamw
 def make_train_step(cfg: ModelConfig, *, loss_kind: str = "sft",
                     remat: bool = True) -> Callable:
     """train_step(params, lora, opt_state, hp, active, ranks, batch)
-    -> (lora', opt_state', metrics{per_slot_loss[Z], grad_norm[Z]})."""
+    -> (lora', opt_state', metrics{per_slot_loss[Z], grad_norm[Z]}).
+
+    ``batch`` may carry ``slot_rows`` ([Z] int32, valid token rows per
+    slot in flattened b*seq units): ragged slot widths — LoRA deltas are
+    then computed over only each slot's own rows (the ragged grouped-GEMM
+    path; zero delta and zero gradient on padding rows)."""
     loss_fn_inner = {"sft": LS.sft_loss, "dpo": LS.dpo_loss}[loss_kind]
 
     def train_step(params, lora, opt_state, hp: adamw.SlotHParams,
                    active: jnp.ndarray, ranks: jnp.ndarray, batch: Dict):
+        batch = dict(batch)
+        slot_rows = batch.pop("slot_rows", None)
+
         def loss_fn(lora_):
             total, per_slot = loss_fn_inner(cfg, params, lora_, batch,
                                             active, remat=remat)
             return total, per_slot
 
-        (_, per_slot), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(lora)
+        ctx = (LORA.ragged_rows(slot_rows) if slot_rows is not None
+               else contextlib.nullcontext())
+        with ctx:
+            (_, per_slot), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(lora)
         norms = adamw.per_slot_global_norm(grads)
         masker = functools.partial(mask_lora_tree, ranks=ranks,
                                    r_max=cfg.lora.r_max)

@@ -68,9 +68,13 @@ def make_task_dataset(name: str, vocab_size: int, seq_len: int,
 class SlotBatcher:
     """Per-slot epoch-cycling batch streams, stacked to [Z, b, S].
 
-    Each slot has its own cursor/shuffle (independent jobs); slots share the
-    per-adapter batch size (paper §A.1 homogeneous batch grouping). Inactive
-    slots are fed slot 0's data (their loss is masked out anyway).
+    Each slot has its own cursor/shuffle (independent jobs). ``b`` is the
+    slot's DEFAULT per-adapter batch size; ragged executors instead draw
+    per-lane via ``lane_batch_dict(lane, n)`` with the occupying job's own
+    width (paper §A.1 generalized to heterogeneous batch grouping). A
+    lane's stream depends only on its own draw history — never on which
+    other lanes exist or what they draw — which is what keeps a task's
+    batches identical whether it runs alone or co-located.
     """
 
     def __init__(self, ds: TaskDataset, Z: int, per_adapter_batch: int,
@@ -85,6 +89,10 @@ class SlotBatcher:
         self._cursor = [0] * Z
         self.epochs = [0] * Z
 
+    @property
+    def seq_len(self) -> int:
+        return self.ds.train.shape[1] - 1
+
     def reset_slot(self, z: int, seed: Optional[int] = None) -> None:
         if seed is not None:
             self._rngs[z] = np.random.default_rng(seed)
@@ -92,18 +100,27 @@ class SlotBatcher:
         self._cursor[z] = 0
         self.epochs[z] = 0
 
-    def _slot_batch(self, z: int) -> np.ndarray:
+    def take(self, z: int, n: int) -> np.ndarray:
+        """Draw n rows from lane z's stream (epoch-cycling): [n, S+1]."""
         idx = []
-        while len(idx) < self.b:
-            take = min(self.b - len(idx),
-                       self.ds.num_train - self._cursor[z])
-            idx.extend(self._perm[z][self._cursor[z]:self._cursor[z] + take])
-            self._cursor[z] += take
+        while len(idx) < n:
+            grab = min(n - len(idx), self.ds.num_train - self._cursor[z])
+            idx.extend(self._perm[z][self._cursor[z]:self._cursor[z] + grab])
+            self._cursor[z] += grab
             if self._cursor[z] >= self.ds.num_train:
                 self._perm[z] = self._rngs[z].permutation(self.ds.num_train)
                 self._cursor[z] = 0
                 self.epochs[z] += 1
         return self.ds.train[np.asarray(idx)]
+
+    def _slot_batch(self, z: int) -> np.ndarray:
+        return self.take(z, self.b)
+
+    def lane_batch_dict(self, lane: int, n: int) -> dict:
+        """One lane's ragged draw: {tokens [n,S], labels [n,S]}."""
+        rows = self.take(lane, n)
+        return {"tokens": rows[:, :-1].astype(np.int32),
+                "labels": rows[:, 1:].astype(np.int32)}
 
     def next_batch(self) -> Tuple[np.ndarray, np.ndarray]:
         """Returns (tokens [Z,b,S], labels [Z,b,S])."""
@@ -146,9 +163,20 @@ class PairSlotBatcher:
         self.Z, self.b = Z, per_adapter_batch
         self.epochs = self.chosen.epochs
 
+    @property
+    def seq_len(self) -> int:
+        return self.chosen.seq_len
+
     def reset_slot(self, z: int, seed=None) -> None:
         self.chosen.reset_slot(z, seed)
         self.rejected.reset_slot(z, seed)
+
+    def lane_batch_dict(self, lane: int, n: int) -> dict:
+        c = self.chosen.lane_batch_dict(lane, n)
+        r = self.rejected.lane_batch_dict(lane, n)
+        return {"tokens_chosen": c["tokens"], "labels_chosen": c["labels"],
+                "tokens_rejected": r["tokens"],
+                "labels_rejected": r["labels"]}
 
     def next_batch_dict(self) -> dict:
         tc, lc = self.chosen.next_batch()

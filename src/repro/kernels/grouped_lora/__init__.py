@@ -1,4 +1,8 @@
-"""Grouped multi-adapter LoRA kernels (Pallas TPU; interpret-mode on CPU)."""
-from repro.kernels.grouped_lora.ops import grouped_lora
+"""Grouped multi-adapter LoRA kernels (Pallas TPU; interpret-mode on CPU).
 
-__all__ = ["grouped_lora"]
+``grouped_lora`` is the dense homogeneous-batch path; ``ragged_grouped_lora``
+handles per-slot token-row counts (heterogeneous per-adapter batch sizes).
+"""
+from repro.kernels.grouped_lora.ops import grouped_lora, ragged_grouped_lora
+
+__all__ = ["grouped_lora", "ragged_grouped_lora"]

@@ -16,8 +16,10 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.grouped_lora import grouped_lora as K
+from repro.kernels.grouped_lora import ragged as R
 
 _LANE = 128   # TPU lane width; last-dim tile multiple
 _SUB = 8      # sublane multiple
@@ -136,3 +138,103 @@ def grouped_lora(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
     if y_base is not None:
         return fn(x, A, B, scale, y_base)
     return fn(x, A, B, scale)
+
+
+# ---------------------------------------------------------------------------
+# ragged variant: per-slot token-row counts (heterogeneous batch widths)
+# ---------------------------------------------------------------------------
+
+def _ragged_fwd_impl(x, A, B, scale, rows, y_base, interpret):
+    Z, T, din = x.shape
+    r, dout = B.shape[1], B.shape[2]
+    Tp, dinp, doutp, rp = _tile_plan(T, din, dout, r)
+    xp = _pad_axis(_pad_axis(x, 1, Tp), 2, dinp)
+    Ap = _pad_axis(_pad_axis(A, 1, dinp), 2, rp).astype(x.dtype)
+    Bp = _pad_axis(_pad_axis(B, 1, rp), 2, doutp).astype(x.dtype)
+    s = R.xa(xp, Ap, rows, interpret=interpret)
+    yb = None
+    if y_base is not None:
+        yb = _pad_axis(_pad_axis(y_base, 1, Tp), 2, doutp)
+    y = R.sb_add(s, Bp, scale, rows, yb, interpret=interpret)
+    return y[:, :T, :dout], s[:, :T, :]
+
+
+def _ragged_bwd_impl(x, A, B, scale, rows, s, dy, interpret):
+    Z, T, din = x.shape
+    r, dout = B.shape[1], B.shape[2]
+    Tp, dinp, doutp, rp = _tile_plan(T, din, dout, r)
+    xp = _pad_axis(_pad_axis(x, 1, Tp), 2, dinp)
+    Ap = _pad_axis(_pad_axis(A, 1, dinp), 2, rp).astype(x.dtype)
+    Bp = _pad_axis(_pad_axis(B, 1, rp), 2, doutp).astype(x.dtype)
+    sp = _pad_axis(s, 1, Tp)
+    dyp = _pad_axis(_pad_axis(dy, 1, Tp), 2, doutp).astype(x.dtype)
+    ds_ = R.ds(dyp, Bp, scale, rows, interpret=interpret)
+    dx_ = R.dx(ds_, Ap, rows, interpret=interpret)
+    dA_ = R.da(xp, ds_, rows, interpret=interpret)
+    dB_ = R.db(sp, dyp, scale, rows, interpret=interpret)
+    return (dx_[:, :T, :din], dA_[:, :din, :r], dB_[:, :r, :dout])
+
+
+def _rows_cotangent(rows):
+    # integer primal => float0 cotangent (rows carries no gradient)
+    return np.zeros(np.shape(rows), jax.dtypes.float0)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_ragged_fn(interpret: bool, has_base: bool):
+    if has_base:
+        @jax.custom_vjp
+        def f(x, A, B, scale, rows, y_base):
+            y, _ = _ragged_fwd_impl(x, A, B, scale, rows, y_base, interpret)
+            return y
+
+        def f_fwd(x, A, B, scale, rows, y_base):
+            y, s = _ragged_fwd_impl(x, A, B, scale, rows, y_base, interpret)
+            return y, (x, A, B, scale, rows, s)
+
+        def f_bwd(res, dy):
+            x, A, B, scale, rows, s = res
+            dx_, dA_, dB_ = _ragged_bwd_impl(x, A, B, scale, rows, s, dy,
+                                             interpret)
+            return (dx_, dA_, dB_, jnp.zeros_like(scale),
+                    _rows_cotangent(rows), dy)
+
+        f.defvjp(f_fwd, f_bwd)
+        return f
+
+    @jax.custom_vjp
+    def g(x, A, B, scale, rows):
+        y, _ = _ragged_fwd_impl(x, A, B, scale, rows, None, interpret)
+        return y
+
+    def g_fwd(x, A, B, scale, rows):
+        y, s = _ragged_fwd_impl(x, A, B, scale, rows, None, interpret)
+        return y, (x, A, B, scale, rows, s)
+
+    def g_bwd(res, dy):
+        x, A, B, scale, rows, s = res
+        dx_, dA_, dB_ = _ragged_bwd_impl(x, A, B, scale, rows, s, dy,
+                                         interpret)
+        return (dx_, dA_, dB_, jnp.zeros_like(scale),
+                _rows_cotangent(rows))
+
+    g.defvjp(g_fwd, g_bwd)
+    return g
+
+
+def ragged_grouped_lora(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+                        scale: jnp.ndarray, rows: jnp.ndarray,
+                        y_base: Optional[jnp.ndarray] = None, *,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Differentiable RAGGED grouped LoRA: slot z applies its adapter to
+    only the first ``rows[z]`` token rows of its lane; padded rows get a
+    zero delta (y_base passes through) and zero gradients.
+
+    x: [Z,T,din]; A: [Z,din,r]; B: [Z,r,dout]; scale: [Z]; rows: [Z] int.
+    ``rows == T`` everywhere reproduces ``grouped_lora`` exactly — the
+    executor dispatches dense for homogeneous mixes, ragged otherwise.
+    """
+    fn = _make_ragged_fn(bool(interpret), y_base is not None)
+    if y_base is not None:
+        return fn(x, A, B, scale, rows, y_base)
+    return fn(x, A, B, scale, rows)

@@ -1,0 +1,356 @@
+"""Pallas TPU kernels: RAGGED grouped multi-adapter LoRA GEMMs (fwd + bwd).
+
+The dense kernels (grouped_lora.py) assume every slot contributes the same
+number of token rows T — the homogeneous-batch fast case. Heterogeneous
+tuning mixes break that: co-located adapters train with *different*
+per-adapter batch sizes, so slot z only owns ``rows[z]`` of the T token
+rows in its lane (a prefix; the tail is padding). Note the skip applies
+to BATCH-width raggedness only: a co-located task with a shorter seq len
+pads mid-lane (per sequence), which a single prefix count cannot express
+— seq raggedness is handled at the executor/loss layer (label masking),
+not here, and pays padded compute.
+
+The ragged path keeps the dense slot-stacked layout ([Z, T, ...], static
+shapes => no recompile when widths change) and threads a per-slot row-count
+array ``rows: [Z] int32`` through scalar prefetch:
+
+  * tiles **fully past** a slot's row count skip the MXU work entirely
+    (``@pl.when`` guard) and emit zeros — a slot with a small batch pays
+    only for its own tiles;
+  * the **boundary** tile masks padding rows to zero on load, so padded
+    rows provably contribute nothing to any output and receive zero
+    gradient — the custom VJP built from these kernels is exact;
+  * ``rows[z] == T`` for every z degenerates to the dense kernels (the
+    masks are all-true and no tile is skipped), which is why the executor
+    can dispatch dense-vs-ragged per step without changing results.
+
+Same six-kernel schedule as the dense path, one launch per kernel for all
+Z adapters; interpret=True is the CPU CI harness, Mosaic is the TPU target.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.grouped_lora import grouped_lora as K
+
+F32 = jnp.float32
+
+
+def _row_mask(ref_block: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Zero rows >= ``valid`` of a (rows, cols) tile (token dim leading)."""
+    idx = jax.lax.broadcasted_iota(jnp.int32, ref_block.shape, 0)
+    return jnp.where(idx < valid, ref_block, jnp.zeros_like(ref_block))
+
+
+# ---------------------------------------------------------------------------
+# forward: S = X @ A        (token rows masked per slot)
+# ---------------------------------------------------------------------------
+
+def _xa_kernel(rows_ref, x_ref, a_ref, s_ref, acc_ref):
+    z, m, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    bm = x_ref.shape[1]
+    valid = rows_ref[z] - m * bm
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(valid > 0)               # dead tiles skip the MXU entirely
+    def _acc():
+        xm = _row_mask(x_ref[0], valid)
+        acc_ref[...] += jnp.dot(xm, a_ref[0], preferred_element_type=F32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        s_ref[0] = acc_ref[...].astype(s_ref.dtype)
+
+
+def xa(x: jnp.ndarray, A: jnp.ndarray, rows: jnp.ndarray, *,
+       bm: int = K.BM, bk: int = K.BK, interpret: bool = False
+       ) -> jnp.ndarray:
+    """x: [Z,T,din], A: [Z,din,r], rows: [Z] -> S [Z,T,r]; rows >= rows[z]
+    of slot z's lane are treated as absent (output zeros)."""
+    Z, T, din = x.shape
+    r = A.shape[2]
+    bm, bk = min(bm, T), min(bk, din)
+    grid = (Z, T // bm, din // bk)
+    return pl.pallas_call(
+        _xa_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bm, bk), lambda z, m, k, rr: (z, m, k)),
+                pl.BlockSpec((1, bk, r), lambda z, m, k, rr: (z, k, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, r),
+                                   lambda z, m, k, rr: (z, m, 0)),
+            scratch_shapes=[pltpu.VMEM((bm, r), F32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Z, T, r), x.dtype),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), x, A)
+
+
+# ---------------------------------------------------------------------------
+# forward: Y = S @ B * scale (+ Y_base)  — padded rows pass y_base through
+# ---------------------------------------------------------------------------
+
+def _sb_kernel(scale_ref, rows_ref, s_ref, b_ref, y_ref):
+    z, m = pl.program_id(0), pl.program_id(1)
+    valid = rows_ref[z] - m * s_ref.shape[1]
+
+    @pl.when(valid > 0)
+    def _():
+        sm = _row_mask(s_ref[0], valid)
+        y_ref[0] = (jnp.dot(sm, b_ref[0], preferred_element_type=F32)
+                    * scale_ref[z]).astype(y_ref.dtype)
+
+    @pl.when(valid <= 0)
+    def _dead():
+        y_ref[0] = jnp.zeros(y_ref.shape[1:], y_ref.dtype)
+
+
+def _sb_add_kernel(scale_ref, rows_ref, s_ref, b_ref, ybase_ref, y_ref):
+    z, m = pl.program_id(0), pl.program_id(1)
+    valid = rows_ref[z] - m * s_ref.shape[1]
+    base = ybase_ref[0].astype(F32)
+
+    @pl.when(valid > 0)
+    def _():
+        sm = _row_mask(s_ref[0], valid)
+        acc = jnp.dot(sm, b_ref[0], preferred_element_type=F32)
+        y_ref[0] = (acc * scale_ref[z] + base).astype(y_ref.dtype)
+
+    @pl.when(valid <= 0)
+    def _dead():                      # delta is zero: backbone passthrough
+        y_ref[0] = base.astype(y_ref.dtype)
+
+
+def sb_add(s: jnp.ndarray, B: jnp.ndarray, scale: jnp.ndarray,
+           rows: jnp.ndarray, y_base=None, *, bm: int = K.BM,
+           bn: int = K.BN, interpret: bool = False) -> jnp.ndarray:
+    """s: [Z,T,r], B: [Z,r,dout], scale/rows: [Z] -> Y [Z,T,dout]."""
+    Z, T, r = s.shape
+    dout = B.shape[2]
+    bm, bn = min(bm, T), min(bn, dout)
+    grid = (Z, T // bm, dout // bn)
+    in_specs = [
+        pl.BlockSpec((1, bm, r), lambda z, m, n, sc, rr: (z, m, 0)),
+        pl.BlockSpec((1, r, bn), lambda z, m, n, sc, rr: (z, 0, n)),
+    ]
+    args = [s, B]
+    kernel = _sb_kernel
+    if y_base is not None:
+        in_specs.append(
+            pl.BlockSpec((1, bm, bn), lambda z, m, n, sc, rr: (z, m, n)))
+        args.append(y_base)
+        kernel = _sb_add_kernel
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, bm, bn),
+                                   lambda z, m, n, sc, rr: (z, m, n)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Z, T, dout), s.dtype),
+        interpret=interpret,
+    )(scale.astype(F32), rows.astype(jnp.int32), *args)
+
+
+# ---------------------------------------------------------------------------
+# backward: dS = scale * dY @ B^T   (dY rows masked per slot)
+# ---------------------------------------------------------------------------
+
+def _ds_kernel(scale_ref, rows_ref, dy_ref, b_ref, ds_ref, acc_ref):
+    z, m, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    valid = rows_ref[z] - m * dy_ref.shape[1]
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(valid > 0)
+    def _acc():
+        dym = _row_mask(dy_ref[0], valid)
+        acc_ref[...] += jax.lax.dot_general(
+            dym, b_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=F32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        ds_ref[0] = (acc_ref[...] * scale_ref[z]).astype(ds_ref.dtype)
+
+
+def ds(dy: jnp.ndarray, B: jnp.ndarray, scale: jnp.ndarray,
+       rows: jnp.ndarray, *, bm: int = K.BM, bk: int = K.BK,
+       interpret: bool = False) -> jnp.ndarray:
+    """dy: [Z,T,dout], B: [Z,r,dout] -> dS [Z,T,r] (padded rows zero)."""
+    Z, T, dout = dy.shape
+    r = B.shape[1]
+    bm, bk = min(bm, T), min(bk, dout)
+    grid = (Z, T // bm, dout // bk)
+    return pl.pallas_call(
+        _ds_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bm, bk), lambda z, m, k, sc, rr: (z, m, k)),
+                pl.BlockSpec((1, r, bk), lambda z, m, k, sc, rr: (z, 0, k)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, r),
+                                   lambda z, m, k, sc, rr: (z, m, 0)),
+            scratch_shapes=[pltpu.VMEM((bm, r), F32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Z, T, r), dy.dtype),
+        interpret=interpret,
+    )(scale.astype(F32), rows.astype(jnp.int32), dy, B)
+
+
+# ---------------------------------------------------------------------------
+# backward: dX = dS @ A^T
+# ---------------------------------------------------------------------------
+
+def _dx_kernel(rows_ref, ds_ref, a_ref, dx_ref):
+    z, m = pl.program_id(0), pl.program_id(1)
+    valid = rows_ref[z] - m * ds_ref.shape[1]
+
+    @pl.when(valid > 0)
+    def _():
+        dsm = _row_mask(ds_ref[0], valid)
+        dx_ref[0] = jax.lax.dot_general(
+            dsm, a_ref[0], (((1,), (1,)), ((), ())),
+            preferred_element_type=F32).astype(dx_ref.dtype)
+
+    @pl.when(valid <= 0)
+    def _dead():
+        dx_ref[0] = jnp.zeros(dx_ref.shape[1:], dx_ref.dtype)
+
+
+def dx(ds_: jnp.ndarray, A: jnp.ndarray, rows: jnp.ndarray, *,
+       bm: int = K.BM, bn: int = K.BN, interpret: bool = False
+       ) -> jnp.ndarray:
+    """ds: [Z,T,r], A: [Z,din,r] -> dX [Z,T,din] (padded rows zero)."""
+    Z, T, r = ds_.shape
+    din = A.shape[1]
+    bm, bn = min(bm, T), min(bn, din)
+    grid = (Z, T // bm, din // bn)
+    return pl.pallas_call(
+        _dx_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bm, r), lambda z, m, n, rr: (z, m, 0)),
+                pl.BlockSpec((1, bn, r), lambda z, m, n, rr: (z, n, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bm, bn),
+                                   lambda z, m, n, rr: (z, m, n)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Z, T, din), ds_.dtype),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), ds_, A)
+
+
+# ---------------------------------------------------------------------------
+# backward weight grads: dA = X^T @ dS ; dB = scale * S^T @ dY
+# (contraction over token blocks; only a slot's own rows contribute)
+# ---------------------------------------------------------------------------
+
+def _da_kernel(rows_ref, x_ref, ds_ref, da_ref, acc_ref):
+    z, k = pl.program_id(0), pl.program_id(2)
+    valid = rows_ref[z] - k * x_ref.shape[1]
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(valid > 0)
+    def _acc():
+        xm = _row_mask(x_ref[0], valid)
+        acc_ref[...] += jax.lax.dot_general(
+            xm, ds_ref[0], (((0,), (0,)), ((), ())),
+            preferred_element_type=F32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        da_ref[0] = acc_ref[...]
+
+
+def da(x: jnp.ndarray, ds_: jnp.ndarray, rows: jnp.ndarray, *,
+       bd: int = K.BN, bt: int = K.BT, interpret: bool = False
+       ) -> jnp.ndarray:
+    """x: [Z,T,din], ds: [Z,T,r] -> dA [Z,din,r] fp32 (only rows[z] rows
+    of slot z contribute)."""
+    Z, T, din = x.shape
+    r = ds_.shape[2]
+    bd, bt = min(bd, din), min(bt, T)
+    grid = (Z, din // bd, T // bt)
+    return pl.pallas_call(
+        _da_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bt, bd), lambda z, d, k, rr: (z, k, d)),
+                pl.BlockSpec((1, bt, r), lambda z, d, k, rr: (z, k, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bd, r),
+                                   lambda z, d, k, rr: (z, d, 0)),
+            scratch_shapes=[pltpu.VMEM((bd, r), F32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Z, din, r), F32),
+        interpret=interpret,
+    )(rows.astype(jnp.int32), x, ds_)
+
+
+def _db_kernel(scale_ref, rows_ref, s_ref, dy_ref, db_ref, acc_ref):
+    z, k = pl.program_id(0), pl.program_id(2)
+    valid = rows_ref[z] - k * s_ref.shape[1]
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(valid > 0)
+    def _acc():
+        sm = _row_mask(s_ref[0], valid)
+        acc_ref[...] += jax.lax.dot_general(
+            sm, dy_ref[0], (((0,), (0,)), ((), ())),
+            preferred_element_type=F32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _done():
+        db_ref[0] = acc_ref[...] * scale_ref[z]
+
+
+def db(s: jnp.ndarray, dy: jnp.ndarray, scale: jnp.ndarray,
+       rows: jnp.ndarray, *, bn: int = K.BN, bt: int = K.BT,
+       interpret: bool = False) -> jnp.ndarray:
+    """s: [Z,T,r], dy: [Z,T,dout] -> dB [Z,r,dout] fp32."""
+    Z, T, r = s.shape
+    dout = dy.shape[2]
+    bn, bt = min(bn, dout), min(bt, T)
+    grid = (Z, dout // bn, T // bt)
+    return pl.pallas_call(
+        _db_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bt, r), lambda z, n, k, sc, rr: (z, k, 0)),
+                pl.BlockSpec((1, bt, bn), lambda z, n, k, sc, rr: (z, k, n)),
+            ],
+            out_specs=pl.BlockSpec((1, r, bn),
+                                   lambda z, n, k, sc, rr: (z, 0, n)),
+            scratch_shapes=[pltpu.VMEM((r, bn), F32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Z, r, dout), F32),
+        interpret=interpret,
+    )(scale.astype(F32), rows.astype(jnp.int32), s, dy)

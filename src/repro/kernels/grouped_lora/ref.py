@@ -36,6 +36,27 @@ def grouped_lora_ref(x, A, B, scale, y_base=None) -> jnp.ndarray:
     return grouped_sb_add_ref(grouped_xa_ref(x, A), B, scale, y_base)
 
 
+def _rows_mask(x: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
+    """[Z,T,*] -> zero every token row t >= rows[z] of slot z's lane."""
+    Z, T = x.shape[0], x.shape[1]
+    keep = jnp.arange(T)[None, :] < rows[:, None]          # [Z, T]
+    return x * keep[:, :, None].astype(x.dtype)
+
+
+def ragged_lora_ref(x, A, B, scale, rows, y_base=None) -> jnp.ndarray:
+    """Ragged oracle: slot z contributes only its first rows[z] token rows;
+    padded rows produce a zero delta (y_base passes through)."""
+    return grouped_lora_ref(_rows_mask(x, rows), A, B, scale, y_base)
+
+
+def ragged_lora_bwd_ref(x, A, B, scale, rows, s, dy
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Ragged backward oracle: padded rows receive zero dX and contribute
+    nothing to dA/dB (mask dy; x/s pads already produce zero products)."""
+    return grouped_lora_bwd_ref(_rows_mask(x, rows), A, B, scale,
+                                _rows_mask(s, rows), _rows_mask(dy, rows))
+
+
 def grouped_lora_bwd_ref(x, A, B, scale, s, dy
                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """(dX, dA, dB) for Y = scale * (X A) B [+ Y_base].

@@ -86,17 +86,23 @@ class DriverChunk:
 class ColocationSpec:
     """A task's shared-backbone co-location profile.
 
-    Tasks with EQUAL ``fuse_key`` (arch, GPU demand, per-adapter batch,
-    seq len, loss kind) may share one frozen-backbone replica: the
-    replica hosting the task has ``replica_slots`` physical adapter
-    slots, the task itself needs at most ``slots_needed`` of them
+    Tasks with EQUAL ``fuse_key`` may share one frozen-backbone replica.
+    Since slots went ragged the key carries only what the fused step
+    genuinely requires — (arch, GPU demand, loss kind); per-adapter batch
+    size and seq len are PER-SLOT properties now, so heterogeneous widths
+    fuse freely and instead enter admission as a token budget:
+    ``per_adapter_batch`` x ``seq_len`` is the task's per-slot token
+    width, the replica hosting the task has ``replica_slots`` physical
+    adapter slots, the task itself needs at most ``slots_needed`` of them
     concurrently, and ``mem`` is the replica's fitted §A.3 memory model
-    (safety-margin bounded) that cross-task admission checks against."""
+    (token-linear, safety-margin bounded) that ragged cross-task
+    admission checks ``admit_cross_task`` against."""
     fuse_key: Tuple
     per_adapter_batch: int
     slots_needed: int
     replica_slots: int
     mem: Optional[MemoryModel] = None
+    seq_len: Optional[int] = None      # None => memory model's fit seq
 
 
 class TaskDriver:
@@ -180,9 +186,12 @@ class ColocatedReplicaDriver(TaskDriver):
 
     def resident_requests(self) -> List[ColoRequest]:
         """Live tasks' current demand on the replica (for cross-task
-        admission): shrinking slot bounds reclaim freed capacity."""
+        admission): shrinking slot bounds reclaim freed capacity. Demand
+        is token-denominated (slots x b x seq) — co-located tasks may
+        have different widths (ragged slots)."""
         return [ColoRequest(n, self._bound_of(h),
-                            h.colo.per_adapter_batch if h.colo else 0)
+                            h.colo.per_adapter_batch if h.colo else 0,
+                            h.colo.seq_len if h.colo else None)
                 for n, h in sorted(self._subs.items()) if not h.done]
 
     # ---- membership --------------------------------------------------------
@@ -779,9 +788,11 @@ class ElasticClusterRuntime:
 
     def _try_fuse(self, T: float) -> bool:
         """Co-locate pending fusable tasks onto live replicas. A task may
-        fuse onto a replica when (a) their fuse keys match, (b) §A.3
-        cross-task admission accepts it (slot headroom + memory model,
-        greedy decreasing-batch-size across all pending small tasks), and
+        fuse onto a replica when (a) their fuse keys match (width-free
+        since slots went ragged: arch/gpus/loss — mixed batch sizes and
+        seq lens fuse), (b) §A.3 cross-task admission accepts it (slot
+        headroom + token-linear memory model, greedy decreasing
+        token-width across all pending small tasks), and
         (c) soundness: the task's residual fits inside the replica's
         projected end and the replica clock has not passed the task's
         incumbent start bound — so fusing never extends the replica's
@@ -817,7 +828,8 @@ class ElasticClusterRuntime:
             admitted = admit_cross_task(
                 w.resident_requests(),
                 [ColoRequest(n, self._by_name[n].colo.slots_needed,
-                             self._by_name[n].colo.per_adapter_batch)
+                             self._by_name[n].colo.per_adapter_batch,
+                             self._by_name[n].colo.seq_len)
                  for n in ok],
                 cap.replica_slots, cap.mem)
             for n in admitted:
@@ -1129,15 +1141,18 @@ def sim_task_spec(name: str, *, K: int, Z: int, total_steps: int,
 def sim_colo_spec(fuse_key: Tuple, *, K: int, Z: int,
                   per_adapter_batch: int = 4,
                   replica_slots: Optional[int] = None,
-                  mem: Optional[MemoryModel] = None) -> ColocationSpec:
+                  mem: Optional[MemoryModel] = None,
+                  seq_len: Optional[int] = None) -> ColocationSpec:
     """ColocationSpec for a simulated task: it needs at most min(Z, K)
     concurrent slots, and a replica it hosts exposes ``replica_slots``
-    physical slots (defaults to its own Z)."""
+    physical slots (defaults to its own Z). ``fuse_key`` is the caller's
+    choice — ragged admission only needs (arch, gpus, loss)-level keys;
+    width enters through per_adapter_batch/seq_len token accounting."""
     return ColocationSpec(
         fuse_key=fuse_key, per_adapter_batch=per_adapter_batch,
         slots_needed=min(Z, K),
         replica_slots=replica_slots if replica_slots is not None else Z,
-        mem=mem)
+        mem=mem, seq_len=seq_len)
 
 
 # --------------------------------------------------------------------------
@@ -1170,6 +1185,7 @@ class ExecutorTaskDriver(TaskDriver):
         self._last_slots: Optional[int] = None
         self._wall_s = 0.0
         self._steps = 0
+        self._tokens = 0
 
     def start(self, now: float) -> None:
         gen = self.executor.run_task_chunks(
@@ -1187,6 +1203,7 @@ class ExecutorTaskDriver(TaskDriver):
             self._slot_bounds.append(report.slots_bound)
             self._wall_s += report.wall_time_s
             self._steps += report.steps_executed
+            self._tokens += report.tokens_executed
         assert self._chunks, "executor produced no chunks"
         # completion events ride the final chunk so the runtime replans
         # exactly once, with the GPUs actually freed
@@ -1211,6 +1228,14 @@ class ExecutorTaskDriver(TaskDriver):
     def observed_wall_step_s(self) -> Optional[float]:
         """Realized host seconds per executor step (profiler feedback)."""
         return self._wall_s / self._steps if self._steps else None
+
+    def observed_wall_token_s(self) -> Optional[float]:
+        """Realized host seconds per REAL token (padding excluded). With
+        ragged slot widths this is the calibrated feedback quantity — two
+        chunks with equal step counts can differ 4x in token throughput,
+        so per-step wall time alone would mis-estimate heterogeneous
+        mixes."""
+        return self._wall_s / self._tokens if self._tokens else None
 
     def result(self):
         return self._result

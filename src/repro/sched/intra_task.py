@@ -12,11 +12,14 @@ measurement is ``compiled.memory_analysis()``; on this CPU container the
 profiler plugs in the analytic accounting from sched/profiler.py (same
 linear structure).
 
-Admission policy: group pending jobs by per-adapter batch size, admit
-greedily in decreasing batch-size order while M_hat stays within the safety
-margin; on exit, backfill preferring the SAME batch size (homogeneous
-packing — hits the grouped-GEMM fast path and is required under adapter
-parallelism), mixed only when the queue runs dry.
+Admission policy: admit pending jobs greedily in decreasing batch-size
+order while M_hat stays within the safety margin. Slots are RAGGED
+(variable-width: the fused step packs per-slot row counts through the
+ragged grouped-GEMM path), so mixed batch sizes co-train freely — the
+budget is the token-linear memory model, never same-width slot counting.
+Cross-task admission (``admit_cross_task``) budgets the same way over
+TOKENS (slots * b * seq), letting tasks with different batch sizes and
+seq lens share one frozen-backbone replica.
 """
 from __future__ import annotations
 
@@ -45,6 +48,17 @@ class MemoryModel:
             return 1 << 20
         return max(int((self.capacity * self.safety_margin - self.k0)
                        / (self.k1 * self.seq_len)), 0)
+
+    # ---- token-denominated interface (ragged slot widths) ------------------
+    # M_hat is linear in TOKENS (B * L); when co-located slots disagree on
+    # (b, seq), tokens = sum of b_z * seq_z is the sound budget unit — the
+    # rows-based interface above assumes the fit-time seq_len throughout.
+    def predict_tokens(self, tokens: float) -> float:
+        return self.k0 + self.k1 * tokens
+
+    def fits_tokens(self, tokens: float) -> bool:
+        return self.predict_tokens(tokens) <= (self.capacity
+                                               * self.safety_margin)
 
 
 def fit_memory_model(points: Sequence[Tuple[int, float]], seq_len: int,
@@ -94,19 +108,16 @@ class IntraTaskScheduler:
             queue.remove(j)
         return admitted
 
-    def evict(self, job_id: str) -> int:
-        return self.resident.pop(job_id)
+    def evict(self, job_id: str) -> None:
+        del self.resident[job_id]
 
-    def backfill(self, vacated_b: int, queue: List[PendingJob]
-                 ) -> Optional[PendingJob]:
-        """Prefer a pending job with the SAME batch size; accept a different
-        size only if the memory model confirms the mixed packing fits."""
-        same = [j for j in queue if j.per_adapter_batch == vacated_b]
-        for j in same:
-            if self.can_admit(j.per_adapter_batch):
-                queue.remove(j)
-                self.resident[j.job_id] = j.per_adapter_batch
-                return j
+    def backfill(self, queue: List[PendingJob]) -> Optional[PendingJob]:
+        """Admit the largest pending job the memory-model budget accepts.
+
+        The historical same-batch-size fast path is gone: slots are ragged
+        (the fused step packs per-slot row counts through the ragged
+        grouped-GEMM path), so homogeneous packing buys nothing — the only
+        constraint is the token-linear §A.3 budget."""
         for j in sorted(queue, key=lambda j: -j.per_adapter_batch):
             if self.can_admit(j.per_adapter_batch):
                 queue.remove(j)
@@ -127,10 +138,17 @@ ExecutorSlots = IntraTaskScheduler
 @dataclasses.dataclass(frozen=True)
 class ColoRequest:
     """One task's demand on a shared replica: its concurrent-slot upper
-    bound and per-adapter batch size (M_hat sees slots * b tokens)."""
+    bound, per-adapter batch size, and seq len. ``seq_len=None`` falls
+    back to the memory model's fit-time seq len (homogeneous-seq legacy
+    callers); M_hat budgets slots * b * seq TOKENS either way."""
     name: str
     slots: int
     per_adapter_batch: int
+    seq_len: Optional[int] = None
+
+    def tokens(self, default_seq: int = 1) -> int:
+        seq = self.seq_len if self.seq_len else default_seq
+        return self.slots * self.per_adapter_batch * seq
 
 
 def admit_cross_task(resident: Sequence[ColoRequest],
@@ -138,24 +156,33 @@ def admit_cross_task(resident: Sequence[ColoRequest],
                      capacity_slots: int,
                      mem: Optional[MemoryModel] = None) -> List[str]:
     """§A.3 admission generalized across TASK boundaries: greedily admit
-    pending tasks in decreasing per-adapter-batch order (ties broken by
-    name for determinism) while the replica's slot capacity holds and the
-    fitted memory model M_hat(total batch) stays inside the safety margin.
+    pending tasks in decreasing per-slot TOKEN width (b * seq; ties broken
+    by name for determinism) while the replica's slot capacity holds and
+    the fitted memory model M_hat(total tokens) stays inside the safety
+    margin. Tasks need NOT share a batch size or seq len — ragged slots
+    fuse heterogeneous widths in one step, so the only compatibility the
+    key retains is (arch, gpus, loss kind).
 
     ``resident`` are tasks already co-located on the replica (the host
     included); their ``slots`` should be *current future-use bounds*, so
     capacity freed by early exits is reclaimable the moment it frees.
     Returns the admitted task names, in admission order."""
+    default_seq = mem.seq_len if mem is not None else 1
     used_slots = sum(r.slots for r in resident)
-    used_batch = sum(r.slots * r.per_adapter_batch for r in resident)
+    used_tokens = sum(r.tokens(default_seq) for r in resident)
     admitted: List[str] = []
-    for r in sorted(pending, key=lambda r: (-r.per_adapter_batch, r.name)):
+
+    def width(r: ColoRequest) -> int:
+        return r.per_adapter_batch * (r.seq_len if r.seq_len else
+                                      default_seq)
+
+    for r in sorted(pending, key=lambda r: (-width(r), r.name)):
         if used_slots + r.slots > capacity_slots:
             continue
-        batch = used_batch + r.slots * r.per_adapter_batch
-        if mem is not None and not mem.fits(batch):
+        tokens = used_tokens + r.tokens(default_seq)
+        if mem is not None and not mem.fits_tokens(tokens):
             continue
         admitted.append(r.name)
         used_slots += r.slots
-        used_batch = batch
+        used_tokens = tokens
     return admitted

@@ -154,9 +154,15 @@ def reestimate_duration(step_time_s: float, K: int, Z: int,
 
 @dataclasses.dataclass
 class ProfileRecord:
-    """Observed execution statistics for one profile key (EMA-smoothed)."""
+    """Observed execution statistics for one profile key (EMA-smoothed).
+
+    ``wall_token_time_s`` is the per-TOKEN wall time: with ragged slot
+    widths two fused steps can differ several-fold in token throughput,
+    so per-step wall time alone mis-calibrates duration estimates on
+    heterogeneous mixes — tokens are the width-invariant denominator."""
     duration_frac: float      # realized_duration / estimated_duration
     wall_step_time_s: Optional[float] = None  # realized host per-step seconds
+    wall_token_time_s: Optional[float] = None  # realized host per-token secs
     observations: int = 0
 
 
@@ -189,14 +195,16 @@ class ProfileStore:
     # ---- observed records --------------------------------------------------
     def record(self, key: Tuple, *, realized_duration: float,
                estimated_duration: float,
-               wall_step_time_s: Optional[float] = None) -> None:
+               wall_step_time_s: Optional[float] = None,
+               wall_token_time_s: Optional[float] = None) -> None:
         """Log one completed task. ``realized/estimated`` must both be in
         the session's *virtual* timeline and the estimate must be the
         UNSCALED worst case (recording vs an already-scaled estimate would
-        compound the ratio). Wall step time is the only host-clock
-        quantity; virtual step times are never recorded — for real
+        compound the ratio). Wall step/token times are the only host-clock
+        quantities; virtual step times are never recorded — for real
         executors the realized virtual step time IS the analytic one, so
-        an observation would be circular."""
+        an observation would be circular. Per-token wall time is the
+        calibrated quantity for ragged (mixed-width) fused steps."""
         frac = (realized_duration / estimated_duration
                 if estimated_duration > 0 else 1.0)
         frac = min(max(frac, 0.0), 1.0)     # estimates are upper bounds
@@ -212,12 +220,15 @@ class ProfileStore:
         if prev is None:
             self._records[key] = ProfileRecord(
                 duration_frac=frac, wall_step_time_s=wall_step_time_s,
+                wall_token_time_s=wall_token_time_s,
                 observations=1)
         else:
             self._records[key] = ProfileRecord(
                 duration_frac=ema(frac, prev.duration_frac),
                 wall_step_time_s=ema(wall_step_time_s,
                                      prev.wall_step_time_s),
+                wall_token_time_s=ema(wall_token_time_s,
+                                      prev.wall_token_time_s),
                 observations=prev.observations + 1)
         self._version += 1                  # invalidates all cached specs
 
@@ -226,6 +237,13 @@ class ProfileStore:
         out of the virtual timeline on purpose)."""
         rec = self._records.get(key)
         return rec.wall_step_time_s if rec is not None else None
+
+    def wall_token_time(self, key: Tuple) -> Optional[float]:
+        """Realized host seconds per REAL token trained (padding
+        excluded) — width-invariant, so it stays calibrated when fused
+        steps mix heterogeneous per-adapter batch sizes."""
+        rec = self._records.get(key)
+        return rec.wall_token_time_s if rec is not None else None
 
     def duration_scale(self, key: Tuple) -> float:
         """Multiplier for analytic worst-case durations (1.0 = no data)."""
@@ -267,6 +285,7 @@ class ProfileStore:
                 {"key": list(k),
                  "duration_frac": r.duration_frac,
                  "wall_step_time_s": r.wall_step_time_s,
+                 "wall_token_time_s": r.wall_token_time_s,
                  "observations": r.observations}
                 for k, r in sorted(self._records.items(),
                                    key=lambda kv: repr(kv[0]))],
@@ -284,6 +303,9 @@ class ProfileStore:
                 duration_frac=float(rec["duration_frac"]),
                 wall_step_time_s=(None if rec.get("wall_step_time_s") is None
                                   else float(rec["wall_step_time_s"])),
+                wall_token_time_s=(None
+                                   if rec.get("wall_token_time_s") is None
+                                   else float(rec["wall_token_time_s"])),
                 observations=int(rec.get("observations", 1)))
         return store
 

@@ -388,3 +388,149 @@ def test_cancelling_host_cancels_unfinished_guests():
     assert rep.results["s1"]["task"] == "s1"   # finished guest kept
     kinds = [(e.kind, e.task) for e in rep.events]
     assert (EventKind.TASK_CANCELLED, "s2") in kinds
+
+
+# ---------------------------------------------------------------------------
+# ragged co-location (mixed per-adapter batch sizes on one replica)
+# ---------------------------------------------------------------------------
+
+# width-free fuse key: since slots went ragged, compatibility is only
+# (arch, gpus, loss kind) — batch size / seq len enter as a token budget
+RKEY = ("arch-a", 1, "sft")
+
+
+def ragged_workload(G=2, mem=None):
+    """Host (b=4) plus small tasks with DIFFERENT widths (b=8, b=2):
+    same-key-only fusion (PR3 keys bake b in) cannot fuse them; ragged
+    admission can."""
+    return [
+        make_task("host", K=8, Z=4, total=400, warm=20, step_time=0.01,
+                  gpus=1, exits={}) +
+        (sim_colo_spec(RKEY, K=8, Z=4, per_adapter_batch=4, seq_len=64,
+                       replica_slots=8, mem=mem),),
+        make_task("hog", K=8, Z=4, total=400, warm=20, step_time=0.01,
+                  gpus=1, exits={}) + (None,),
+        make_task("wide", K=2, Z=2, total=60, warm=3, step_time=0.01,
+                  gpus=1, exits={}) +
+        (sim_colo_spec(RKEY, K=2, Z=2, per_adapter_batch=8, seq_len=64),),
+        make_task("narrow", K=2, Z=2, total=60, warm=3, step_time=0.01,
+                  gpus=1, exits={}) +
+        (sim_colo_spec(RKEY, K=2, Z=2, per_adapter_batch=2, seq_len=64),),
+    ]
+
+
+def test_ragged_colocation_fuses_mixed_batch_sizes():
+    """Guests whose per-adapter batch differs from the host's (8 and 2 vs
+    4) fuse onto the host replica under the relaxed key and the cluster
+    clears sooner than exclusive placement."""
+    G = 2
+    _, static, excl = run_colo(ragged_workload(G), G, colocate=False)
+    _, _, colo = run_colo(ragged_workload(G), G, colocate=True)
+    assert colo.colocated == {"narrow": "host", "wide": "host"}
+    assert excl.results == colo.results
+    assert colo.makespan < excl.makespan - 1e-9
+    assert colo.makespan <= static.makespan + 1e-9
+    colo.realized.validate(G)
+
+
+def test_same_key_fusion_cannot_fuse_mixed_widths():
+    """Baked-width keys (the pre-ragged fuse rule) reject every
+    mixed-batch guest that ragged admission accepts — the A/B the bench
+    quantifies."""
+    G = 2
+    tasks = ragged_workload(G)
+    # rebuild with PR3-style keys that embed (b, seq)
+    legacy = []
+    for spec, factory, colo in tasks:
+        if colo is not None:
+            colo = dataclasses.replace(
+                colo, fuse_key=RKEY + (colo.per_adapter_batch, 64))
+        legacy.append((spec, factory, colo))
+    _, _, same = run_colo(legacy, G, colocate=True)
+    _, _, ragged = run_colo(tasks, G, colocate=True)
+    assert same.colocated == {}                 # b=8 / b=2 vs host b=4
+    assert ragged.colocated == {"narrow": "host", "wide": "host"}
+    assert ragged.makespan < same.makespan - 1e-9
+
+
+def test_ragged_admission_respects_token_budget():
+    """The §A.3 token budget gates mixed-width fusion: with a tight
+    memory model the wide (b=8) guest must NOT fuse while the narrow
+    (b=2) one does — slot counts alone would admit both."""
+    from repro.sched.intra_task import MemoryModel
+    G = 2
+    # host bound: 4 slots * b=4 * seq 64 = 1024 tokens; narrow adds
+    # 2*2*64 = 256 (fits 1500); wide would add 2*8*64 = 1024 (rejected)
+    mem = MemoryModel(k0=0.0, k1=1.0, seq_len=64, capacity=1500,
+                      safety_margin=1.0)
+    _, static, rep = run_colo(ragged_workload(G, mem=mem), G, colocate=True)
+    assert rep.colocated == {"narrow": "host"}
+    assert rep.makespan <= static.makespan + 1e-9
+
+
+def test_admit_cross_task_token_accounting():
+    """Unit: admission sorts by per-slot token width and admits while
+    M_hat(total tokens) stays inside the margin."""
+    from repro.sched.intra_task import (ColoRequest, MemoryModel,
+                                        admit_cross_task)
+    mem = MemoryModel(k0=100.0, k1=1.0, seq_len=32, capacity=2000,
+                      safety_margin=1.0)
+    resident = [ColoRequest("host", slots=4, per_adapter_batch=4,
+                            seq_len=32)]                      # 512 tokens
+    pending = [
+        ColoRequest("wide", slots=2, per_adapter_batch=8, seq_len=32),
+        ColoRequest("narrow", slots=2, per_adapter_batch=2, seq_len=32),
+        ColoRequest("longseq", slots=1, per_adapter_batch=2, seq_len=128),
+    ]
+    # widths: wide 256, longseq 256, narrow 64 -> order (wide, longseq,
+    # narrow) with name tiebreak; budget 1900 - 512 = 1388 tokens
+    got = admit_cross_task(resident, pending, capacity_slots=16, mem=mem)
+    assert got == ["longseq", "wide", "narrow"]
+    # tighter budget (800 - 100 = 700 tokens): host 512 + narrow 64*2
+    # fits; wide (+512) and longseq (+256) both exceed it
+    tight = MemoryModel(k0=100.0, k1=1.0, seq_len=32, capacity=800,
+                        safety_margin=1.0)
+    got = admit_cross_task(resident, pending, capacity_slots=16, mem=tight)
+    assert got == ["narrow"]
+    # legacy callers without seq fall back to the model's fit seq
+    legacy = [ColoRequest("legacy", slots=2, per_adapter_batch=2)]
+    got = admit_cross_task(resident, legacy, capacity_slots=16, mem=mem)
+    assert got == ["legacy"]
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 10_000), G=st.sampled_from([2, 4]))
+def test_property_ragged_colocation_never_worse_than_static(seed, G):
+    """elastic <= static survives RAGGED co-location: fusing guests with
+    arbitrary (b, seq) widths under the token budget only ever starts
+    pending work earlier inside existing replica occupancy."""
+    from repro.sched.intra_task import MemoryModel
+    rng = np.random.default_rng(seed)
+    tasks = []
+    for i, (spec, factory) in enumerate(random_workload(rng, G)):
+        colo = None
+        if rng.random() < 0.7:
+            drv = factory()
+            mem = None
+            if rng.random() < 0.5:
+                mem = MemoryModel(
+                    k0=0.0, k1=1.0, seq_len=64,
+                    capacity=float(rng.integers(2_000, 40_000)),
+                    safety_margin=1.0)
+            colo = sim_colo_spec(
+                ("shared", spec.gpus), K=drv.K, Z=drv.Z,
+                per_adapter_batch=int(rng.integers(1, 17)),
+                seq_len=int(rng.choice([16, 64, 256])),
+                replica_slots=int(rng.integers(drv.Z, 2 * drv.Z + 1)),
+                mem=mem)
+        tasks.append((spec, factory, colo))
+    specs = [s for s, _, _ in tasks]
+    plan = solve(specs, G, "cp")
+    static = execute_static(plan, G, {s.name: f for s, f, _ in tasks})
+    rt = ElasticClusterRuntime(G, colocate=True)
+    for s, f, c in tasks:
+        rt.submit(s, f, colo=c)
+    rep = rt.run(initial=plan)
+    assert rep.makespan <= static.makespan + 1e-9
+    rep.realized.validate(G)
+    assert set(rep.results) == {s.name for s, _, _ in tasks}

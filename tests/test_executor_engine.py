@@ -147,16 +147,17 @@ def test_all_jobs_diverge_returns_empty_winner(env):
 
 def test_backfill_wired_through_intra_task_policy(env, monkeypatch):
     """§A.3 wiring: continue-phase backfill must go through the
-    sched/intra_task ExecutorSlots policy (same-batch-size-preferring
-    admission), not a FIFO queue pop."""
+    sched/intra_task ExecutorSlots policy (memory-model token-budget
+    admission — the same-batch-size fast path is dead now that slots are
+    ragged), not a FIFO queue pop."""
     from repro.sched import intra_task
 
     calls = []
     orig = intra_task.ExecutorSlots.backfill
 
-    def spy(self, vacated_b, queue):
-        calls.append((vacated_b, [j.job_id for j in queue]))
-        return orig(self, vacated_b, queue)
+    def spy(self, queue):
+        calls.append([j.job_id for j in queue])
+        return orig(self, queue)
 
     monkeypatch.setattr(intra_task.ExecutorSlots, "backfill", spy)
     cfg, ds, params = env

@@ -134,27 +134,32 @@ def exec_env():
     return cfg, params, ds_a, ds_b
 
 
-def _lifecycle(ex, name, ds, seed, total_steps=8):
+def _lifecycle(ex, name, ds, seed, total_steps=8, width=None):
+    kw = {} if width is None else {"per_adapter_batch": width}
     jobs = {f"{name}/j0": TrainConfig(learning_rate=3e-3, lora_rank=4,
-                                      max_steps=total_steps),
+                                      max_steps=total_steps, **kw),
             f"{name}/j1": TrainConfig(learning_rate=1e-3, lora_rank=8,
-                                      max_steps=total_steps)}
+                                      max_steps=total_steps, **kw)}
     ee = EarlyExitConfig(warmup_ratio=0.25, select_ratio=1.0)
     return TaskLifecycle(
         ex, name, jobs, total_steps, ee=ee, max_slots=2,
         batcher=SlotBatcher(ds, 2, ex.b, seed=seed), seed=seed)
 
 
-def _run(cfg, params, lifecycle_specs):
-    """Fresh Z=4 shared executor; run the given tasks co-located."""
-    ex = SharedBackboneExecutor(cfg, params, Z=4, per_adapter_batch=2,
+def _run(cfg, params, lifecycle_specs, b_cap=2):
+    """Fresh Z=4 shared executor; run the given tasks co-located.
+    ``lifecycle_specs`` entries are (name, ds, seed) or
+    (name, ds, seed, width) — width is the per-job batch size (ragged
+    slots: tasks may differ)."""
+    ex = SharedBackboneExecutor(cfg, params, Z=4, per_adapter_batch=b_cap,
                                 eval_every=2, seed=0)
-    lcs = [_lifecycle(ex, name, ds, seed)
-           for name, ds, seed in lifecycle_specs]
+    lcs = [_lifecycle(ex, spec[0], spec[1], spec[2],
+                      width=(spec[3] if len(spec) > 3 else None))
+           for spec in lifecycle_specs]
     results = run_colocated(ex, lcs)
-    hists = {name: {j: (tuple(m.val_hist), tuple(m.raw_train_hist))
-                    for j, m in lc.monitors.items()}
-             for (name, _, _), lc in zip(lifecycle_specs, lcs)}
+    hists = {spec[0]: {j: (tuple(m.val_hist), tuple(m.raw_train_hist))
+                       for j, m in lc.monitors.items()}
+             for spec, lc in zip(lifecycle_specs, lcs)}
     return results, hists
 
 
@@ -174,6 +179,98 @@ def test_cross_task_losses_bitwise_equal_solo(exec_env):
     assert fused["B"].best_val == solo_b["B"].best_val
     assert fused["A"].best_job == solo_a["A"].best_job
     assert fused["B"].best_job == solo_b["B"].best_job
+
+
+def test_ragged_cross_task_losses_bitwise_equal_solo(exec_env):
+    """Tasks with DIFFERENT per-adapter batch sizes fused on one shared
+    executor (ragged slots: A trains b=2, B trains b=4 in the same fused
+    step) produce bitwise-identical train/val loss histories to each task
+    running alone on the same-capacity replica — the loss-isolation
+    property survives width heterogeneity."""
+    cfg, params, ds_a, ds_b = exec_env
+    specs = [("A", ds_a, 3, 2), ("B", ds_b, 4, 4)]
+    fused, fused_h = _run(cfg, params, specs, b_cap=4)
+    solo_a, solo_a_h = _run(cfg, params, [specs[0]], b_cap=4)
+    solo_b, solo_b_h = _run(cfg, params, [specs[1]], b_cap=4)
+    assert fused_h["A"] == solo_a_h["A"]      # bitwise: tuples of floats
+    assert fused_h["B"] == solo_b_h["B"]
+    assert fused["A"].best_val == solo_a["A"].best_val
+    assert fused["B"].best_val == solo_b["B"].best_val
+    # the narrow task really trained at its own width
+    for r in fused["A"].job_results.values():
+        assert r.samples_trained == r.steps_trained * 2
+    for r in fused["B"].job_results.values():
+        assert r.samples_trained == r.steps_trained * 4
+
+
+def test_ragged_full_width_host_unperturbed_by_narrow_guest(exec_env):
+    """A full-width task flips from the dense dispatch (alone) to the
+    ragged dispatch (narrow co-tenant present) — its losses must not
+    move a bit either way."""
+    cfg, params, ds_a, ds_b = exec_env
+    fused, fused_h = _run(cfg, params,
+                          [("A", ds_a, 3, 4), ("B", ds_b, 4, 2)], b_cap=4)
+    solo, solo_h = _run(cfg, params, [("A", ds_a, 3, 4)], b_cap=4)
+    assert fused_h["A"] == solo_h["A"]
+    assert fused["A"].best_val == solo["A"].best_val
+
+
+def test_ragged_mixed_seq_len_cross_task_bitwise(exec_env):
+    """Tasks with DIFFERENT seq lens (16 vs 8) — and different widths —
+    fused on one seq_cap=16 executor: the short-seq guest's lanes pad
+    mid-row (label masking keeps it exact) and both tasks' loss
+    histories stay bitwise identical to running alone."""
+    cfg, params, ds_a, _ = exec_env
+    ds_short = make_task_dataset("task-c", cfg.vocab_size, seq_len=8,
+                                 num_train=32, num_val=8, difficulty=0.4,
+                                 seed=5)
+
+    def run(specs):
+        ex = SharedBackboneExecutor(cfg, params, Z=4, per_adapter_batch=4,
+                                    eval_every=2, seed=0, seq_cap=16)
+        lcs = [_lifecycle(ex, name, ds, seed, width=w)
+               for name, ds, seed, w in specs]
+        results = run_colocated(ex, lcs)
+        hists = {lc.task_name: {j: (tuple(m.val_hist),
+                                    tuple(m.raw_train_hist))
+                                for j, m in lc.monitors.items()}
+                 for lc in lcs}
+        return results, hists
+
+    specs = [("A", ds_a, 3, 4), ("C", ds_short, 5, 2)]
+    fused, fused_h = run(specs)
+    solo_a, solo_a_h = run([specs[0]])
+    solo_c, solo_c_h = run([specs[1]])
+    assert fused_h["A"] == solo_a_h["A"]
+    assert fused_h["C"] == solo_c_h["C"]
+    assert fused["A"].best_val == solo_a["A"].best_val
+    assert fused["C"].best_val == solo_c["C"].best_val
+    assert np.isfinite(fused["C"].best_val)
+
+
+def test_ragged_slot_widths_tracked(exec_env):
+    """While mixed-width tasks are co-resident, SlotManager carries each
+    slot's own (b, seq) and the executor's token accounting sums them."""
+    cfg, params, ds_a, ds_b = exec_env
+    ex = SharedBackboneExecutor(cfg, params, Z=4, per_adapter_batch=4,
+                                eval_every=2, seed=0)
+    lc_a = _lifecycle(ex, "A", ds_a, 3, width=2)
+    lc_b = _lifecycle(ex, "B", ds_b, 4, width=4)
+    ex.add_task(lc_a)
+    ex.add_task(lc_b)
+    lc_a.begin()
+    lc_b.begin()
+    widths = {ex.slots.slot_b[s] for _, s in lc_a.resident.values()}
+    assert widths == {2}
+    widths_b = {ex.slots.slot_b[s] for _, s in lc_b.resident.values()}
+    assert widths_b == {4}
+    seq = ds_a.train.shape[1] - 1
+    assert ex.slots.occupied_tokens() == (2 + 2 + 4 + 4) * seq
+    ex.run_steps(2)
+    assert ex.take_tokens() == 2 * (2 + 2 + 4 + 4) * seq
+    # per-slot token widths surface for ChunkReport observability
+    assert sorted(ex.slot_token_widths()) == sorted(
+        [2 * seq, 2 * seq, 4 * seq, 4 * seq])
 
 
 def test_cross_task_slot_tags(exec_env):

@@ -110,7 +110,7 @@ def test_memory_model_fit_recovers_linear():
     assert not m.fits(10 ** 9)
 
 
-def test_admission_greedy_decreasing_and_backfill_same_bs():
+def test_admission_greedy_decreasing_and_budget_backfill():
     mem = MemoryModel(k0=0, k1=1.0, seq_len=1, capacity=100,
                       safety_margin=1.0)
     sched = IntraTaskScheduler(mem, max_slots=8)
@@ -119,14 +119,27 @@ def test_admission_greedy_decreasing_and_backfill_same_bs():
     admitted = sched.admit_initial(queue)
     # decreasing order: all fit (8+8+8+4+2=30 <= 100)
     assert [j.per_adapter_batch for j in admitted] == [8, 8, 8, 4, 2]
-    # evict one b=8; queue has nothing of b=8 left -> mixed backfill allowed
+    # backfill is pure memory-model budget (ragged slots: no same-batch
+    # fast path): the LARGEST job that fits wins, width regardless
     sched.evict("a8")
-    queue = [PendingJob("x4", 4), PendingJob("y8", 8)]
-    j = sched.backfill(8, queue)
-    assert j.job_id == "y8"      # same-batch-size preferred
+    j = sched.backfill([PendingJob("x4", 4), PendingJob("y8", 8)])
+    assert j.job_id == "y8"
     sched.evict("c4")
-    j2 = sched.backfill(4, [PendingJob("z2", 2)])
-    assert j2.job_id == "z2"     # mixed accepted when no same-size pending
+    j2 = sched.backfill([PendingJob("z2", 2)])
+    assert j2.job_id == "z2"     # any width fits the budget => admitted
+
+
+def test_backfill_budget_rejects_over_budget_width():
+    """Ragged backfill: a pending job wider than the remaining token
+    budget is skipped in favor of one that fits — the memory model is the
+    only gate."""
+    mem = MemoryModel(k0=0, k1=1.0, seq_len=1, capacity=10,
+                      safety_margin=1.0)
+    sched = IntraTaskScheduler(mem, max_slots=8)
+    sched.admit_initial([PendingJob("a8", 8)])
+    j = sched.backfill([PendingJob("w4", 4), PendingJob("n2", 2)])
+    assert j.job_id == "n2"            # 8+4 > 10, 8+2 fits
+    assert sched.backfill([PendingJob("w4", 4)]) is None
 
 
 def test_admission_respects_memory_cap():

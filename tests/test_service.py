@@ -366,7 +366,8 @@ def test_profile_store_save_load_roundtrip(tmp_path):
     path = str(tmp_path / "profile.json")
     store = profiler.ProfileStore(ema=0.4)
     store.record(("arch-a", 2), realized_duration=30.0,
-                 estimated_duration=100.0, wall_step_time_s=0.02)
+                 estimated_duration=100.0, wall_step_time_s=0.02,
+                 wall_token_time_s=1e-4)
     store.record(("arch-a", 2), realized_duration=50.0,
                  estimated_duration=100.0)
     store.record(("arch-b", 1), realized_duration=80.0,
@@ -377,7 +378,9 @@ def test_profile_store_save_load_roundtrip(tmp_path):
     for key in (("arch-a", 2), ("arch-b", 1)):
         assert loaded.duration_scale(key) == store.duration_scale(key)
         assert loaded.wall_step_time(key) == store.wall_step_time(key)
+        assert loaded.wall_token_time(key) == store.wall_token_time(key)
         assert loaded.observations(key) == store.observations(key)
+    assert loaded.wall_token_time(("arch-a", 2)) == 1e-4
     assert profiler.ProfileStore.load_or_new(
         str(tmp_path / "absent.json")).observations(("arch-a", 2)) == 0
 
@@ -433,3 +436,77 @@ def test_service_routes_small_tasks_onto_live_replicas():
     assert fused.task_starts["small"] < excl.task_starts["small"] - 1e-9
     assert fused.makespan < excl.makespan - 1e-9
     assert set(fused.task_results) == {"host", "hog", "small"}
+
+
+# ---------------------------------------------------------------------------
+# per-tenant quotas (service hardening) + ragged routing / feedback
+# ---------------------------------------------------------------------------
+
+def test_per_tenant_quota_enforced_at_submit():
+    """A tenant may hold at most max_tasks_per_tenant non-terminal tasks;
+    submissions past the quota raise QuotaExceeded BEFORE admission, and
+    capacity frees once the tenant's tasks finish (or are cancelled)."""
+    from repro.core.service import QuotaExceeded
+
+    svc = TuningService(total_gpus=2, max_tasks_per_tenant=2)
+    mk = lambda n: sim_task(n, K=2, Z=2, total=20, warm=2,  # noqa: E731
+                            step_time=0.01, gpus=1)
+    s1, f1 = mk("a1")
+    s2, f2 = mk("a2")
+    s3, f3 = mk("a3")
+    svc.submit_spec(s1, f1, tenant="alice")
+    svc.submit_spec(s2, f2, tenant="alice")
+    assert svc.active_tasks_of("alice") == 2
+    with pytest.raises(QuotaExceeded):
+        svc.submit_spec(s3, f3, tenant="alice")
+    # another tenant is unaffected
+    sb, fb = mk("b1")
+    svc.submit_spec(sb, fb, tenant="bob")
+    # drain: alice's tasks complete, freeing her quota
+    svc.run_until_idle()
+    assert svc.active_tasks_of("alice") == 0
+    h = svc.submit_spec(s3, f3, tenant="alice")
+    assert h.result()["task"] == "a3"
+
+
+def test_quota_default_unlimited_and_cancel_frees():
+    from repro.core.service import QuotaExceeded
+
+    svc = TuningService(total_gpus=2, max_tasks_per_tenant=1)
+    s1, f1 = sim_task("c1", K=2, Z=2, total=200, warm=2, step_time=0.01,
+                      gpus=1)
+    s2, f2 = sim_task("c2", K=2, Z=2, total=20, warm=2, step_time=0.01,
+                      gpus=1)
+    h1 = svc.submit_spec(s1, f1, tenant="t")
+    with pytest.raises(QuotaExceeded):
+        svc.submit_spec(s2, f2, tenant="t")
+    h1.cancel()
+    svc.run_until_idle()
+    assert svc.status("c1").state is TaskState.CANCELLED
+    svc.submit_spec(s2, f2, tenant="t")      # freed by cancellation
+    # unlimited service never raises
+    free = TuningService(total_gpus=2)
+    for i in range(5):
+        s, f = sim_task(f"u{i}", K=2, Z=2, total=10, warm=2,
+                        step_time=0.01, gpus=1)
+        free.submit_spec(s, f, tenant="t")
+
+
+def test_feedback_records_wall_token_time(tiny_env):
+    """Real-executor completions record per-TOKEN wall time (the
+    width-calibrated profiler quantity) alongside per-step wall time."""
+    from repro.core import engine as alto
+    cfg, ds = tiny_env
+    svc = TuningService(total_gpus=2, eval_every=2)
+    task = alto.Task(model=cfg, dataset=ds, num_gpus=1, max_steps=6,
+                     num_slots=2, name="tok-fb",
+                     search_space={"lr": [1e-3], "batch_size": [2, 4]})
+    h = svc.submit(task, early_exit=EarlyExitConfig(warmup_ratio=0.25,
+                                                    select_ratio=1.0))
+    h.result()
+    key = svc.engine.profile_key(task)
+    assert svc.profile_store.wall_step_time(key) is not None
+    tok = svc.profile_store.wall_token_time(key)
+    assert tok is not None and tok > 0.0
+    # per-step wall time = per-token wall time * tokens-per-step (>1)
+    assert tok < svc.profile_store.wall_step_time(key)
