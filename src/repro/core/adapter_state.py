@@ -78,6 +78,9 @@ class SlotManager:
         self.slot_tasks: List[Optional[str]] = [None] * Z
         self.slot_b: List[int] = [0] * Z        # per-slot batch width
         self.slot_seq: List[int] = [0] * Z      # per-slot seq len
+        # host mirror of ``ranks``: the per-step rank-local dispatch and
+        # the §A.3 rank accounting must not sync a device array
+        self.slot_rank: List[int] = [0] * Z
 
     # ---- admission ---------------------------------------------------------
     def admit(self, slot: int, job_id: str, tc: TrainConfig,
@@ -101,6 +104,7 @@ class SlotManager:
         self.slot_tasks[slot] = task
         self.slot_b[slot] = b or tc.per_adapter_batch
         self.slot_seq[slot] = seq
+        self.slot_rank[slot] = rank
 
     def restore(self, slot: int, snap: SlotSnapshot, tc: TrainConfig,
                 task: Optional[str] = None) -> None:
@@ -121,6 +125,7 @@ class SlotManager:
         self.slot_tasks[slot] = task
         self.slot_b[slot] = snap.per_adapter_batch or tc.per_adapter_batch
         self.slot_seq[slot] = snap.seq_len
+        self.slot_rank[slot] = snap.rank
 
     # ---- eviction ----------------------------------------------------------
     def snapshot(self, slot: int) -> SlotSnapshot:
@@ -148,6 +153,7 @@ class SlotManager:
         self.slot_tasks[slot] = None
         self.slot_b[slot] = 0
         self.slot_seq[slot] = 0
+        self.slot_rank[slot] = 0
 
     # ---- queries -----------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -162,6 +168,21 @@ class SlotManager:
         quantity the §A.3 memory model budgets (M_hat is token-linear)."""
         return sum(self.slot_tokens(i) for i, j in
                    enumerate(self.slot_jobs) if j is not None)
+
+    def mixed_rank(self, r_max: int) -> bool:
+        """True iff some occupied slot's true rank is below r_max — the
+        executor's per-step dispatch predicate for the rank-local LoRA
+        path (a homogeneous full-rank mix has no dead rank tile to skip
+        and stays on the bitwise-identical dense/ragged path)."""
+        return any(j is not None and self.slot_rank[i] < r_max
+                   for i, j in enumerate(self.slot_jobs))
+
+    def occupied_rank_tokens(self) -> int:
+        """Total rank-weighted FLOP-tokens per fused step (sum of
+        b_z * seq_z * rank_z over occupied slots) — what the rank-aware
+        §A.3 budget charges instead of tokens * r_max."""
+        return sum(self.slot_tokens(i) * self.slot_rank[i]
+                   for i, j in enumerate(self.slot_jobs) if j is not None)
 
     def occupied(self) -> Dict[str, int]:
         return {j: i for i, j in enumerate(self.slot_jobs) if j is not None}

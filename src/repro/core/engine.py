@@ -177,7 +177,8 @@ class Engine:
             per_adapter_batch=bsz,
             slots_needed=self.pick_slots(task),
             replica_slots=int(replica),
-            mem=mem, seq_len=seq)
+            mem=mem, seq_len=seq,
+            lora_rank=self.task_rank(task))
 
     # ---- profiling + inter-task scheduling ---------------------------------
     def profile_key(self, task: Task) -> tuple:
@@ -186,20 +187,31 @@ class Engine:
         actually depend on)."""
         return (task.model_config().name, task.num_gpus)
 
+    def task_rank(self, task: Task) -> int:
+        """The task's widest TRUE adapter rank (max over its search-space
+        jobs, capped at r_max) — the rank its duration estimates and its
+        rank-aware admission charge are billed at."""
+        cfg = task.model_config()
+        return max(min(tc.lora_rank, cfg.lora.r_max)
+                   for tc in task.jobs().values())
+
     def profiled_step_time(self, task: Task) -> float:
         """Analytic per-step seconds driving the virtual timeline. Kept
         analytic on purpose: for real executors the realized virtual step
         time IS this value, so "observing" it would be circular, and wall
         step times live on a different clock (`ProfileStore.
         wall_step_time`). Duration feedback flows through the store's
-        realized/worst-case ratio instead."""
+        realized/worst-case ratio instead. Rank-aware: the LoRA term is
+        billed at the task's true rank (rank-local kernels skip the
+        padded rank tiles), not r_max."""
         cfg = task.model_config()
         jobs = task.jobs()
         bsz = max(tc.per_adapter_batch for tc in jobs.values())
         Z = self.pick_slots(task)
         ds = self._dataset(task)
         return profiler.profile_task(cfg, Z, bsz, ds.train.shape[1] - 1,
-                                     task.num_gpus).step_time_s
+                                     task.num_gpus,
+                                     rank=self.task_rank(task)).step_time_s
 
     def profile_raw(self, task: Task,
                     early_exit: EarlyExitConfig = EarlyExitConfig()

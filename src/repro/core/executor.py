@@ -106,6 +106,7 @@ class ChunkReport:
     slots_bound: int = 0
     tokens_executed: int = 0     # real (non-padding) tokens in the chunk
     slot_tokens: Tuple[int, ...] = ()   # per-slot b*seq at flush (0 = free)
+    slot_ranks: Tuple[int, ...] = ()    # per-slot TRUE rank at flush (0=free)
 
 
 @dataclasses.dataclass
@@ -201,13 +202,18 @@ class SharedBackboneExecutor:
         """Cross-task admission gate: slot headroom plus the §A.3 memory
         model over the TOKEN budget (sum of per-slot b*seq) — ragged slots
         mean same-width slot counting under-/over-charges; M_hat is
-        token-linear, so tokens are the sound budget unit."""
+        token-linear, so tokens are the sound budget unit. A rank-aware
+        model (k2 > 0) additionally budgets rank-weighted FLOP-tokens
+        (b*seq*rank per slot at each job's TRUE rank, not Z*r_max), so
+        low-rank guests pack denser than padded accounting would allow."""
         if lc.slots_bound() > self.slot_headroom():
             return False
         if self.mem is None:
             return True
         tokens = sum(x.tokens_bound() for x in self._lifecycles.values())
-        return self.mem.fits_tokens(tokens + lc.tokens_bound())
+        rtok = sum(x.rank_tokens_bound() for x in self._lifecycles.values())
+        return self.mem.fits_ranked(tokens + lc.tokens_bound(),
+                                    rtok + lc.rank_tokens_bound())
 
     # ---- slot ops (called by lifecycles) -----------------------------------
     def acquire_slot(self) -> int:
@@ -296,6 +302,12 @@ class SharedBackboneExecutor:
             batch, slot_rows, dense, tokens = self._assemble()
             if not dense:
                 batch["slot_rows"] = jnp.asarray(slot_rows)
+            if self.slots.mixed_rank(self.cfg.lora.r_max):
+                # some resident rank < r_max: route LoRA through the
+                # rank-local kernels (dead rank tiles skip the MXU); a
+                # homogeneous full-rank mix stays on the dense path,
+                # which the rank-local ops reproduce bitwise
+                batch["slot_ranks"] = self.slots.ranks
             self.slots.lora, self.slots.opt_state, metrics = self._train_step(
                 self.params, self.slots.lora, self.slots.opt_state,
                 self.slots.hp, self.slots.active, self.slots.ranks, batch)
@@ -317,6 +329,8 @@ class SharedBackboneExecutor:
         batch = {k: jnp.asarray(np.broadcast_to(
                      v[0][None], (self.Z,) + v.shape[1:]))
                  for k, v in rows.items()}
+        if self.slots.mixed_rank(self.cfg.lora.r_max):
+            batch["slot_ranks"] = self.slots.ranks
         val = np.asarray(self._eval_step(
             self.params, self.slots.lora, self.slots.active, batch))
         self._wall += time.time() - t0
@@ -339,6 +353,11 @@ class SharedBackboneExecutor:
             if self.slots.slot_jobs[i] is not None else 0
             for i in range(self.Z))
 
+    def slot_rank_vector(self) -> Tuple[int, ...]:
+        """Per-slot TRUE adapter ranks (0 = free slot) — the rank-local
+        observability twin of ``slot_token_widths``."""
+        return tuple(self.slots.slot_rank)
+
 
 # ---------------------------------------------------------------------------
 # Per-task lifecycle state machine
@@ -353,7 +372,11 @@ class TaskLifecycle:
     (lane-indexed, not physical-slot-indexed) — so its loss trajectory is
     bitwise identical whether the executor hosts it alone or co-located
     with other tasks (the loss-isolation property, tested in
-    tests/test_lora_isolation.py)."""
+    tests/test_lora_isolation.py). One caveat: on the PALLAS backend a
+    full-rank task gains a low-rank co-tenant flips from the dense to the
+    rank-local kernels, whose rank-tiled fp32 accumulation is parity-level
+    (not bitwise) vs dense — the jnp path (what the engine/service jit
+    today) masks with a full-rank-identity select and stays bitwise."""
 
     def __init__(self, ex: SharedBackboneExecutor, task_name: str,
                  jobs: Dict[str, TrainConfig], total_steps: int, *,
@@ -420,6 +443,13 @@ class TaskLifecycle:
         b = self.jobs[job_id].per_adapter_batch or self.ex.b_cap
         return max(min(b, self.ex.b_cap), 1)
 
+    def job_rank(self, job_id: str) -> int:
+        """The job's TRUE adapter rank (capped at r_max) — what the
+        rank-local kernels compute at and the rank-aware §A.3 budget
+        charges, instead of the padded r_max."""
+        return max(min(self.jobs[job_id].lora_rank, self.ex.cfg.lora.r_max),
+                   1)
+
     def lane_batch_dict(self, job_id: str) -> Dict[str, np.ndarray]:
         """One fused-step draw for a resident job: its lane's stream
         advanced by its own width (task-local, co-tenant independent)."""
@@ -438,6 +468,7 @@ class TaskLifecycle:
                           b=self.job_width(job_id), seq=self.seq_len)
         self.resident[job_id] = (lane, slot)
         self._policy.resident[job_id] = self.job_width(job_id)
+        self._policy.resident_ranks[job_id] = self.job_rank(job_id)
 
     def _evict_job(self, job_id: str) -> None:
         lane, slot = self.resident.pop(job_id)
@@ -490,6 +521,21 @@ class TaskLifecycle:
         cross-task admission gate budgets against the §A.3 memory model
         instead of same-width slot counts."""
         return self.slots_bound() * self.width_bound() * self.seq_len
+
+    def rank_bound(self) -> int:
+        """Upper bound on the highest TRUE rank this task will still
+        train (max over non-exited jobs; shrinks as high-rank jobs
+        exit)."""
+        alive = [self.job_rank(j) for j in self.jobs
+                 if self.monitors[j].exited is None]
+        return max(alive, default=0)
+
+    def rank_tokens_bound(self) -> int:
+        """Monotone upper bound on this task's per-step rank-weighted
+        FLOP-token footprint (tokens_bound x highest remaining rank) —
+        the rank-aware §A.3 budget unit. Charging true ranks instead of
+        r_max is what lets mixed-rank guests pack denser."""
+        return self.tokens_bound() * self.rank_bound()
 
     def remaining_steps_bound(self) -> int:
         """Upper bound on executor steps left in this lifecycle, assuming
@@ -596,9 +642,10 @@ class TaskLifecycle:
         self._queue = list(kept)
         # §A.3 greedy decreasing-batch-size initial admission (stable sort:
         # a homogeneous-batch queue keeps its val-loss ranking)
-        pending = [PendingJob(j, self.job_width(j)) for j in self._queue]
+        pending = [PendingJob(j, self.job_width(j), self.job_rank(j))
+                   for j in self._queue]
         for pj in self._policy.admit_initial(pending):
-            del self._policy.resident[pj.job_id]     # _admit_job re-adds
+            self._policy.evict(pj.job_id)            # _admit_job re-adds
             self._queue.remove(pj.job_id)
             self._admit_job(pj.job_id)
         self._settle_continue()
@@ -610,11 +657,12 @@ class TaskLifecycle:
         that fits the token budget co-trains in the fused step)."""
         if not self._queue or not self._free_lanes:
             return
-        pending = [PendingJob(j, self.job_width(j)) for j in self._queue]
+        pending = [PendingJob(j, self.job_width(j), self.job_rank(j))
+                   for j in self._queue]
         pick = self._policy.backfill(pending)
         if pick is None:
             return
-        del self._policy.resident[pick.job_id]       # _admit_job re-adds
+        self._policy.evict(pick.job_id)              # _admit_job re-adds
         self._queue.remove(pick.job_id)
         self._admit_job(pick.job_id)
 
@@ -834,4 +882,5 @@ class BatchedExecutor:
             wall_time_s=self.backbone.take_wall(), task=lc.task_name,
             slots_in_use=lc.slots_in_use(), slots_bound=lc.slots_bound(),
             tokens_executed=self.backbone.take_tokens(),
-            slot_tokens=self.backbone.slot_token_widths())
+            slot_tokens=self.backbone.slot_token_widths(),
+            slot_ranks=self.backbone.slot_rank_vector())

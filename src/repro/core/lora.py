@@ -9,6 +9,10 @@ Per-slot true ranks are expressed by zeroing columns/rows beyond ``r_i``
 (``rank_mask``); the padded region provably contributes zero to the output
 and receives zero gradient (B's padded rows are zero ⇒ dS pads are zero ⇒
 dA pads are zero), and the optimizer additionally re-masks after each update.
+Under a ``slot_ranks`` binding the ranks become a COMPUTE dimension instead:
+the rank-local grouped-GEMM kernels skip dead rank tiles outright and the
+re-mask is provably redundant (the padded region's gradient is exactly zero
+by construction, not by cancellation).
 
 ``lora_delta`` dispatches between the pure-jnp path (the mathematical
 reference; used under pjit/GSPMD where XLA fuses it) and the Pallas grouped
@@ -91,6 +95,48 @@ def _apply_row_mask(x: jnp.ndarray, rows: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Rank-local slot ranks (per-slot true-rank compute)
+# ---------------------------------------------------------------------------
+#
+# Rank heterogeneity was historically pure zero-masking: every slot padded
+# to r_max, so a rank-4 adapter co-located with a rank-64 one paid 16x its
+# true FLOPs in every grouped GEMM. ``slot_ranks`` binds the per-slot TRUE
+# ranks for the duration of a trace (the executor's fused step sets it
+# from SlotManager state whenever a resident slot's rank is below r_max);
+# every ``lora_delta`` inside the trace then confines slot z's compute to
+# its first ranks[z] rank rows/columns — the jnp path by masking A/B (so
+# correctness never leans on the padded region being zero), the Pallas
+# path via the rank-local grouped-GEMM kernels whose dead rank tiles skip
+# the MXU outright. Composes with ``ragged_rows``.
+
+@contextlib.contextmanager
+def slot_ranks(ranks: Optional[jnp.ndarray]):
+    """Bind per-slot true ranks ([Z] int32) for lora_delta calls traced
+    under this context."""
+    prev = getattr(_backend, "ranks", None)
+    _backend.ranks = ranks
+    try:
+        yield
+    finally:
+        _backend.ranks = prev
+
+
+def get_slot_ranks() -> Optional[jnp.ndarray]:
+    return getattr(_backend, "ranks", None)
+
+
+def _apply_rank_masks(A: jnp.ndarray, B: jnp.ndarray, ranks: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Zero A's columns / B's rows at indices >= ranks[z]. For a
+    full-rank slot the select is the identity, which keeps fused-vs-solo
+    loss histories bitwise equal across the bind/no-bind dispatch."""
+    keep = jnp.arange(A.shape[-1])[None, :] < ranks[:, None]     # [Z, r]
+    Am = jnp.where(keep[:, None, :], A, jnp.zeros((), A.dtype))
+    Bm = jnp.where(keep[:, :, None], B, jnp.zeros((), B.dtype))
+    return Am, Bm
+
+
+# ---------------------------------------------------------------------------
 # Application
 # ---------------------------------------------------------------------------
 
@@ -104,16 +150,23 @@ def lora_delta(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
     """
     name = get_backend()
     rows = get_ragged_rows()
+    ranks = get_slot_ranks()
     if name == "jnp":
         if rows is not None:
             x = _apply_row_mask(x, rows)
+        if ranks is not None:
+            A, B = _apply_rank_masks(A, B, ranks)
         return _lora_delta_jnp(x, A, B, scale)
     from repro.kernels.grouped_lora import ops as kops
     lead = x.shape[:-1]
     Z = x.shape[0]
     xt = x.reshape(Z, -1, x.shape[-1])
     interpret = (name == "pallas_interpret")
-    if rows is not None:
+    if ranks is not None:
+        y = kops.ranklocal_grouped_lora(
+            xt, A, B, _scale_vec(scale, Z, x.dtype), ranks, rows=rows,
+            interpret=interpret)
+    elif rows is not None:
         y = kops.ragged_grouped_lora(xt, A, B, _scale_vec(scale, Z, x.dtype),
                                      rows, interpret=interpret)
     else:

@@ -30,22 +30,30 @@ def make_train_step(cfg: ModelConfig, *, loss_kind: str = "sft",
     ``batch`` may carry ``slot_rows`` ([Z] int32, valid token rows per
     slot in flattened b*seq units): ragged slot widths — LoRA deltas are
     then computed over only each slot's own rows (the ragged grouped-GEMM
-    path; zero delta and zero gradient on padding rows)."""
+    path; zero delta and zero gradient on padding rows). It may also carry
+    ``slot_ranks`` ([Z] int32, per-slot TRUE adapter ranks from the
+    executor's SlotManager): LoRA deltas then confine each slot to its
+    first ranks[z] rank rows/columns (the rank-local grouped-GEMM path —
+    dead rank tiles skip the MXU, the padded rank region gets exactly
+    zero gradient, and the post-step rank re-mask is redundant)."""
     loss_fn_inner = {"sft": LS.sft_loss, "dpo": LS.dpo_loss}[loss_kind]
 
     def train_step(params, lora, opt_state, hp: adamw.SlotHParams,
                    active: jnp.ndarray, ranks: jnp.ndarray, batch: Dict):
         batch = dict(batch)
         slot_rows = batch.pop("slot_rows", None)
+        slot_ranks = batch.pop("slot_ranks", None)
 
         def loss_fn(lora_):
             total, per_slot = loss_fn_inner(cfg, params, lora_, batch,
                                             active, remat=remat)
             return total, per_slot
 
-        ctx = (LORA.ragged_rows(slot_rows) if slot_rows is not None
-               else contextlib.nullcontext())
-        with ctx:
+        with contextlib.ExitStack() as ctx:
+            if slot_rows is not None:
+                ctx.enter_context(LORA.ragged_rows(slot_rows))
+            if slot_ranks is not None:
+                ctx.enter_context(LORA.slot_ranks(slot_ranks))
             (_, per_slot), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(lora)
         norms = adamw.per_slot_global_norm(grads)
@@ -61,12 +69,20 @@ def make_train_step(cfg: ModelConfig, *, loss_kind: str = "sft",
 
 
 def make_eval_step(cfg: ModelConfig, *, loss_kind: str = "sft") -> Callable:
-    """eval_step(params, lora, active, batch) -> per-slot val loss [Z]."""
+    """eval_step(params, lora, active, batch) -> per-slot val loss [Z].
+
+    ``batch`` may carry ``slot_ranks`` like the train step (eval rides the
+    same rank-local LoRA path as training on mixed-rank replicas)."""
     loss_fn_inner = {"sft": LS.sft_loss, "dpo": LS.dpo_loss}[loss_kind]
 
     def eval_step(params, lora, active, batch):
-        _, per_slot = loss_fn_inner(cfg, params, lora, batch, active,
-                                    remat=False)
+        batch = dict(batch)
+        slot_ranks = batch.pop("slot_ranks", None)
+        ctx = (LORA.slot_ranks(slot_ranks) if slot_ranks is not None
+               else contextlib.nullcontext())
+        with ctx:
+            _, per_slot = loss_fn_inner(cfg, params, lora, batch, active,
+                                        remat=False)
         return per_slot
 
     return eval_step

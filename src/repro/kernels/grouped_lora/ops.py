@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.kernels.grouped_lora import grouped_lora as K
 from repro.kernels.grouped_lora import ragged as R
+from repro.kernels.grouped_lora import ranklocal as RL
 
 _LANE = 128   # TPU lane width; last-dim tile multiple
 _SUB = 8      # sublane multiple
@@ -38,6 +39,10 @@ def _pad_axis(x: jnp.ndarray, axis: int, to: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
+# cached: the plan is pure shape arithmetic, but every trace of every
+# variant recomputes it (fwd + 4-kernel bwd per call site) — repeated
+# same-shape calls (one per LoRA target per layer per step) hit the cache
+@functools.lru_cache(maxsize=None)
 def _tile_plan(T: int, din: int, dout: int, r: int
                ) -> Tuple[int, int, int, int]:
     Tp = _ceil_to(T, min(K.BM, _ceil_to(T, _SUB)))
@@ -52,30 +57,43 @@ def _tile_plan(T: int, din: int, dout: int, r: int
 # core padded implementations (not differentiable; used by fwd/bwd rules)
 # ---------------------------------------------------------------------------
 
-def _fwd_impl(x, A, B, scale, y_base, interpret):
-    Z, T, din = x.shape
+def _pad_fwd(x, A, B, y_base):
+    """Pad (x, A, B, y_base) to the cached tile plan — shared by the
+    dense/ragged/rank-local forward impls (they differ only in which
+    kernel set consumes the padded operands)."""
+    T, din = x.shape[1], x.shape[2]
     r, dout = B.shape[1], B.shape[2]
     Tp, dinp, doutp, rp = _tile_plan(T, din, dout, r)
     xp = _pad_axis(_pad_axis(x, 1, Tp), 2, dinp)
     Ap = _pad_axis(_pad_axis(A, 1, dinp), 2, rp).astype(x.dtype)
     Bp = _pad_axis(_pad_axis(B, 1, rp), 2, doutp).astype(x.dtype)
-    s = K.xa(xp, Ap, interpret=interpret)
     yb = None
     if y_base is not None:
         yb = _pad_axis(_pad_axis(y_base, 1, Tp), 2, doutp)
+    return xp, Ap, Bp, yb
+
+
+def _pad_bwd(x, A, B, s, dy):
+    """Pad the backward operands (residual s is padded on r already)."""
+    xp, Ap, Bp, _ = _pad_fwd(x, A, B, None)
+    sp = _pad_axis(s, 1, xp.shape[1])
+    dyp = _pad_axis(_pad_axis(dy, 1, xp.shape[1]), 2,
+                    Bp.shape[2]).astype(x.dtype)
+    return xp, Ap, Bp, sp, dyp
+
+
+def _fwd_impl(x, A, B, scale, y_base, interpret):
+    T, dout = x.shape[1], B.shape[2]
+    xp, Ap, Bp, yb = _pad_fwd(x, A, B, y_base)
+    s = K.xa(xp, Ap, interpret=interpret)
     y = K.sb_add(s, Bp, scale, yb, interpret=interpret)
     return y[:, :T, :dout], s[:, :T, :]      # s padded on r only
 
 
 def _bwd_impl(x, A, B, scale, s, dy, interpret):
-    Z, T, din = x.shape
+    T, din = x.shape[1], x.shape[2]
     r, dout = B.shape[1], B.shape[2]
-    Tp, dinp, doutp, rp = _tile_plan(T, din, dout, r)
-    xp = _pad_axis(_pad_axis(x, 1, Tp), 2, dinp)
-    Ap = _pad_axis(_pad_axis(A, 1, dinp), 2, rp).astype(x.dtype)
-    Bp = _pad_axis(_pad_axis(B, 1, rp), 2, doutp).astype(x.dtype)
-    sp = _pad_axis(s, 1, Tp)
-    dyp = _pad_axis(_pad_axis(dy, 1, Tp), 2, doutp).astype(x.dtype)
+    xp, Ap, Bp, sp, dyp = _pad_bwd(x, A, B, s, dy)
     ds_ = K.ds(dyp, Bp, scale, interpret=interpret)
     dx_ = K.dx(ds_, Ap, interpret=interpret)
     dA_ = K.da(xp, ds_, interpret=interpret)
@@ -145,29 +163,17 @@ def grouped_lora(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def _ragged_fwd_impl(x, A, B, scale, rows, y_base, interpret):
-    Z, T, din = x.shape
-    r, dout = B.shape[1], B.shape[2]
-    Tp, dinp, doutp, rp = _tile_plan(T, din, dout, r)
-    xp = _pad_axis(_pad_axis(x, 1, Tp), 2, dinp)
-    Ap = _pad_axis(_pad_axis(A, 1, dinp), 2, rp).astype(x.dtype)
-    Bp = _pad_axis(_pad_axis(B, 1, rp), 2, doutp).astype(x.dtype)
+    T, dout = x.shape[1], B.shape[2]
+    xp, Ap, Bp, yb = _pad_fwd(x, A, B, y_base)
     s = R.xa(xp, Ap, rows, interpret=interpret)
-    yb = None
-    if y_base is not None:
-        yb = _pad_axis(_pad_axis(y_base, 1, Tp), 2, doutp)
     y = R.sb_add(s, Bp, scale, rows, yb, interpret=interpret)
     return y[:, :T, :dout], s[:, :T, :]
 
 
 def _ragged_bwd_impl(x, A, B, scale, rows, s, dy, interpret):
-    Z, T, din = x.shape
+    T, din = x.shape[1], x.shape[2]
     r, dout = B.shape[1], B.shape[2]
-    Tp, dinp, doutp, rp = _tile_plan(T, din, dout, r)
-    xp = _pad_axis(_pad_axis(x, 1, Tp), 2, dinp)
-    Ap = _pad_axis(_pad_axis(A, 1, dinp), 2, rp).astype(x.dtype)
-    Bp = _pad_axis(_pad_axis(B, 1, rp), 2, doutp).astype(x.dtype)
-    sp = _pad_axis(s, 1, Tp)
-    dyp = _pad_axis(_pad_axis(dy, 1, Tp), 2, doutp).astype(x.dtype)
+    xp, Ap, Bp, sp, dyp = _pad_bwd(x, A, B, s, dy)
     ds_ = R.ds(dyp, Bp, scale, rows, interpret=interpret)
     dx_ = R.dx(ds_, Ap, rows, interpret=interpret)
     dA_ = R.da(xp, ds_, rows, interpret=interpret)
@@ -238,3 +244,113 @@ def ragged_grouped_lora(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
     if y_base is not None:
         return fn(x, A, B, scale, rows, y_base)
     return fn(x, A, B, scale, rows)
+
+
+# ---------------------------------------------------------------------------
+# rank-local variant: per-slot true ranks (composes with ragged rows)
+# ---------------------------------------------------------------------------
+
+def _ranklocal_fwd_impl(x, A, B, scale, ranks, rows, y_base, interpret):
+    T, dout = x.shape[1], B.shape[2]
+    xp, Ap, Bp, yb = _pad_fwd(x, A, B, y_base)
+    s = RL.xa(xp, Ap, rows, ranks, interpret=interpret)
+    y = RL.sb_add(s, Bp, scale, rows, ranks, yb, interpret=interpret)
+    return y[:, :T, :dout], s[:, :T, :]
+
+
+def _ranklocal_bwd_impl(x, A, B, scale, ranks, rows, s, dy, interpret):
+    T, din = x.shape[1], x.shape[2]
+    r, dout = B.shape[1], B.shape[2]
+    xp, Ap, Bp, sp, dyp = _pad_bwd(x, A, B, s, dy)
+    ds_ = RL.ds(dyp, Bp, scale, rows, ranks, interpret=interpret)
+    dx_ = RL.dx(ds_, Ap, rows, ranks, interpret=interpret)
+    dA_ = RL.da(xp, ds_, rows, ranks, interpret=interpret)
+    dB_ = RL.db(sp, dyp, scale, rows, ranks, interpret=interpret)
+    return (dx_[:, :T, :din], dA_[:, :din, :r], dB_[:, :r, :dout])
+
+
+@functools.lru_cache(maxsize=None)
+def _make_ranklocal_fn(interpret: bool, has_base: bool):
+    if has_base:
+        @jax.custom_vjp
+        def f(x, A, B, scale, ranks, rows, y_base):
+            y, _ = _ranklocal_fwd_impl(x, A, B, scale, ranks, rows, y_base,
+                                       interpret)
+            return y
+
+        def f_fwd(x, A, B, scale, ranks, rows, y_base):
+            y, s = _ranklocal_fwd_impl(x, A, B, scale, ranks, rows, y_base,
+                                       interpret)
+            return y, (x, A, B, scale, ranks, rows, s)
+
+        def f_bwd(res, dy):
+            x, A, B, scale, ranks, rows, s = res
+            dx_, dA_, dB_ = _ranklocal_bwd_impl(x, A, B, scale, ranks, rows,
+                                                s, dy, interpret)
+            return (dx_, dA_, dB_, jnp.zeros_like(scale),
+                    _rows_cotangent(ranks), _rows_cotangent(rows), dy)
+
+        f.defvjp(f_fwd, f_bwd)
+        return f
+
+    @jax.custom_vjp
+    def g(x, A, B, scale, ranks, rows):
+        y, _ = _ranklocal_fwd_impl(x, A, B, scale, ranks, rows, None,
+                                   interpret)
+        return y
+
+    def g_fwd(x, A, B, scale, ranks, rows):
+        y, s = _ranklocal_fwd_impl(x, A, B, scale, ranks, rows, None,
+                                   interpret)
+        return y, (x, A, B, scale, ranks, rows, s)
+
+    def g_bwd(res, dy):
+        x, A, B, scale, ranks, rows, s = res
+        dx_, dA_, dB_ = _ranklocal_bwd_impl(x, A, B, scale, ranks, rows,
+                                            s, dy, interpret)
+        return (dx_, dA_, dB_, jnp.zeros_like(scale),
+                _rows_cotangent(ranks), _rows_cotangent(rows))
+
+    g.defvjp(g_fwd, g_bwd)
+    return g
+
+
+def _concrete_min(v) -> Optional[int]:
+    """min(v) when v is host-known (numpy / concrete jax array), else
+    None (tracer: the dispatch decision was made outside the trace)."""
+    try:
+        return int(jnp.min(jnp.asarray(v)))
+    except jax.errors.ConcretizationTypeError:
+        return None
+
+
+def ranklocal_grouped_lora(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+                           scale: jnp.ndarray, ranks: jnp.ndarray,
+                           rows: Optional[jnp.ndarray] = None,
+                           y_base: Optional[jnp.ndarray] = None, *,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Differentiable RANK-LOCAL grouped LoRA: slot z applies only the
+    first ``ranks[z]`` rank columns/rows of its adapter (and, with
+    ``rows``, only its first rows[z] token rows). Dead rank tiles skip
+    the MXU; the padded rank region gets a zero output and exactly zero
+    gradient, so no post-step re-mask is needed on this path.
+
+    x: [Z,T,din]; A: [Z,din,r]; B: [Z,r,dout]; scale/ranks/rows: [Z].
+    Concrete ``ranks`` >= r everywhere dispatch to the dense/ragged path
+    (identical tiling => bitwise-equal; rank-tiled accumulation would
+    only regroup the same fp32 sums), mirroring the executor's per-step
+    dense-vs-ragged dispatch.
+    """
+    r = A.shape[2]
+    cmin = _concrete_min(ranks)
+    if cmin is not None and cmin >= r:
+        if rows is None:
+            return grouped_lora(x, A, B, scale, y_base, interpret=interpret)
+        return ragged_grouped_lora(x, A, B, scale, rows, y_base,
+                                   interpret=interpret)
+    if rows is None:
+        rows = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    fn = _make_ranklocal_fn(bool(interpret), y_base is not None)
+    if y_base is not None:
+        return fn(x, A, B, scale, ranks, rows, y_base)
+    return fn(x, A, B, scale, ranks, rows)

@@ -57,6 +57,46 @@ def ragged_lora_bwd_ref(x, A, B, scale, rows, s, dy
                                 _rows_mask(s, rows), _rows_mask(dy, rows))
 
 
+def _ranks_mask_A(A: jnp.ndarray, ranks: jnp.ndarray) -> jnp.ndarray:
+    """[Z,din,r] -> zero columns rr >= ranks[z] of slot z's A."""
+    keep = jnp.arange(A.shape[2])[None, :] < ranks[:, None]    # [Z, r]
+    return jnp.where(keep[:, None, :], A, jnp.zeros((), A.dtype))
+
+
+def _ranks_mask_B(B: jnp.ndarray, ranks: jnp.ndarray) -> jnp.ndarray:
+    """[Z,r,dout] -> zero rows rr >= ranks[z] of slot z's B."""
+    keep = jnp.arange(B.shape[1])[None, :] < ranks[:, None]    # [Z, r]
+    return jnp.where(keep[:, :, None], B, jnp.zeros((), B.dtype))
+
+
+def ranklocal_lora_ref(x, A, B, scale, ranks, rows=None,
+                       y_base=None) -> jnp.ndarray:
+    """Rank-local oracle: slot z uses only its first ranks[z] rank columns
+    of A / rank rows of B (and, when ``rows`` is given, only its first
+    rows[z] token rows). The padded rank region contributes nothing even
+    when it holds garbage."""
+    if rows is not None:
+        x = _rows_mask(x, rows)
+    return grouped_lora_ref(x, _ranks_mask_A(A, ranks),
+                            _ranks_mask_B(B, ranks), scale, y_base)
+
+
+def ranklocal_lora_bwd_ref(x, A, B, scale, ranks, rows, s, dy
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Rank-local backward oracle: the padded rank region of dA/dB is
+    exactly zero (dead rank tiles are skipped, never accumulated) and
+    padded token rows receive zero dX."""
+    if rows is not None:
+        x = _rows_mask(x, rows)
+        s = _rows_mask(s, rows)
+        dy = _rows_mask(dy, rows)
+    Am, Bm = _ranks_mask_A(A, ranks), _ranks_mask_B(B, ranks)
+    dx, dA, dB = grouped_lora_bwd_ref(x, Am, Bm, scale,
+                                      _ranks_mask_A(s, ranks), dy)
+    # dA cols / dB rows beyond the true rank never accumulate
+    return dx, _ranks_mask_A(dA, ranks), _ranks_mask_B(dB, ranks)
+
+
 def grouped_lora_bwd_ref(x, A, B, scale, s, dy
                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """(dX, dA, dB) for Y = scale * (X A) B [+ Y_base].

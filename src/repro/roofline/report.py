@@ -9,10 +9,38 @@ import argparse
 import os
 from typing import Dict, List
 
-from repro.roofline.analysis import HEADER, Roofline, load_all
+from repro.roofline.analysis import (HEADER, Roofline, load_all,
+                                     ranklocal_savings)
 
 DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "experiments", "dryrun")
+
+# the rank-sweep tuning mix the rank-local bench trains (r = 4..64)
+RANK_SWEEP = (4, 8, 16, 32, 64)
+
+
+def print_ranklocal(archs: List[str], tokens_per_slot: int = 4096,
+                    md: bool = False) -> None:
+    """Rank-local FLOP/byte savings per config: the adapter-GEMM work the
+    dead rank-tile skip reclaims vs r_max-padded execution on the
+    rank-sweep mix, and the arithmetic-intensity shift that comes with
+    it."""
+    from repro.configs.registry import get_arch
+    rows = [ranklocal_savings(get_arch(a), RANK_SWEEP, tokens_per_slot)
+            for a in archs]
+    print("\nRank-local adapter savings (true-rank vs r_max-padded, "
+          f"ranks={list(RANK_SWEEP)}, {tokens_per_slot} tok/slot):")
+    if md:
+        print("| arch | r_max | flops saved | bytes saved | AI padded | "
+              "AI true |")
+        print("|---|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r.arch} | {r.r_max} | x{r.flop_saving:.2f} | "
+                  f"x{r.byte_saving:.2f} | {r.intensity_padded:.1f} | "
+                  f"{r.intensity_true:.1f} |")
+    else:
+        for r in rows:
+            print("  " + r.row())
 
 
 def pick_hillclimb(rows: List[Roofline]) -> Dict[str, Roofline]:
@@ -70,6 +98,7 @@ def main() -> None:
     for why, r in picks.items():
         print(f"  {why:24s} -> {r.arch} x {r.shape} "
               f"(dominant={r.dominant}, MFU<={r.mfu_bound:.3f})")
+    print_ranklocal(sorted({r.arch for r in rows}), md=args.md)
 
 
 if __name__ == "__main__":

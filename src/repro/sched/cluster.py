@@ -103,6 +103,7 @@ class ColocationSpec:
     replica_slots: int
     mem: Optional[MemoryModel] = None
     seq_len: Optional[int] = None      # None => memory model's fit seq
+    lora_rank: Optional[int] = None    # TRUE rank; None => charged r_max
 
 
 class TaskDriver:
@@ -191,7 +192,8 @@ class ColocatedReplicaDriver(TaskDriver):
         have different widths (ragged slots)."""
         return [ColoRequest(n, self._bound_of(h),
                             h.colo.per_adapter_batch if h.colo else 0,
-                            h.colo.seq_len if h.colo else None)
+                            h.colo.seq_len if h.colo else None,
+                            h.colo.lora_rank if h.colo else None)
                 for n, h in sorted(self._subs.items()) if not h.done]
 
     # ---- membership --------------------------------------------------------
@@ -829,7 +831,8 @@ class ElasticClusterRuntime:
                 w.resident_requests(),
                 [ColoRequest(n, self._by_name[n].colo.slots_needed,
                              self._by_name[n].colo.per_adapter_batch,
-                             self._by_name[n].colo.seq_len)
+                             self._by_name[n].colo.seq_len,
+                             self._by_name[n].colo.lora_rank)
                  for n in ok],
                 cap.replica_slots, cap.mem)
             for n in admitted:
@@ -1142,17 +1145,20 @@ def sim_colo_spec(fuse_key: Tuple, *, K: int, Z: int,
                   per_adapter_batch: int = 4,
                   replica_slots: Optional[int] = None,
                   mem: Optional[MemoryModel] = None,
-                  seq_len: Optional[int] = None) -> ColocationSpec:
+                  seq_len: Optional[int] = None,
+                  lora_rank: Optional[int] = None) -> ColocationSpec:
     """ColocationSpec for a simulated task: it needs at most min(Z, K)
     concurrent slots, and a replica it hosts exposes ``replica_slots``
     physical slots (defaults to its own Z). ``fuse_key`` is the caller's
     choice — ragged admission only needs (arch, gpus, loss)-level keys;
-    width enters through per_adapter_batch/seq_len token accounting."""
+    width enters through per_adapter_batch/seq_len token accounting and
+    ``lora_rank`` (the task's true adapter rank) through the rank-aware
+    FLOP-token budget; ``lora_rank=None`` is charged at r_max."""
     return ColocationSpec(
         fuse_key=fuse_key, per_adapter_batch=per_adapter_batch,
         slots_needed=min(Z, K),
         replica_slots=replica_slots if replica_slots is not None else Z,
-        mem=mem, seq_len=seq_len)
+        mem=mem, seq_len=seq_len, lora_rank=lora_rank)
 
 
 # --------------------------------------------------------------------------

@@ -20,6 +20,14 @@ budget is the token-linear memory model, never same-width slot counting.
 Cross-task admission (``admit_cross_task``) budgets the same way over
 TOKENS (slots * b * seq), letting tasks with different batch sizes and
 seq lens share one frozen-backbone replica.
+
+Rank-aware extension (rank-local grouped GEMM): adapters are also RANK-
+heterogeneous, and with the rank-local kernels a slot's compute/memory
+footprint scales with its TRUE rank, not the padded r_max. A fitted
+``k2`` term budgets rank-weighted FLOP-tokens (b * seq * rank per slot);
+requests that don't know their rank are charged r_max — the historical
+Z*r_max padded accounting, now the pessimistic fallback rather than the
+only option.
 """
 from __future__ import annotations
 
@@ -36,6 +44,20 @@ class MemoryModel:
     seq_len: int
     capacity: float           # device HBM bytes
     safety_margin: float = 0.9
+    # rank-aware extension: the LoRA working set (S/dS activations, adapter
+    # + optimizer state) scales with tokens x TRUE rank, not tokens x r_max.
+    # k2 = bytes per rank-weighted FLOP-token (b*seq*rank per slot);
+    # r_max = the rank a request WITHOUT true-rank information is charged
+    # (the historical padded accounting — every slot billed as if r_max).
+    k2: float = 0.0
+    r_max: int = 0
+
+    def __post_init__(self):
+        # a rank-aware model must know what to bill rank-unknown requests:
+        # without r_max they would be charged rank 1 (64x UNDER-billed for
+        # a padded r_max=64 request) instead of the pessimistic fallback
+        assert self.k2 <= 0 or self.r_max > 0, \
+            "rank-aware MemoryModel (k2 > 0) requires r_max"
 
     def predict(self, total_batch: int) -> float:
         return self.k0 + self.k1 * total_batch * self.seq_len
@@ -60,6 +82,25 @@ class MemoryModel:
         return self.predict_tokens(tokens) <= (self.capacity
                                                * self.safety_margin)
 
+    # ---- rank-weighted interface (rank-local compute) ----------------------
+    # With the rank-local grouped-GEMM path a slot's LoRA footprint is
+    # proportional to b*seq*rank at its TRUE rank; ``rank_tokens`` is the
+    # sum of that quantity over slots. k2 == 0 recovers the rank-neutral
+    # token model exactly (every existing caller is unchanged).
+    def predict_ranked(self, tokens: float, rank_tokens: float) -> float:
+        return self.k0 + self.k1 * tokens + self.k2 * rank_tokens
+
+    def fits_ranked(self, tokens: float, rank_tokens: float) -> bool:
+        return self.predict_ranked(tokens, rank_tokens) <= (
+            self.capacity * self.safety_margin)
+
+    def charged_rank(self, lora_rank: Optional[int]) -> int:
+        """The rank a request is billed at: its true rank when known,
+        else the padded r_max (rank-masked accounting)."""
+        if lora_rank:
+            return lora_rank
+        return self.r_max if self.r_max else 1
+
 
 def fit_memory_model(points: Sequence[Tuple[int, float]], seq_len: int,
                      capacity: float, safety_margin: float = 0.9
@@ -78,6 +119,7 @@ def fit_memory_model(points: Sequence[Tuple[int, float]], seq_len: int,
 class PendingJob:
     job_id: str
     per_adapter_batch: int
+    lora_rank: int = 0        # TRUE rank; 0 = unknown (charged at r_max)
 
 
 class IntraTaskScheduler:
@@ -86,23 +128,41 @@ class IntraTaskScheduler:
     def __init__(self, mem: MemoryModel, max_slots: int):
         self.mem = mem
         self.max_slots = max_slots
-        self.resident: Dict[str, int] = {}     # job_id -> b
+        self.resident: Dict[str, int] = {}        # job_id -> b
+        self.resident_ranks: Dict[str, int] = {}  # job_id -> true rank
 
     @property
     def total_batch(self) -> int:
         return sum(self.resident.values())
 
-    def can_admit(self, b: int) -> bool:
-        return (len(self.resident) < self.max_slots
-                and self.mem.fits(self.total_batch + b))
+    def _rank_tokens(self) -> float:
+        """Resident rank-weighted FLOP-tokens (b * seq * charged rank)."""
+        return sum(b * self.mem.seq_len
+                   * self.mem.charged_rank(self.resident_ranks.get(j))
+                   for j, b in self.resident.items())
+
+    def can_admit(self, b: int, rank: int = 0) -> bool:
+        if len(self.resident) >= self.max_slots:
+            return False
+        if self.mem.k2 <= 0:
+            return self.mem.fits(self.total_batch + b)
+        rt = self._rank_tokens() + (b * self.mem.seq_len
+                                    * self.mem.charged_rank(rank))
+        return self.mem.fits_ranked((self.total_batch + b) * self.mem.seq_len,
+                                    rt)
+
+    def _admit(self, job: PendingJob) -> None:
+        self.resident[job.job_id] = job.per_adapter_batch
+        if job.lora_rank:
+            self.resident_ranks[job.job_id] = job.lora_rank
 
     def admit_initial(self, queue: List[PendingJob]) -> List[PendingJob]:
         """Greedy decreasing-batch-size admission (paper §A.3). Returns the
         admitted jobs, removing them from ``queue`` in place."""
         admitted: List[PendingJob] = []
         for job in sorted(queue, key=lambda j: -j.per_adapter_batch):
-            if self.can_admit(job.per_adapter_batch):
-                self.resident[job.job_id] = job.per_adapter_batch
+            if self.can_admit(job.per_adapter_batch, job.lora_rank):
+                self._admit(job)
                 admitted.append(job)
         for j in admitted:
             queue.remove(j)
@@ -110,6 +170,7 @@ class IntraTaskScheduler:
 
     def evict(self, job_id: str) -> None:
         del self.resident[job_id]
+        self.resident_ranks.pop(job_id, None)
 
     def backfill(self, queue: List[PendingJob]) -> Optional[PendingJob]:
         """Admit the largest pending job the memory-model budget accepts.
@@ -117,11 +178,12 @@ class IntraTaskScheduler:
         The historical same-batch-size fast path is gone: slots are ragged
         (the fused step packs per-slot row counts through the ragged
         grouped-GEMM path), so homogeneous packing buys nothing — the only
-        constraint is the token-linear §A.3 budget."""
+        constraint is the (rank-aware) §A.3 budget, which charges each
+        job's TRUE rank when it is known instead of the padded r_max."""
         for j in sorted(queue, key=lambda j: -j.per_adapter_batch):
-            if self.can_admit(j.per_adapter_batch):
+            if self.can_admit(j.per_adapter_batch, j.lora_rank):
                 queue.remove(j)
-                self.resident[j.job_id] = j.per_adapter_batch
+                self._admit(j)
                 return j
         return None
 
@@ -138,17 +200,25 @@ ExecutorSlots = IntraTaskScheduler
 @dataclasses.dataclass(frozen=True)
 class ColoRequest:
     """One task's demand on a shared replica: its concurrent-slot upper
-    bound, per-adapter batch size, and seq len. ``seq_len=None`` falls
-    back to the memory model's fit-time seq len (homogeneous-seq legacy
-    callers); M_hat budgets slots * b * seq TOKENS either way."""
+    bound, per-adapter batch size, seq len, and TRUE adapter rank.
+    ``seq_len=None`` falls back to the memory model's fit-time seq len
+    (homogeneous-seq legacy callers); ``lora_rank=None`` means the rank is
+    unknown and the task is charged at the model's padded r_max — the
+    rank-masked accounting the rank-local path replaces. M_hat budgets
+    slots * b * seq TOKENS plus k2 * rank-weighted FLOP-tokens."""
     name: str
     slots: int
     per_adapter_batch: int
     seq_len: Optional[int] = None
+    lora_rank: Optional[int] = None
 
     def tokens(self, default_seq: int = 1) -> int:
         seq = self.seq_len if self.seq_len else default_seq
         return self.slots * self.per_adapter_batch * seq
+
+    def rank_tokens(self, default_seq: int = 1, default_rank: int = 1) -> int:
+        rank = self.lora_rank if self.lora_rank else default_rank
+        return self.tokens(default_seq) * rank
 
 
 def admit_cross_task(resident: Sequence[ColoRequest],
@@ -156,33 +226,47 @@ def admit_cross_task(resident: Sequence[ColoRequest],
                      capacity_slots: int,
                      mem: Optional[MemoryModel] = None) -> List[str]:
     """§A.3 admission generalized across TASK boundaries: greedily admit
-    pending tasks in decreasing per-slot TOKEN width (b * seq; ties broken
-    by name for determinism) while the replica's slot capacity holds and
-    the fitted memory model M_hat(total tokens) stays inside the safety
-    margin. Tasks need NOT share a batch size or seq len — ragged slots
-    fuse heterogeneous widths in one step, so the only compatibility the
-    key retains is (arch, gpus, loss kind).
+    pending tasks in decreasing per-slot FLOP-token width (b * seq * rank;
+    ties broken by name for determinism) while the replica's slot capacity
+    holds and the fitted memory model M_hat stays inside the safety
+    margin. Tasks need NOT share a batch size, seq len, or rank — ragged
+    slots fuse heterogeneous widths and the rank-local kernels fuse
+    heterogeneous ranks in one step, so the only compatibility the key
+    retains is (arch, gpus, loss kind).
+
+    A rank-aware model (``mem.k2 > 0``) budgets rank-weighted FLOP-tokens
+    at each task's TRUE rank; requests without rank information — and
+    every request under a rank-neutral model — are charged the padded
+    ``r_max``, which is exactly the historical Z*r_max accounting.
 
     ``resident`` are tasks already co-located on the replica (the host
     included); their ``slots`` should be *current future-use bounds*, so
     capacity freed by early exits is reclaimable the moment it frees.
     Returns the admitted task names, in admission order."""
     default_seq = mem.seq_len if mem is not None else 1
+    default_rank = mem.charged_rank(None) if mem is not None else 1
+    ranked = mem is not None and mem.k2 > 0
     used_slots = sum(r.slots for r in resident)
     used_tokens = sum(r.tokens(default_seq) for r in resident)
+    used_rtok = sum(r.rank_tokens(default_seq, default_rank)
+                    for r in resident)
     admitted: List[str] = []
 
     def width(r: ColoRequest) -> int:
-        return r.per_adapter_batch * (r.seq_len if r.seq_len else
-                                      default_seq)
+        w = r.per_adapter_batch * (r.seq_len if r.seq_len else default_seq)
+        if ranked:
+            w *= r.lora_rank if r.lora_rank else default_rank
+        return w
 
     for r in sorted(pending, key=lambda r: (-width(r), r.name)):
         if used_slots + r.slots > capacity_slots:
             continue
         tokens = used_tokens + r.tokens(default_seq)
-        if mem is not None and not mem.fits_tokens(tokens):
+        rtok = used_rtok + r.rank_tokens(default_seq, default_rank)
+        if mem is not None and not mem.fits_ranked(tokens, rtok):
             continue
         admitted.append(r.name)
         used_slots += r.slots
         used_tokens = tokens
+        used_rtok = rtok
     return admitted

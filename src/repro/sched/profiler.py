@@ -17,7 +17,7 @@ import dataclasses
 import json
 import os
 import time
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 
@@ -46,6 +46,33 @@ def analytic_step_time(cfg: ModelConfig, total_batch: int, seq_len: int,
     f = train_step_flops(cfg, total_batch, seq_len, lora_rank)
     compute = f / (chips * PEAK_FLOPS_BF16 * mfu)
     # memory floor: every base weight read at least twice (fwd+bwd)
+    bytes_moved = 2 * 2 * cfg.param_count(active_only=True)
+    memory = bytes_moved / (chips * HBM_BYTES_PER_S)
+    return max(compute, memory)
+
+
+def fused_step_flops(cfg: ModelConfig, slot_tokens: "Sequence[int]",
+                     ranks: "Sequence[int]") -> float:
+    """Rank-local fused-step FLOPs for one shared-backbone replica:
+    frozen base at 4ND over the total real tokens, plus each slot's LoRA
+    GEMMs at its TRUE rank (6 * N_lora(r_z) * tokens_z). Rank-MASKED
+    execution charges every slot r_max here — the gap between the two is
+    exactly the MXU work the dead rank-tile skip reclaims."""
+    total = sum(slot_tokens)
+    f = 4.0 * cfg.param_count(active_only=True) * total
+    for t, r in zip(slot_tokens, ranks):
+        f += 6.0 * cfg.lora_param_count(int(r)) * t
+    return f
+
+
+def fused_step_time(cfg: ModelConfig, slot_tokens: "Sequence[int]",
+                    ranks: "Sequence[int]", chips: int,
+                    mfu: float = 0.4) -> float:
+    """Roofline-style fused-step seconds under rank-local compute (the
+    §A.3 rank-aware duration estimate). Pass ``ranks = [r_max] * Z`` for
+    the rank-masked baseline."""
+    f = fused_step_flops(cfg, slot_tokens, ranks)
+    compute = f / (chips * PEAK_FLOPS_BF16 * mfu)
     bytes_moved = 2 * 2 * cfg.param_count(active_only=True)
     memory = bytes_moved / (chips * HBM_BYTES_PER_S)
     return max(compute, memory)

@@ -534,3 +534,159 @@ def test_property_ragged_colocation_never_worse_than_static(seed, G):
     assert rep.makespan <= static.makespan + 1e-9
     rep.realized.validate(G)
     assert set(rep.results) == {s.name for s, _, _ in tasks}
+
+
+# ---------------------------------------------------------------------------
+# rank-aware admission (rank-local grouped GEMM: true-rank budgeting)
+# ---------------------------------------------------------------------------
+
+def test_admit_cross_task_rank_weighted_accounting():
+    """Unit: a rank-aware model (k2 > 0) charges each task's TRUE rank;
+    requests without rank info are charged r_max — so a mixed-rank queue
+    admits strictly more than rank-masked budgeting allows."""
+    from repro.sched.intra_task import (ColoRequest, MemoryModel,
+                                        admit_cross_task)
+    # budget is pure rank-tokens: slots * b * seq * rank
+    mem = MemoryModel(k0=0.0, k1=0.0, seq_len=32, capacity=200_000,
+                      safety_margin=1.0, k2=1.0, r_max=64)
+    resident = [ColoRequest("host", slots=2, per_adapter_batch=4,
+                            seq_len=32, lora_rank=16)]      # 4096 rank-tok
+    sweep = [ColoRequest(f"g{r}", slots=2, per_adapter_batch=2, seq_len=32,
+                         lora_rank=r) for r in (4, 8, 16, 32, 64)]
+    masked = [dataclasses.replace(g, lora_rank=None) for g in sweep]
+    # masked: every guest billed 2*2*32*64 = 8192 -> (200000-4096)/8192
+    # admits all five anyway with this loose budget; tighten:
+    tight = dataclasses.replace(mem, capacity=20_000)
+    got_masked = admit_cross_task(resident, masked, 16, tight)
+    got_true = admit_cross_task(resident, sweep, 16, tight)
+    # true charges: r64=8192, r32=4096, r16=2048, r8=1024, r4=512
+    # budget 20000-4096=15904: desc greedy admits 64,32,16,8,4 (15872)
+    assert got_true == ["g64", "g32", "g16", "g8", "g4"]
+    # masked charges 8192 each: only one fits
+    assert got_masked == ["g4"] or len(got_masked) == 1
+    assert len(got_true) > len(got_masked)
+
+
+def test_rank_neutral_model_unchanged():
+    """k2 == 0 (every pre-rank-local caller): rank fields are inert and
+    admission reduces to the token budget exactly."""
+    from repro.sched.intra_task import (ColoRequest, MemoryModel,
+                                        admit_cross_task)
+    mem = MemoryModel(k0=100.0, k1=1.0, seq_len=32, capacity=2000,
+                      safety_margin=1.0)
+    resident = [ColoRequest("host", slots=4, per_adapter_batch=4,
+                            seq_len=32)]
+    pending = [
+        ColoRequest("wide", slots=2, per_adapter_batch=8, seq_len=32,
+                    lora_rank=64),
+        ColoRequest("narrow", slots=2, per_adapter_batch=2, seq_len=32,
+                    lora_rank=4),
+    ]
+    bare = [dataclasses.replace(p, lora_rank=None) for p in pending]
+    assert (admit_cross_task(resident, pending, 16, mem)
+            == admit_cross_task(resident, bare, 16, mem))
+
+
+@settings(deadline=None, max_examples=50)
+@given(seed=st.integers(0, 10_000))
+def test_property_true_rank_admits_geq_masked(seed):
+    """On a uniform-width rank-sweep queue (the bench's tuning mix shape),
+    true-rank budgeting admits AT LEAST as many guests as r_max-masked
+    budgeting: each guest's true charge is <= its masked charge and all
+    masked charges are equal, so desc-greedy can only gain."""
+    from repro.sched.intra_task import (ColoRequest, MemoryModel,
+                                        admit_cross_task)
+    rng = np.random.default_rng(seed)
+    r_max = int(rng.choice([16, 32, 64]))
+    mem = MemoryModel(k0=0.0, k1=1.0, seq_len=64,
+                      capacity=float(rng.integers(10_000, 2_000_000)),
+                      safety_margin=1.0, k2=1.0, r_max=r_max)
+    resident = [ColoRequest("host", slots=int(rng.integers(1, 5)),
+                            per_adapter_batch=4, seq_len=64,
+                            lora_rank=r_max)]
+    n = int(rng.integers(1, 10))
+    sweep = [ColoRequest(f"g{i}", slots=2, per_adapter_batch=2, seq_len=64,
+                         lora_rank=int(rng.integers(1, r_max + 1)))
+             for i in range(n)]
+    masked = [dataclasses.replace(g, lora_rank=None) for g in sweep]
+    got_true = admit_cross_task(resident, sweep, 64, mem)
+    got_masked = admit_cross_task(resident, masked, 64, mem)
+    assert len(got_true) >= len(got_masked)
+    assert set(got_masked) <= set(sweep_names := {g.name for g in sweep})
+    assert set(got_true) <= sweep_names
+
+
+def test_ranklocal_colocation_fuses_low_rank_guests():
+    """Cluster-level: under a tight rank-aware budget, a low-rank guest
+    fuses onto the host replica while the same guest charged at r_max
+    (rank unknown) must wait for exclusive placement."""
+    from repro.sched.intra_task import MemoryModel
+    G = 2
+    # pure rank-token budget; host: 4 slots * b4 * seq64 * r16 = 16384;
+    # guest true: 2*2*64*4 = 1024 (fits 20000); masked: 2*2*64*64 = 16384
+    # (rejected)
+    mem = MemoryModel(k0=0.0, k1=0.0, seq_len=64, capacity=20_000,
+                      safety_margin=1.0, k2=1.0, r_max=64)
+
+    def tasks(guest_rank):
+        return [
+            make_task("host", K=8, Z=4, total=400, warm=20, step_time=0.01,
+                      gpus=1, exits={}) +
+            (sim_colo_spec(RKEY, K=8, Z=4, per_adapter_batch=4, seq_len=64,
+                           replica_slots=8, mem=mem, lora_rank=16),),
+            make_task("hog", K=8, Z=4, total=400, warm=20, step_time=0.01,
+                      gpus=1, exits={}) + (None,),
+            make_task("lowrank", K=2, Z=2, total=60, warm=3, step_time=0.01,
+                      gpus=1, exits={}) +
+            (sim_colo_spec(RKEY, K=2, Z=2, per_adapter_batch=2, seq_len=64,
+                           lora_rank=guest_rank),),
+        ]
+
+    _, static, local = run_colo(tasks(4), G, colocate=True)
+    _, _, masked = run_colo(tasks(None), G, colocate=True)
+    assert local.colocated == {"lowrank": "host"}
+    assert masked.colocated == {}
+    assert local.makespan < masked.makespan - 1e-9
+    assert local.makespan <= static.makespan + 1e-9
+    assert local.results == masked.results
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 10_000), G=st.sampled_from([2, 4]))
+def test_property_ranklocal_colocation_never_worse_than_static(seed, G):
+    """elastic <= static survives RANK-AWARE co-location: fusing guests
+    admitted under the true-rank FLOP-token budget only ever starts
+    pending work earlier inside existing replica occupancy."""
+    from repro.sched.intra_task import MemoryModel
+    rng = np.random.default_rng(seed)
+    tasks = []
+    for i, (spec, factory) in enumerate(random_workload(rng, G)):
+        colo = None
+        if rng.random() < 0.7:
+            drv = factory()
+            mem = None
+            if rng.random() < 0.6:
+                mem = MemoryModel(
+                    k0=0.0, k1=1.0, seq_len=64,
+                    capacity=float(rng.integers(2_000, 4_000_000)),
+                    safety_margin=1.0, k2=float(rng.choice([0.0, 1.0])),
+                    r_max=64)
+            colo = sim_colo_spec(
+                ("shared", spec.gpus), K=drv.K, Z=drv.Z,
+                per_adapter_batch=int(rng.integers(1, 17)),
+                seq_len=int(rng.choice([16, 64, 256])),
+                replica_slots=int(rng.integers(drv.Z, 2 * drv.Z + 1)),
+                mem=mem,
+                lora_rank=(int(rng.integers(1, 65))
+                           if rng.random() < 0.7 else None))
+        tasks.append((spec, factory, colo))
+    specs = [s for s, _, _ in tasks]
+    plan = solve(specs, G, "cp")
+    static = execute_static(plan, G, {s.name: f for s, f, _ in tasks})
+    rt = ElasticClusterRuntime(G, colocate=True)
+    for s, f, c in tasks:
+        rt.submit(s, f, colo=c)
+    rep = rt.run(initial=plan)
+    assert rep.makespan <= static.makespan + 1e-9
+    rep.realized.validate(G)
+    assert set(rep.results) == {s.name for s, _, _ in tasks}

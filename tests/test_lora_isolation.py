@@ -134,12 +134,12 @@ def exec_env():
     return cfg, params, ds_a, ds_b
 
 
-def _lifecycle(ex, name, ds, seed, total_steps=8, width=None):
+def _lifecycle(ex, name, ds, seed, total_steps=8, width=None,
+               ranks=(4, 8)):
     kw = {} if width is None else {"per_adapter_batch": width}
-    jobs = {f"{name}/j0": TrainConfig(learning_rate=3e-3, lora_rank=4,
-                                      max_steps=total_steps, **kw),
-            f"{name}/j1": TrainConfig(learning_rate=1e-3, lora_rank=8,
-                                      max_steps=total_steps, **kw)}
+    jobs = {f"{name}/j{i}": TrainConfig(learning_rate=lr, lora_rank=rk,
+                                        max_steps=total_steps, **kw)
+            for i, (lr, rk) in enumerate(zip((3e-3, 1e-3), ranks))}
     ee = EarlyExitConfig(warmup_ratio=0.25, select_ratio=1.0)
     return TaskLifecycle(
         ex, name, jobs, total_steps, ee=ee, max_slots=2,
@@ -296,6 +296,104 @@ def test_cross_task_slot_tags(exec_env):
             ref = ex.slots.adapter_at(slot)
             for t in ref:
                 np.testing.assert_array_equal(tree[t]["A"], ref[t]["A"])
+    ex.run_steps(2)
+    for lc in (lc_a, lc_b):
+        for mon in lc.monitors.values():
+            assert mon.steps_trained == 2
+
+
+# ---------------------------------------------------------------------------
+# rank-local isolation (mixed TRUE ranks on one replica)
+# ---------------------------------------------------------------------------
+
+def _run_ranked(cfg, params, lifecycle_specs, b_cap=2):
+    """Fresh Z=4 shared executor; specs are (name, ds, seed, ranks)."""
+    ex = SharedBackboneExecutor(cfg, params, Z=4, per_adapter_batch=b_cap,
+                                eval_every=2, seed=0)
+    lcs = [_lifecycle(ex, name, ds, seed, ranks=ranks)
+           for name, ds, seed, ranks in lifecycle_specs]
+    results = run_colocated(ex, lcs)
+    hists = {lc.task_name: {j: (tuple(m.val_hist), tuple(m.raw_train_hist))
+                            for j, m in lc.monitors.items()}
+             for lc in lcs}
+    return results, hists
+
+
+def test_ranklocal_cross_task_losses_bitwise_equal_solo(exec_env):
+    """Tasks with DIFFERENT true ranks (2/4 vs full-rank 8/8 on an
+    r_max=8 executor) co-located on one shared executor produce bitwise-
+    identical loss histories to each task alone. The full-rank task flips
+    from the no-binding dispatch (alone) to the rank-local dispatch
+    (low-rank co-tenant present) — its losses must not move a bit."""
+    cfg, params, ds_a, ds_b = exec_env
+    assert cfg.lora.r_max == 8
+    specs = [("A", ds_a, 3, (2, 4)), ("B", ds_b, 4, (8, 8))]
+    fused, fused_h = _run_ranked(cfg, params, specs)
+    solo_a, solo_a_h = _run_ranked(cfg, params, [specs[0]])
+    solo_b, solo_b_h = _run_ranked(cfg, params, [specs[1]])
+    assert fused_h["A"] == solo_a_h["A"]      # bitwise: tuples of floats
+    assert fused_h["B"] == solo_b_h["B"]
+    assert fused["A"].best_val == solo_a["A"].best_val
+    assert fused["B"].best_val == solo_b["B"].best_val
+    assert np.isfinite(fused["A"].best_val)
+
+
+def test_ranklocal_ragged_rank_and_width_compose_bitwise(exec_env):
+    """Mixed ranks AND mixed widths at once: a rank-2/b=2 guest next to a
+    full-rank/b=4 host rides the composed rank-local x ragged path; both
+    tasks' loss histories stay bitwise identical to solo."""
+    cfg, params, ds_a, ds_b = exec_env
+
+    def run(specs):
+        ex = SharedBackboneExecutor(cfg, params, Z=4, per_adapter_batch=4,
+                                    eval_every=2, seed=0)
+        lcs = [_lifecycle(ex, name, ds, seed, width=w, ranks=ranks)
+               for name, ds, seed, w, ranks in specs]
+        results = run_colocated(ex, lcs)
+        hists = {lc.task_name: {j: (tuple(m.val_hist),
+                                    tuple(m.raw_train_hist))
+                                for j, m in lc.monitors.items()}
+                 for lc in lcs}
+        return results, hists
+
+    specs = [("A", ds_a, 3, 4, (8, 8)), ("B", ds_b, 4, 2, (2, 4))]
+    fused, fused_h = run(specs)
+    solo_a, solo_a_h = run([specs[0]])
+    solo_b, solo_b_h = run([specs[1]])
+    assert fused_h["A"] == solo_a_h["A"]
+    assert fused_h["B"] == solo_b_h["B"]
+    assert fused["A"].best_val == solo_a["A"].best_val
+    assert fused["B"].best_val == solo_b["B"].best_val
+
+
+def test_ranklocal_slot_ranks_tracked(exec_env):
+    """While mixed-rank tasks are co-resident, SlotManager mirrors each
+    slot's TRUE rank on host, the executor's rank-token accounting sums
+    them, and ChunkReport-style observability surfaces the vector."""
+    cfg, params, ds_a, ds_b = exec_env
+    ex = SharedBackboneExecutor(cfg, params, Z=4, per_adapter_batch=2,
+                                eval_every=2, seed=0)
+    lc_a = _lifecycle(ex, "A", ds_a, 3, ranks=(2, 4))
+    lc_b = _lifecycle(ex, "B", ds_b, 4, ranks=(8, 8))
+    ex.add_task(lc_a)
+    ex.add_task(lc_b)
+    lc_a.begin()
+    lc_b.begin()
+    ranks_a = sorted(ex.slots.slot_rank[s] for _, s in
+                     lc_a.resident.values())
+    ranks_b = sorted(ex.slots.slot_rank[s] for _, s in
+                     lc_b.resident.values())
+    assert ranks_a == [2, 4] and ranks_b == [8, 8]
+    assert ex.slots.mixed_rank(cfg.lora.r_max)
+    seq = ds_a.train.shape[1] - 1
+    assert ex.slots.occupied_rank_tokens() == 2 * seq * (2 + 4 + 8 + 8)
+    assert sorted(ex.slot_rank_vector()) == [2, 4, 8, 8]
+    # host mirror agrees with the device ranks the train step consumes
+    np.testing.assert_array_equal(np.asarray(ex.slots.ranks),
+                                  np.asarray(ex.slots.slot_rank))
+    # rank bounds feed the §A.3 rank-token budget
+    assert lc_a.rank_bound() == 4 and lc_b.rank_bound() == 8
+    assert lc_a.rank_tokens_bound() == lc_a.tokens_bound() * 4
     ex.run_steps(2)
     for lc in (lc_a, lc_b):
         for mon in lc.monitors.values():
