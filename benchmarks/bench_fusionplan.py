@@ -1,0 +1,301 @@
+"""Fusion-aware planning + slot-level migration vs opportunistic fusion.
+
+Opportunistic cross-task fusion (PR 3) attaches a pending task to a live
+replica the moment admission accepts it — but once fused, the guest is
+pinned: when the host's own jobs all early-exit, the collapsed replica
+keeps its GPUs busy for the lone guest while the arrival queue regrows
+behind them. Fusion-AWARE planning makes co-location a first-class
+placement decision (the solver assigns tasks to replica slots under the
+token-/rank-budget capacities of §A.3 + the k2 memory model) and adds
+slot-level preemption/migration: a guest pinning a collapsed replica is
+moved — via the bit-exact ``SlotSnapshot`` primitive — onto a same-key
+sibling replica with headroom, freeing the host's GPUs for the queue.
+
+Two parts:
+
+1. **Cluster A/B (virtual time).** A regrowing-queue mix: one collapsing
+   host replica (every kept job exits right after warmup selection), one
+   long-lived spine replica with headroom only after its own selection,
+   a guest fused onto the collapsing host, and a stream of exclusive
+   arrivals that need the host's GPUs. Executed twice through the
+   elastic runtime: ``colocate=True`` only (opportunistic fusion — the
+   guest pins the collapsed host) and ``fusion_planning=True,
+   migrate=True`` (the guest migrates to the spine at the collapse,
+   releasing the GPUs to the queue). Reported: makespans, effective
+   utilization, migration events, speedup (asserted >= 1.1x). Per-task
+   results must be identical in both runs.
+
+2. **Migration bitwise check (real training).** A task mid-training on
+   one ``SharedBackboneExecutor`` is suspended (``SlotSnapshot`` per
+   resident job), restored on a second executor already hosting a
+   different resident mix (different physical slots), and trained to
+   completion — its loss histories and best-val result must be bitwise
+   identical to never migrating.
+
+Emits BENCH_fusionplan.json. ``--smoke`` shrinks the mix (CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_arch
+from repro.core.early_exit import EarlyExitConfig
+from repro.core.executor import (SharedBackboneExecutor, TaskLifecycle,
+                                 run_colocated)
+from repro.data.synthetic import SlotBatcher, make_task_dataset
+from repro.models import model as M
+from repro.sched import profiler
+from repro.sched.cluster import (ElasticClusterRuntime, SimulatedTaskDriver,
+                                 execute_static, sim_colo_spec,
+                                 sim_task_spec)
+from repro.sched.events import EventKind
+from repro.sched.inter_task import solve
+
+FUSE_ARCH = "stablelm-3b"
+
+
+def build_workload(num_stream: int, seed: int = 0):
+    """(spec, factory, colo, release) quadruples — the regrowing-queue
+    mix described in the module docstring. ``seed`` jitters budgets so
+    robustness of the speedup is checkable."""
+    rng = np.random.default_rng(seed)
+    cfg = get_arch(FUSE_ARCH)
+    st = profiler.profile_task(cfg, 8, 4, 1024, 2).step_time_s
+    fuse_key = (FUSE_ARCH, 2, 4, 1024, "sft")
+    tasks = []
+
+    def sim(name, *, K, Z, total, warm, gpus, colo, release=0.0, exits=None):
+        spec = sim_task_spec(name, K=K, Z=Z, total_steps=total,
+                             warmup_steps=warm, step_time_s=st, gpus=gpus)
+        if release:
+            spec = dataclasses.replace(spec, release=release)
+
+        def factory(name=name, K=K, Z=Z, total=total, warm=warm,
+                    exits=exits):
+            return SimulatedTaskDriver(name, K=K, Z=Z, total_steps=total,
+                                       warmup_steps=warm, step_time_s=st,
+                                       exit_step=dict(exits or {}))
+        return (spec, factory, colo, release)
+
+    total = int(rng.integers(750, 900))
+    warm = total // 10
+    # spine: lives the whole run; replica_slots == Z means NO headroom
+    # until its own warmup selection frees slots — the guest cannot fuse
+    # here at t=0, only migrate here later
+    tasks.append(sim("spine", K=8, Z=4, total=total, warm=warm, gpus=2,
+                     colo=sim_colo_spec(fuse_key, K=8, Z=4,
+                                        replica_slots=4)))
+    # host: every kept job exits right after warmup selection — the
+    # replica collapses to just its guest at ~(2*warm+1) steps
+    tasks.append(sim("host", K=8, Z=4, total=total, warm=warm, gpus=2,
+                     exits={j: warm + 1 for j in range(8)},
+                     colo=sim_colo_spec(fuse_key, K=8, Z=4,
+                                        replica_slots=8)))
+    # guest: fuses onto the host at t=0; outlives the collapse by far
+    guest_total = int(rng.integers(550, 650))
+    tasks.append(sim("guest", K=2, Z=2, total=guest_total,
+                     warm=guest_total // 10, gpus=2,
+                     colo=sim_colo_spec(fuse_key, K=2, Z=2)))
+    # the regrowing queue: exclusive arrivals that need the host's GPUs
+    for i in range(num_stream):
+        stream_total = int(rng.integers(180, 220))
+        tasks.append(sim(f"stream-{i}", K=2, Z=2, total=stream_total,
+                         warm=stream_total // 10, gpus=2, colo=None,
+                         release=(i + 1) * 5 * st))
+    return tasks
+
+
+def run_cluster(tasks, G: int) -> dict:
+    specs = [s for s, _, _, _ in tasks]
+    plan = solve(specs, G, "cp")
+    plan.validate(G)
+    static = execute_static(plan, G, {s.name: f for s, f, _, _ in tasks})
+
+    out = {}
+    modes = (("exclusive", dict()),
+             ("opportunistic", dict(colocate=True)),
+             ("fusion_aware", dict(fusion_planning=True, migrate=True)))
+    for mode, kw in modes:
+        rt = ElasticClusterRuntime(G, delay_delta=2.0, **kw)
+        for s, f, c, rel in tasks:
+            rt.submit(s, f, at=rel, colo=c)
+        # arrivals are announced via release times, so the full-knowledge
+        # static plan stays the yardstick even though the session itself
+        # plans incrementally (no ``initial`` covers future arrivals)
+        rep = rt.run()
+        assert rep.makespan <= static.makespan + 1e-9, \
+            f"{mode} elastic regressed past the static plan"
+        out[mode] = rep
+
+    excl, opp, fa = (out["exclusive"], out["opportunistic"],
+                     out["fusion_aware"])
+    # identical work, attributed identically, in all three runs
+    assert excl.results == opp.results == fa.results, \
+        "placement strategy changed task results"
+    assert fa.migrations >= 1, "no guest migrated — workload does not " \
+        "exercise fusion-aware rebalancing"
+
+    # per-task work area from the exclusive run (realized solo durations
+    # x gpus): how densely each strategy packs identical work
+    area = sum((excl.task_ends[s.name] - excl.task_starts[s.name]) * s.gpus
+               for s, _, _, _ in tasks)
+
+    def report(rep) -> dict:
+        return {
+            "makespan_s": rep.makespan,
+            "utilization_effective": area / (len(rep.gpu_busy)
+                                             * rep.makespan),
+            "gpu_occupancy": rep.utilization,
+            "replans": rep.replans,
+            "preemptions": rep.preemptions,
+            "migrations": rep.migrations,
+            "task_starts": {k: round(v, 4)
+                            for k, v in rep.task_starts.items()},
+            "task_ends": {k: round(v, 4) for k, v in rep.task_ends.items()},
+            "fused_tasks": dict(rep.colocated),
+            "migrate_events": [e.detail for e in rep.events
+                               if e.kind is EventKind.TASK_MIGRATED],
+        }
+
+    speedup = opp.makespan / max(fa.makespan, 1e-12)
+    assert speedup >= 1.1, \
+        f"fusion-aware planning+migration speedup {speedup:.3f} < 1.1x"
+    return {
+        "G": G,
+        "num_tasks": len(tasks),
+        "tasks": [{"name": s.name, "gpus": s.gpus,
+                   "release_s": round(rel, 4),
+                   "est_duration_s": round(s.duration, 4),
+                   "fusable": c is not None}
+                  for s, _, c, rel in tasks],
+        "static_plan_makespan_s": static.makespan,
+        "exclusive": report(excl),
+        "opportunistic": report(opp),
+        "fusion_aware": report(fa),
+        "speedup_vs_exclusive": excl.makespan / max(fa.makespan, 1e-12),
+        "speedup": speedup,
+    }
+
+
+def run_migration_check() -> dict:
+    """Real training: suspend a mid-flight task on replica 1, restore it
+    on replica 2 (different resident mix, different physical slots), and
+    compare against never migrating — bitwise."""
+    cfg = dataclasses.replace(
+        get_arch("paper-llama-tiny").reduced(num_layers=2, d_model=64,
+                                             vocab=128), dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    ds = {name: make_task_dataset(f"mig-{name}", cfg.vocab_size, seq_len=16,
+                                  num_train=32, num_val=8, difficulty=diff,
+                                  seed=sd)
+          for name, diff, sd in (("A", 0.2, 1), ("B", 0.6, 2),
+                                 ("C", 0.4, 3))}
+    seeds = {"A": 3, "B": 4, "C": 5}
+
+    def make_ex():
+        return SharedBackboneExecutor(cfg, params, Z=4, per_adapter_batch=2,
+                                      eval_every=2, seed=0)
+
+    def lifecycle(ex, name):
+        jobs = {f"{name}/j{k}": TrainConfig(learning_rate=lr, lora_rank=rk,
+                                            max_steps=8)
+                for k, (lr, rk) in enumerate(zip((3e-3, 1e-3), (4, 8)))}
+        return TaskLifecycle(
+            ex, name, jobs, 8,
+            ee=EarlyExitConfig(warmup_ratio=0.25, select_ratio=1.0),
+            max_slots=2, batcher=SlotBatcher(ds[name], 2, 2,
+                                             seed=seeds[name]),
+            seed=seeds[name])
+
+    def drive(ex, lcs, steps=None):
+        done = 0
+        while any(not lc.done for lc in lcs):
+            live = [lc for lc in lcs if not lc.done]
+            n = max(min(min(lc.steps_until_boundary() for lc in live),
+                        ex.eval_every), 1)
+            ex.run_steps(n)
+            for lc in live:
+                lc.on_steps(n)
+            done += n
+            if steps is not None and done >= steps:
+                return
+
+    def hists(lc):
+        return {j: (tuple(m.val_hist), tuple(m.raw_train_hist))
+                for j, m in lc.monitors.items()}
+
+    # solo baseline: A never migrates
+    ex0 = make_ex()
+    a0, b0 = lifecycle(ex0, "A"), lifecycle(ex0, "B")
+    run_colocated(ex0, [a0, b0])
+
+    # migration run: A moves mid-continue from replica 1 to replica 2
+    ex1, ex2 = make_ex(), make_ex()
+    A, B, C = lifecycle(ex1, "A"), lifecycle(ex1, "B"), lifecycle(ex2, "C")
+    ex2.add_task(C)
+    C.begin()
+    drive(ex2, [C], steps=4)
+    ex1.add_task(A)
+    ex1.add_task(B)
+    A.begin()
+    B.begin()
+    drive(ex1, [A, B], steps=4)
+    A.suspend()
+    assert ex2.can_admit_task(A)
+    A.resume(ex2)
+    drive(ex2, [A, C])
+    drive(ex1, [B])
+
+    bitwise = hists(A) == hists(a0)
+    best_val = A.result().best_val == a0.result().best_val
+    assert bitwise and best_val, "migration perturbed the task's losses"
+    return {"solo_best_val": a0.result().best_val,
+            "migrated_best_val": A.result().best_val,
+            "losses_bitwise_identical": bitwise,
+            "best_val_identical": best_val}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small instance (CI)")
+    ap.add_argument("--gpus", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_fusionplan.json")
+    args = ap.parse_args(argv)
+
+    tasks = build_workload(num_stream=3 if args.smoke else 6,
+                           seed=args.seed)
+    result = run_cluster(tasks, args.gpus)
+    result["migration_bitwise"] = run_migration_check()
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    o, fa = result["opportunistic"], result["fusion_aware"]
+    e = result["exclusive"]
+    print(f"exclusive makespan    : {e['makespan_s']:.3f}s "
+          f"(eff util {e['utilization_effective']:.2%})")
+    print(f"opportunistic makespan: {o['makespan_s']:.3f}s "
+          f"(eff util {o['utilization_effective']:.2%})")
+    print(f"fusion-aware makespan : {fa['makespan_s']:.3f}s "
+          f"(eff util {fa['utilization_effective']:.2%}, "
+          f"{fa['migrations']} migration(s), "
+          f"{fa['preemptions']} preemption(s))")
+    print(f"speedup               : {result['speedup']:.2f}x")
+    mig = result["migration_bitwise"]
+    print(f"migration bitwise     : best_val {mig['migrated_best_val']:.4f} "
+          f"({'identical' if mig['losses_bitwise_identical'] else 'DIFFERS'}"
+          ")")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

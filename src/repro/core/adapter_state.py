@@ -6,6 +6,15 @@ array updates — never a recompile. Rotated-out jobs are snapshotted to host
 (params + optimizer moments + step count) and restored bit-exactly when
 they continue training (paper §5.2: survivors "carry over their optimizer
 states and loss histories").
+
+Layer contract — SlotSnapshot bit-exactness: ``snapshot()`` followed by
+``restore()`` reproduces the job's device state exactly (adapter params,
+AdamW moments, step count, slot width/rank), on ANY slot of ANY same-shape
+replica. Together with task-local lifecycle state (lane-indexed batch
+streams, monitors, init keys) this is the primitive that makes slot-level
+preemption and cross-replica migration invisible to the loss trajectory:
+a migrated job's subsequent losses are bitwise identical to never moving
+(tests/test_lora_isolation.py).
 """
 from __future__ import annotations
 

@@ -17,7 +17,10 @@ designs cannot):
     training with online divergence/overfit detection and slot backfill —
     that admits and evicts slots *through* the executor. All of its
     decisions (batch streams, init keys, eval points) are task-local, so
-    a lifecycle behaves identically whether it runs alone or co-located.
+    a lifecycle behaves identically whether it runs alone or co-located —
+    and, via ``suspend()``/``resume()`` (SlotSnapshot per resident job +
+    exact lane restoration), identically across a MID-TASK move to a
+    different replica: migration is invisible to the loss trajectory.
   * ``run_colocated`` drives several lifecycles over one executor with a
     cross-task admission gate (slot headroom + the §A.3 memory model) —
     pending small tasks backfill capacity the moment survivors free it.
@@ -428,6 +431,10 @@ class TaskLifecycle:
         self._events: List[ProgressEvent] = []
         self._t0 = 0.0
         self._result: Optional[TaskResult] = None
+        self._sus: Optional[List[Tuple[str, int]]] = None  # suspended (job, lane)
+        self._sus_eval_every = 0
+        self._b_cap = ex.b_cap             # cached caps: capacity queries
+        self._r_max = ex.cfg.lora.r_max    # stay answerable while suspended
 
     # ---- helpers -----------------------------------------------------------
     def _next_key(self) -> jax.Array:
@@ -439,16 +446,17 @@ class TaskLifecycle:
     def job_width(self, job_id: str) -> int:
         """The job's OWN per-adapter batch size, capped at the replica's
         lane capacity — slots are ragged, so every job trains at its own
-        width instead of the executor-wide maximum."""
-        b = self.jobs[job_id].per_adapter_batch or self.ex.b_cap
-        return max(min(b, self.ex.b_cap), 1)
+        width instead of the executor-wide maximum. (Caps are cached so
+        capacity queries stay answerable while the task is suspended
+        between replicas.)"""
+        b = self.jobs[job_id].per_adapter_batch or self._b_cap
+        return max(min(b, self._b_cap), 1)
 
     def job_rank(self, job_id: str) -> int:
         """The job's TRUE adapter rank (capped at r_max) — what the
         rank-local kernels compute at and the rank-aware §A.3 budget
         charges, instead of the padded r_max."""
-        return max(min(self.jobs[job_id].lora_rank, self.ex.cfg.lora.r_max),
-                   1)
+        return max(min(self.jobs[job_id].lora_rank, self._r_max), 1)
 
     def lane_batch_dict(self, job_id: str) -> Dict[str, np.ndarray]:
         """One fused-step draw for a resident job: its lane's stream
@@ -456,8 +464,11 @@ class TaskLifecycle:
         lane, _ = self.resident[job_id]
         return self.batcher.lane_batch_dict(lane, self.job_width(job_id))
 
-    def _admit_job(self, job_id: str) -> None:
-        lane = self._free_lanes.pop(0)
+    def _admit_job(self, job_id: str, lane: Optional[int] = None) -> None:
+        if lane is None:
+            lane = self._free_lanes.pop(0)
+        else:
+            self._free_lanes.remove(lane)     # exact lane (resume/migration)
         slot = self.ex.acquire_slot()
         tc = self.jobs[job_id]
         if job_id in self.snapshots:
@@ -480,6 +491,49 @@ class TaskLifecycle:
     def observe_train(self, job_id: str, loss: float) -> None:
         self.monitors[job_id].observe_train(loss)
         self.steps_done[job_id] = self.steps_done.get(job_id, 0) + 1
+
+    # ---- suspend / resume (slot-level migration primitive) -----------------
+    def suspend(self) -> None:
+        """Detach this task from its executor mid-flight: snapshot every
+        resident job bit-exactly (``SlotSnapshot`` carries adapter +
+        optimizer moments + step count + slot geometry) and release the
+        slots. All decision state — batcher lane streams, monitors, phase
+        counters, init keys — is task-local and stays in this object, so
+        ``resume()`` on another replica continues the loss trajectory
+        exactly where it stopped."""
+        assert self.phase in ("warmup", "continue"), \
+            f"cannot suspend lifecycle in phase {self.phase!r}"
+        assert self._sus is None, "already suspended"
+        self._sus = []
+        for job_id in sorted(self.resident):
+            lane, slot = self.resident[job_id]
+            self.snapshots[job_id] = self.ex.snapshot(slot)
+            self._sus.append((job_id, lane))
+            self._evict_job(job_id)
+        self._sus_eval_every = self.ex.eval_every
+        self.ex.remove_task(self.task_name)
+        self.ex = None
+
+    def resume(self, ex: SharedBackboneExecutor) -> None:
+        """Re-attach a suspended lifecycle to ``ex`` (typically a different
+        replica with a different resident mix). Physical slot indices may
+        differ from the old host — that is the point — but lanes are
+        restored EXACTLY: lanes index this task's batch streams, and
+        lane-exact restoration is what makes the post-migration trajectory
+        bitwise identical to a never-migrated run. The caller is
+        responsible for the cross-task admission gate
+        (``ex.can_admit_task``); eval cadence must match the old host
+        (eval points are defined on the task-local step grid)."""
+        assert self._sus is not None, "resume() requires a suspended task"
+        assert ex.eval_every == self._sus_eval_every, \
+            "resume requires the old host's eval cadence"
+        assert ex.b_cap == self._b_cap and ex.cfg.lora.r_max == self._r_max, \
+            "resume requires a same-shape replica (lane width / r_max)"
+        self.ex = ex
+        ex.add_task(self)
+        for job_id, lane in self._sus:
+            self._admit_job(job_id, lane=lane)
+        self._sus = None
 
     @property
     def done(self) -> bool:

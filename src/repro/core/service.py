@@ -144,6 +144,8 @@ class ServiceReport:
     task_ends: Dict[str, float]
     runtime: RuntimeReport
     colocated: Dict[str, str] = dataclasses.field(default_factory=dict)
+    preemptions: int = 0
+    migrations: int = 0
 
 
 class TuningService:
@@ -156,6 +158,13 @@ class TuningService:
     projected makespan win is at least δ·max_delay, regret fallback
     otherwise), which is the right trade once arrivals make strictness
     systematically conservative.
+
+    ``fusion_planning`` (default on) makes co-location a plan decision:
+    every replan solves with fusion-aware placement (replica slots with
+    token/rank budgets) instead of relying solely on opportunistic fusion
+    at admission; ``migrate`` (default on) additionally lets the runtime
+    evict or migrate a live guest whose replica regrew under it, moves
+    that never delay the guest past its in-place projection.
     """
 
     def __init__(self, total_gpus: Optional[int] = None,
@@ -164,6 +173,7 @@ class TuningService:
                  method: str = "cp", delay_delta: Optional[float] = 2.0,
                  profile_store: Optional[profiler.ProfileStore] = None,
                  engine=None, colocate: bool = True,
+                 fusion_planning: bool = True, migrate: bool = True,
                  profile_path: Optional[str] = None,
                  max_tasks_per_tenant: Optional[int] = None):
         if profile_store is None and profile_path is not None:
@@ -193,7 +203,8 @@ class TuningService:
         self.profile_path = profile_path
         self._runtime = ElasticClusterRuntime(
             engine.total_gpus, method=method, delay_delta=delay_delta,
-            colocate=colocate)
+            colocate=colocate, fusion_planning=colocate and fusion_planning,
+            migrate=colocate and migrate)
         self.max_tasks_per_tenant = max_tasks_per_tenant
         self._meta: Dict[str, _TaskMeta] = {}
         self._handles: Dict[str, TaskHandle] = {}
@@ -333,7 +344,8 @@ class TuningService:
             plans_rejected=rt.plans_rejected, events=list(rt.events),
             cancelled=rt.cancelled, task_starts=dict(rt.task_starts),
             task_ends=dict(rt.task_ends), runtime=rt,
-            colocated=dict(rt.colocated))
+            colocated=dict(rt.colocated),
+            preemptions=rt.preemptions, migrations=rt.migrations)
 
     def save_profile(self, path: Optional[str] = None) -> None:
         """Persist the session's ProfileStore (feedback survives process

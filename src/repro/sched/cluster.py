@@ -44,6 +44,25 @@ session never does worse than the never-delay (anomaly-safe) policy by
 more than the sum of bought delays — each of which shrank the projection
 by δ× more than it cost.
 
+Fusion-aware planning (``fusion_planning=True``) lifts co-location from an
+admission-time backstop to a plan decision: every replan solves with
+``plan_fused`` over live ``ReplicaState`` projections (slot headroom +
+linearized SS A.3+k2 memory budgets), so the solver itself decides which
+queued tasks ride replica slots and which get exclusive GPUs. Adopted
+fusion assignments are re-checked against live capacity when applied
+(``_apply_planned_fusions``) — capacity drift makes them stale, never
+unsound. With ``migrate=True`` the runtime also runs the reverse move:
+a guest whose residual extends its replica past the host's own projected
+end is migrated to another same-fuse-key replica or preempted back to the
+queue (``TASK_MIGRATED`` / ``TASK_PREEMPTED``), but ONLY when the new
+placement is projected to complete the guest no later than staying put —
+so the fusion-time occupancy bound, and with it elastic <= static,
+survives every move. Preempted/migrated drivers keep their internal
+progress (the virtual-time analogue of the SlotSnapshot suspend/resume
+primitive in core/adapter_state.py, whose restore is bit-exact), which is
+why a migrated task's losses are bitwise identical to a never-migrated
+run's.
+
 The runtime is an incremental *session*: ``begin()`` opens the event loop,
 ``step()`` advances it by one event (an arrival, a cancellation, or one
 driver chunk), ``submit(..., at=...)`` and ``cancel(...)`` may be called
@@ -65,8 +84,9 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.early_exit import EarlyExitConfig
 from repro.sched.events import EventKind, ProgressEvent
-from repro.sched.inter_task import (Placement, Schedule, TaskSpec,
-                                    diff_schedules, lpt_schedule, solve,
+from repro.sched.inter_task import (FusionProfile, Placement, ReplicaState,
+                                    Schedule, TaskSpec, diff_schedules,
+                                    lpt_schedule, plan_fused, solve,
                                     solve_residual)
 from repro.sched.intra_task import (ColoRequest, MemoryModel,
                                     admit_cross_task)
@@ -207,6 +227,18 @@ class ColocatedReplicaDriver(TaskDriver):
         h.done = True
         h.end = h.clock
 
+    def detach(self, name: str) -> TaskDriver:
+        """Remove a LIVE hosted guest for preemption/migration and return
+        its driver with all internal progress intact — the virtual-time
+        analogue of a SlotSnapshot suspend. The driver can be re-attached
+        to another replica or resumed exclusively; either way it continues
+        from exactly where it stopped. The replica owner cannot detach
+        (its GPU set IS the replica)."""
+        assert name != self.name, "cannot detach the replica owner"
+        h = self._subs.pop(name)
+        assert not h.done, f"{name} already finished on this replica"
+        return h.driver
+
     def sub_names(self) -> List[str]:
         return list(self._subs)
 
@@ -307,6 +339,8 @@ class RuntimeReport:
     task_ends: Dict[str, float]
     cancelled: Tuple[str, ...] = ()
     colocated: Dict[str, str] = dataclasses.field(default_factory=dict)
+    preemptions: int = 0
+    migrations: int = 0
 
     def per_gpu_utilization(self) -> List[float]:
         mk = max(self.makespan, _EPS)
@@ -321,6 +355,15 @@ class _Submission:
     colo: Optional[ColocationSpec] = None
 
 
+@dataclasses.dataclass
+class _Suspended:
+    """A preempted guest between placements: the detached driver keeps its
+    internal progress, ``residual`` is the remaining virtual duration the
+    solver plans with until the task is re-placed."""
+    driver: TaskDriver
+    residual: float
+
+
 class ElasticClusterRuntime:
     """Incremental event-loop session over a simulated G-GPU cluster (see
     module docstring). ``run()`` is the one-shot batch entry; the service
@@ -330,14 +373,24 @@ class ElasticClusterRuntime:
     def __init__(self, G: int, method: str = "cp", bnb_max_n: int = 9,
                  validate: bool = True, max_zero_chunks: int = 10_000,
                  delay_delta: Optional[float] = None,
-                 colocate: bool = False):
+                 colocate: bool = False,
+                 fusion_planning: bool = False,
+                 migrate: bool = False):
         self.G = G
         self.method = method
         self.bnb_max_n = bnb_max_n
         self.validate = validate
         self.max_zero_chunks = max_zero_chunks
         self.delay_delta = delay_delta
-        self.colocate = colocate
+        # fusion_planning: replans solve with plan_fused — co-location is a
+        # first-class plan decision (replica slots with token/rank budgets),
+        # not just an opportunistic backstop at admission. Implies colocate.
+        # migrate: each replan may first evict or migrate a live guest whose
+        # residual now extends its replica past the host's own projected end
+        # (the host queue regrew relative to the shrunken replica).
+        self.fusion_planning = fusion_planning
+        self.migrate = migrate
+        self.colocate = colocate or fusion_planning
         self.now = 0.0
         self._subs: List[_Submission] = []
         self._by_name: Dict[str, _Submission] = {}
@@ -416,6 +469,10 @@ class ElasticClusterRuntime:
         self._bounds: Dict[str, float] = {}
         self._plan: Dict[str, Tuple[float, Tuple[int, ...]]] = {}
         self._hosted: Dict[str, str] = {}        # fused task -> host task
+        self._planned_fusions: Dict[str, str] = {}   # plan-level task -> host
+        self._suspended: Dict[str, _Suspended] = {}  # preempted guests
+        self._preempted_n = 0
+        self._migrated_n = 0
         self.now = 0.0
         self._live = True
 
@@ -530,17 +587,25 @@ class ElasticClusterRuntime:
                             detail=f"host {name} cancelled"))
                 self._harvest_replica(run, T)
         elif name in self._hosted:
-            host = self._hosted[name]
+            host = self._hosted.pop(name)
             hrun = self._running.get(host)
             if hrun is not None and isinstance(hrun.driver,
                                                ColocatedReplicaDriver):
                 hrun.driver.cancel_hosted(name)
+                # BUGFIX: the host's projected end must be revalidated the
+                # moment a guest departs — the stale pre-departure residual
+                # would keep the skyline and the fusion anomaly guard
+                # checking admissions against occupancy the replica no
+                # longer has
+                self._refresh_residual(hrun)
             self._task_ends[name] = T
         else:
             self._pending.discard(name)
             self._future.pop(name, None)
         self._plan.pop(name, None)
         self._bounds.pop(name, None)
+        self._planned_fusions.pop(name, None)
+        self._suspended.pop(name, None)
         self._replan(T)
         self._admit(T)
 
@@ -605,6 +670,12 @@ class ElasticClusterRuntime:
             if shrink:
                 self._replan(T)
                 self._admit(T)
+            elif self.migrate and isinstance(run.driver,
+                                             ColocatedReplicaDriver):
+                # a replica's own chunk boundary is where its local clock
+                # catches up to global time — the only moment a migration
+                # deferred on clock skew can fire without delaying the guest
+                self._rebalance(T)
             heapq.heappush(self._heap, (run.local_time, name))
 
     def _record_hosted_end(self, run: "_Running", sub: str) -> None:
@@ -642,9 +713,100 @@ class ElasticClusterRuntime:
                 sky[g] = end
         return sky
 
+    def _refresh_residual(self, run: "_Running") -> None:
+        """Recompute a run's projected-end residual from its driver after a
+        guest departure (cancel / preemption / migration). Clamped to never
+        grow: the projected end stays monotone non-increasing, which the
+        elastic <= static argument relies on."""
+        run.residual = max(0.0, min(run.driver.residual_estimate(),
+                                    run.residual))
+
     def _plan_resid(self, name: str) -> float:
-        # pending tasks have done no work: residual = estimated duration
+        # preempted tasks resume mid-flight: residual = what remains;
+        # never-started pending tasks have done no work: full duration
+        sus = self._suspended.get(name)
+        if sus is not None:
+            return sus.residual
         return self._by_name[name].spec.duration
+
+    def _guest_driver(self, name: str, T: float) -> TaskDriver:
+        """Driver for a task entering execution: a preempted guest resumes
+        its suspended driver (progress intact — the bitwise-determinism
+        contract), a fresh task constructs and starts one."""
+        sus = self._suspended.pop(name, None)
+        if sus is not None:
+            return sus.driver
+        driver = self._by_name[name].factory()
+        driver.start(T)
+        return driver
+
+    def _resident_requests_of(self, name: str,
+                              run: "_Running") -> List[ColoRequest]:
+        """Current admission-relevant demand of a run, replica or not."""
+        if isinstance(run.driver, ColocatedReplicaDriver):
+            return run.driver.resident_requests()
+        c = self._by_name[name].colo
+        b = run.driver.slots_bound()
+        slots = b if b is not None else (c.slots_needed if c else 0)
+        return [ColoRequest(name, slots,
+                            c.per_adapter_batch if c else 0,
+                            c.seq_len if c else None,
+                            c.lora_rank if c else None)]
+
+    def _replica_states(self, T: float) -> List[ReplicaState]:
+        """Project every running fusable task as a planner ReplicaState:
+        projected end from the live residual, slot headroom from resident
+        slot bounds, and the remaining SS A.3+k2 memory budget linearized to
+        (bytes, k1, k2) so plan_fused's cost() check equals fits_ranked."""
+        reps: List[ReplicaState] = []
+        for host in sorted(self._running):
+            run = self._running[host]
+            cap = self._by_name[host].colo
+            if cap is None:
+                continue
+            res = self._resident_requests_of(host, run)
+            used_slots = sum(r.slots for r in res)
+            if cap.mem is not None:
+                m = cap.mem
+                seq = m.seq_len
+                rank = m.charged_rank(None)
+                tok = sum(r.tokens(seq) for r in res)
+                rtok = sum(r.rank_tokens(seq, rank) for r in res)
+                budget = (m.capacity * m.safety_margin - m.k0
+                          - m.k1 * tok - m.k2 * rtok)
+                k1, k2 = m.k1, m.k2
+            else:
+                budget, k1, k2 = float("inf"), 0.0, 0.0
+            reps.append(ReplicaState(
+                host=host, fuse_key=cap.fuse_key, gpu_ids=run.gpu_ids,
+                projected_end=run.local_time + run.residual,
+                slot_headroom=max(cap.replica_slots - used_slots, 0),
+                mem_budget=budget, k1=k1, k2=k2))
+        return reps
+
+    def _fusion_profiles(self, queue: List[str],
+                         T: float) -> Dict[str, FusionProfile]:
+        """FusionProfile per fusable queued task, mirroring the ColoRequest
+        the admission gate will re-check at apply time. Tasks whose
+        incumbent start bound has already passed are excluded — fusing
+        them now would break the bound promise, exactly the _try_fuse
+        guard, evaluated at plan time."""
+        out: Dict[str, FusionProfile] = {}
+        for n in queue:
+            c = self._by_name[n].colo
+            if c is None:
+                continue
+            bound = self._bounds.get(n)
+            if bound is not None and T > bound + _EPS:
+                continue
+            seq = c.seq_len or (c.mem.seq_len if c.mem is not None else 1)
+            rank = c.lora_rank or (c.mem.charged_rank(None)
+                                   if c.mem is not None else 1)
+            tokens = float(c.slots_needed * c.per_adapter_batch * seq)
+            out[n] = FusionProfile(fuse_key=c.fuse_key,
+                                   slots=c.slots_needed, tokens=tokens,
+                                   rank_tokens=tokens * rank)
+        return out
 
     def _queue_spec(self, name: str, T: float) -> TaskSpec:
         spec = self._by_name[name].spec
@@ -685,13 +847,22 @@ class ElasticClusterRuntime:
         future arrivals, release-constrained) over the projected skyline,
         then run the adoption rule: strict (never delay past a bound) when
         ``delay_delta`` is None, bounded-delay otherwise."""
+        if self.migrate and self._running:
+            self._rebalance(T)
         queue = sorted(self._pending) + sorted(self._future)
         if not queue:
             return
         self._replans += 1
         sky = self._proj_skyline(T)
         resid = [self._queue_spec(n, T) for n in queue]
-        cand = solve_residual(resid, self.G, sky, self.method, self.bnb_max_n)
+        if self.fusion_planning:
+            cand: Schedule = plan_fused(
+                resid, self.G, sky, self._replica_states(T),
+                self._fusion_profiles(queue, T), now=T,
+                method=self.method, bnb_max_n=self.bnb_max_n)
+        else:
+            cand = solve_residual(resid, self.G, sky, self.method,
+                                  self.bnb_max_n)
         if self.validate:
             cand.validate(self.G)
         delays = {p.task.name: p.start - self._bounds[p.task.name]
@@ -703,7 +874,8 @@ class ElasticClusterRuntime:
         # the fallback replay is only needed to price a delaying plan or to
         # place first-time names; strict batch mode with a fully planned
         # queue skips it entirely
-        unplanned = any(n not in self._plan for n in queue)
+        unplanned = any(n not in self._plan and n not in self._planned_fusions
+                        for n in queue)
         if self.delay_delta is None and not unplanned:
             self._rejected += 1
             self._events.append(ProgressEvent(
@@ -717,10 +889,14 @@ class ElasticClusterRuntime:
             self._adopt(cand, T, reason="adopted_bounded_delay",
                         detail=f"win={win:.3f} max_delay={max_delay:.3f}")
             return
-        # regret fallback: keep incumbent entries, append new arrivals
+        # regret fallback: keep incumbent entries, append new arrivals;
+        # incumbent fusion assignments survive only while still applicable
         self._plan.update(fb_entries)
         for n, (start, _) in fb_entries.items():
             self._bounds.setdefault(n, start)
+        self._planned_fusions = {
+            n: h for n, h in self._planned_fusions.items()
+            if n in self._pending and h in self._running}
         self._rejected += 1
         detail = ("would delay past static start" if self.delay_delta is None
                   else f"win={win:.3f} < delta*max_delay="
@@ -736,6 +912,14 @@ class ElasticClusterRuntime:
                        self._plan[n][1])
              for n in sorted(self._plan)], 0.0, False, 0.0)
         moved = sum(d.moved_earlier for d in diff_schedules(old, cand))
+        # fusion-aware candidates assign some tasks to replica slots rather
+        # than exclusive GPUs: those get a fusion assignment (applied at the
+        # next _admit, re-checked against live capacity) instead of a plan
+        # entry. Their bounds stay — fusing never starts past a bound.
+        fused = dict(getattr(cand, "fused", {}) or {})
+        for n in fused:
+            self._plan.pop(n, None)
+        self._planned_fusions = fused
         for p in cand.placements:
             name = p.task.name
             self._plan[name] = (p.start, p.gpu_ids)
@@ -757,29 +941,37 @@ class ElasticClusterRuntime:
         for GPUs) are offered to live same-fuse-key replicas — the
         fuse-vs-exclusive decision: immediately placeable tasks place
         exclusively, blocked fusable tasks fuse."""
+        if self.fusion_planning and self._planned_fusions:
+            stale = self._apply_planned_fusions(T)
+            if stale:
+                # live capacity moved under the plan (host finished, budget
+                # taken): drop the stale assignments and re-solve so those
+                # names get exclusive placements (or a fresh fusion)
+                self._replan(T)
         reserved: set = set()
-        for name in sorted(self._pending,
-                           key=lambda n: (self._plan[n][0], n)):
+        placeable = [n for n in self._pending if n in self._plan]
+        for name in sorted(placeable, key=lambda n: (self._plan[n][0], n)):
             gpus = self._plan[name][1]
             if any(self._owner[g] is not None for g in gpus) or \
                     (set(gpus) & reserved):
                 reserved.update(gpus)
                 continue
             sub = self._by_name[name]
-            driver = sub.factory()
-            driver.start(T)
+            resumed = name in self._suspended
+            residual = max(self._plan_resid(name), _EPS)
+            driver = self._guest_driver(name, T)
             run = _Running(spec=sub.spec, driver=driver, gpu_ids=gpus,
-                           start=T, local_time=T,
-                           residual=sub.spec.duration)
+                           start=T, local_time=T, residual=residual)
             self._running[name] = run
             self._pending.discard(name)
             for g in gpus:
                 self._owner[g] = name
-            self._task_starts[name] = T
+            self._task_starts.setdefault(name, T)
             heapq.heappush(self._heap, (run.local_time, name))
             self._events.append(ProgressEvent(
                 kind=EventKind.TASK_STARTED, task=name, time=T,
-                detail=f"gpus={','.join(map(str, gpus))}"))
+                detail=("resumed " if resumed else "")
+                + f"gpus={','.join(map(str, gpus))}"))
         if self.colocate and self._pending and self._running:
             if self._try_fuse(T):
                 # fused tasks left the queue: re-solve what remains and
@@ -836,21 +1028,203 @@ class ElasticClusterRuntime:
                  for n in ok],
                 cap.replica_slots, cap.mem)
             for n in admitted:
-                sub = self._by_name[n]
-                driver = sub.factory()
-                driver.start(T)
-                w.attach(n, driver, sub.colo)
-                self._pending.discard(n)
-                self._plan.pop(n, None)
-                self._bounds.pop(n, None)
-                self._hosted[n] = host
-                self._task_starts[n] = T
+                self._fuse_attach(n, host, w, T)
                 cands.remove(n)
                 fused_any = True
-                self._events.append(ProgressEvent(
-                    kind=EventKind.TASK_FUSED, task=n, time=T,
-                    detail=f"host={host}"))
         return fused_any
+
+    def _fuse_attach(self, name: str, host: str,
+                     w: ColocatedReplicaDriver, T: float) -> None:
+        """Attach a pending task as a guest on a live replica. Preempted
+        guests re-fuse with their suspended driver (progress intact)."""
+        driver = self._guest_driver(name, T)
+        w.attach(name, driver, self._by_name[name].colo)
+        self._pending.discard(name)
+        self._plan.pop(name, None)
+        self._bounds.pop(name, None)
+        self._planned_fusions.pop(name, None)
+        self._hosted[name] = host
+        self._task_starts.setdefault(name, T)
+        self._events.append(ProgressEvent(
+            kind=EventKind.TASK_FUSED, task=name, time=T,
+            detail=f"host={host}"))
+
+    def _apply_planned_fusions(self, T: float) -> List[str]:
+        """Realize the adopted plan's fusion assignments against LIVE
+        capacity. Every soundness guard the opportunistic path enforces is
+        re-checked here (the plan was computed against projections that may
+        have drifted): fuse-key match, residual fits inside the replica's
+        post-refresh projected end, incumbent bound not passed, SS A.3+k2
+        cross-task admission. Returns the assignments that no longer hold,
+        which the caller drops and re-solves."""
+        stale: List[str] = []
+        for name in sorted(n for n in self._planned_fusions
+                           if n in self._pending):
+            host = self._planned_fusions[name]
+            run = self._running.get(host)
+            c = self._by_name[name].colo
+            cap = self._by_name[host].colo if host in self._by_name else None
+            if run is None or c is None or cap is None \
+                    or c.fuse_key != cap.fuse_key:
+                stale.append(name)
+                continue
+            if self._plan_resid(name) > run.residual + _EPS:
+                stale.append(name)
+                continue
+            bound = self._bounds.get(name)
+            if bound is not None and run.local_time > bound + _EPS:
+                stale.append(name)
+                continue
+            if not isinstance(run.driver, ColocatedReplicaDriver):
+                run.driver = ColocatedReplicaDriver(
+                    host, run.driver, cap,
+                    elapsed=run.local_time - run.start)
+            w = run.driver
+            req = ColoRequest(name, c.slots_needed, c.per_adapter_batch,
+                              c.seq_len, c.lora_rank)
+            if name not in admit_cross_task(w.resident_requests(), [req],
+                                            cap.replica_slots, cap.mem):
+                stale.append(name)
+                continue
+            self._fuse_attach(name, host, w, T)
+        for n in stale:
+            self._planned_fusions.pop(n, None)
+        return stale
+
+    # ------------------------------------------------------- rebalancing
+    def _rebalance(self, T: float) -> None:
+        """Slot-level preemption/migration: when a host's own queue regrew
+        relative to the shrunken replica, a guest whose residual extends
+        the replica past the host's OWN projected end is (a) migrated onto
+        another same-fuse-key replica that completes it no later, or
+        (b) preempted back to the pending queue when an exclusive restart
+        completes it no later than staying put. Both moves free the
+        replica's GPUs at the host's own end for the waiting queue without
+        ever delaying the moved guest past its in-place projection, so the
+        fusion-time bound (<= static makespan) survives every move. Runs
+        only under queue pressure — with nothing waiting, an extended
+        replica harms nobody."""
+        if not (self._pending or self._future):
+            return
+        for host in sorted(self._running):
+            run = self._running.get(host)
+            if run is None or not isinstance(run.driver,
+                                             ColocatedReplicaDriver):
+                continue
+            w = run.driver
+            host_end = run.local_time + w.residual_of(host)
+            for guest in sorted(w.hosted_names()):
+                if w.end_of(guest) is not None:
+                    continue                    # already finished in place
+                g_res = w.residual_of(guest)
+                stay_end = run.local_time + g_res
+                if stay_end <= host_end + _EPS:
+                    continue                    # guest doesn't extend replica
+                dest = self._find_migration_dest(host, guest, g_res,
+                                                 stay_end)
+                if dest is not None:
+                    self._migrate_guest(guest, host, dest, T)
+                    continue
+                if self._find_migration_dest(host, guest, g_res, stay_end,
+                                             ignore_skew=True) is not None:
+                    # a destination is viable except that its local clock
+                    # runs ahead of the host's (chunk skew) — the no-delay
+                    # guard will pass at the host's next chunk boundary, so
+                    # hold the guest rather than preempt (preemption only
+                    # reorders work on the same GPUs; migration removes it)
+                    continue
+                self._maybe_preempt(guest, host, run, g_res, stay_end, T)
+
+    def _find_migration_dest(self, host: str, guest: str, g_res: float,
+                             stay_end: float, *,
+                             ignore_skew: bool = False) -> Optional[str]:
+        """A live replica that can absorb the guest without extending its
+        own occupancy, without delaying the guest past its in-place
+        projection, and without the guest overhanging the destination
+        owner's own end (else the move would just re-trigger there).
+        ``ignore_skew`` drops the no-delay guard, answering "would a
+        destination accept the guest once the clocks align?"."""
+        c = self._by_name[guest].colo
+        if c is None:
+            return None
+        for dest in sorted(self._running):
+            if dest == host:
+                continue
+            drun = self._running[dest]
+            cap = self._by_name[dest].colo
+            if cap is None or cap.fuse_key != c.fuse_key:
+                continue
+            if g_res > drun.residual + _EPS:
+                continue                 # would extend the destination
+            if not ignore_skew and drun.local_time + g_res > stay_end + _EPS:
+                continue                 # would delay the guest
+            if isinstance(drun.driver, ColocatedReplicaDriver):
+                if g_res > drun.driver.residual_of(dest) + _EPS:
+                    continue             # would overhang the dest owner
+                res = drun.driver.resident_requests()
+            else:
+                res = self._resident_requests_of(dest, drun)
+            req = ColoRequest(guest, c.slots_needed, c.per_adapter_batch,
+                              c.seq_len, c.lora_rank)
+            if guest in admit_cross_task(res, [req], cap.replica_slots,
+                                         cap.mem):
+                return dest
+        return None
+
+    def _migrate_guest(self, guest: str, host: str, dest: str,
+                       T: float) -> None:
+        run = self._running[host]
+        assert isinstance(run.driver, ColocatedReplicaDriver)
+        driver = run.driver.detach(guest)
+        self._refresh_residual(run)          # post-departure projected end
+        drun = self._running[dest]
+        cap = self._by_name[dest].colo
+        if not isinstance(drun.driver, ColocatedReplicaDriver):
+            drun.driver = ColocatedReplicaDriver(
+                dest, drun.driver, cap,
+                elapsed=drun.local_time - drun.start)
+        drun.driver.attach(guest, driver, self._by_name[guest].colo)
+        self._hosted[guest] = dest
+        self._migrated_n += 1
+        self._events.append(ProgressEvent(
+            kind=EventKind.TASK_MIGRATED, task=guest, time=T,
+            detail=f"{host}->{dest}"))
+
+    def _maybe_preempt(self, guest: str, host: str, run: "_Running",
+                       g_res: float, stay_end: float, T: float) -> None:
+        """Evict the guest back to the queue only when an exclusive restart
+        completes it no later than staying put (typically: GPUs freed since
+        it fused). The evicted guest leaves with an incumbent plan entry at
+        its projected restart, so subsequent replans can only move it
+        earlier (strict mode) or must pay for any delay (bounded mode)."""
+        w = run.driver
+        assert isinstance(w, ColocatedReplicaDriver)
+        sky = self._proj_skyline(T)
+        # source GPUs free when the replica's REMAINING residents end
+        others = [w.residual_of(x) for x in w.sub_names()
+                  if x != guest and w.end_of(x) is None]
+        rem_end = run.local_time + max(others, default=0.0)
+        for g in run.gpu_ids:
+            sky[g] = max(rem_end, T)
+        gpus = self._by_name[guest].spec.gpus
+        if gpus > len(sky):
+            return
+        order = sorted(range(self.G), key=lambda g: (sky[g], g))
+        ids = tuple(sorted(order[:gpus]))
+        start = max(max(sky[g] for g in ids), T)
+        if start + g_res > stay_end + _EPS:
+            return                           # restart would delay the guest
+        driver = w.detach(guest)
+        self._refresh_residual(run)
+        self._hosted.pop(guest, None)
+        self._suspended[guest] = _Suspended(driver=driver, residual=g_res)
+        self._pending.add(guest)
+        self._plan[guest] = (start, ids)
+        self._bounds[guest] = start
+        self._preempted_n += 1
+        self._events.append(ProgressEvent(
+            kind=EventKind.TASK_PREEMPTED, task=guest, time=T,
+            detail=f"host={host} residual={g_res:.3f}"))
 
     # ---------------------------------------------------------- observability
     @property
@@ -892,7 +1266,9 @@ class ElasticClusterRuntime:
             task_starts=dict(self._task_starts),
             task_ends=dict(self._task_ends),
             cancelled=tuple(sorted(self._cancel_set)),
-            colocated=dict(self._hosted))
+            colocated=dict(self._hosted),
+            preemptions=self._preempted_n,
+            migrations=self._migrated_n)
 
     # ------------------------------------------------------------------ run
     def run(self, initial: Optional[Schedule] = None) -> RuntimeReport:

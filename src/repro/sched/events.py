@@ -8,7 +8,14 @@ Two layers live here:
     shrink a task's residual duration — warmup-selection drops, divergence
     and overfitting exits, per-job completions, task completion — is one of
     these events, which is what makes replanning event-driven rather than
-    poll-driven.
+    poll-driven. Placement transitions are events too: ``TASK_FUSED`` (a
+    pending task co-located onto a live replica), ``TASK_PREEMPTED`` (a
+    guest evicted back to the pending queue, its live adapter state
+    suspended bit-exactly), and ``TASK_MIGRATED`` (a guest moved onto a
+    different replica mid-task). Contract: the event log is the *complete*
+    audit trail of every capacity decision the runtime makes — a consumer
+    replaying starts/fusions/preemptions/migrations/completions can
+    reconstruct GPU ownership at any virtual time.
   * ``ClusterSimulator``: the original coarse (task-granularity)
     discrete-event simulator over the same solver the engine uses, kept for
     the scheduler benchmarks (Figs. 5/12). The elastic runtime in
@@ -34,6 +41,8 @@ class EventKind(enum.Enum):
     JOB_EXITED = "job_exited"               # divergence / overfit / budget
     TASK_PROGRESS = "task_progress"         # chunk heartbeat (no shrink)
     TASK_FUSED = "task_fused"               # co-located onto a live replica
+    TASK_PREEMPTED = "task_preempted"       # guest evicted back to the queue
+    TASK_MIGRATED = "task_migrated"         # guest moved to another replica
     TASK_COMPLETED = "task_completed"
     TASK_CANCELLED = "task_cancelled"       # tenant cancel (frees capacity)
     REPLAN = "replan"                       # runtime re-solved the queue

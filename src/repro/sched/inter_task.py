@@ -19,13 +19,35 @@ optimization directly:
 
 Solving is sub-second (paper: "< 1 s for all tested instances"), which is
 what makes event-driven replanning viable (§7.2).
+
+Fusion-aware planning (co-location as a first-class plan concept): the
+solvers above plan in *exclusive-GPU space* — every task occupies its own
+g_i GPUs. Since the ragged/rank-local refactors, one frozen-backbone
+replica can host adapter slots from several tasks, so the plan vocabulary
+is lifted: ``FusionProfile`` describes a task's demand on a shared replica
+(fuse key, concurrent slots, per-step tokens, rank-weighted FLOP-tokens)
+and ``ReplicaState`` a live replica's capacity (slot headroom plus the
+remaining §A.3 + k2 memory budget in bytes). ``plan_fused`` places tasks
+*into replica slots* first — greedy decreasing-cost, mirroring cross-task
+admission — and hands only the un-fusable remainder to list/LPT/B&B over
+the GPU skyline, so the lower bound and the makespan the adoption rule
+prices are computed against a plan that SEES co-location instead of
+discovering it opportunistically at admission time.
+
+Contract (what callers may rely on): ``plan_fused`` never extends a
+replica's projected occupancy (a task fuses only when its whole residual
+fits before the replica's projected end and the slot/memory budgets hold),
+and its projected makespan is never worse than the exclusive plan over the
+same queue — fusing only removes tasks from the GPU skyline. Together with
+the runtime's adoption rule this preserves the elastic <= static exclusive
+makespan guarantee under fusion-aware planning.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,6 +263,163 @@ class PlacementDelta:
     def moved_earlier(self) -> bool:
         return (self.old_start is not None and self.new_start is not None
                 and self.new_start < self.old_start - 1e-9)
+
+
+# --------------------------------------------------------------------------
+# Fusion-aware planning: place tasks INTO replica slots (token/rank budgets)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FusionProfile:
+    """A task's demand on a shared frozen-backbone replica, in the plan
+    vocabulary: tasks whose ``fuse_key`` equals a replica's may be placed
+    into that replica's adapter slots instead of onto exclusive GPUs.
+    ``slots`` is the task's concurrent-slot upper bound, ``tokens`` its
+    per-step token footprint bound (slots * b * seq — what the token-linear
+    §A.3 memory model M_hat budgets), and ``rank_tokens`` the rank-weighted
+    FLOP-token bound (tokens * true rank — the k2 term; bill r_max when the
+    rank is unknown)."""
+    fuse_key: Tuple
+    slots: int
+    tokens: float
+    rank_tokens: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaState:
+    """A live shared-backbone replica as the planner sees it.
+
+    ``projected_end`` is the absolute virtual time the replica is projected
+    to free its GPU set (host residual — refreshed on guest departures so
+    the planner never budgets against a stale occupancy), ``slot_headroom``
+    the physical adapter slots not claimed by residents' future-use bounds,
+    and ``mem_budget`` the remaining §A.3 + k2 memory budget in BYTES:
+    capacity * margin - k0 - k1 * resident_tokens - k2 * resident_rank_
+    tokens. A candidate with profile p costs ``k1 * p.tokens + k2 *
+    p.rank_tokens`` bytes — placing into slots is exactly the
+    ``fits_ranked`` admission check, linearized so the solver needs no
+    memory-model object."""
+    host: str
+    fuse_key: Tuple
+    gpu_ids: Tuple[int, ...]
+    projected_end: float
+    slot_headroom: int
+    mem_budget: float = float("inf")
+    k1: float = 0.0
+    k2: float = 0.0
+
+    def fits(self, p: FusionProfile, now: float, duration: float) -> bool:
+        """Can ``p`` fuse here without extending the replica? Key match,
+        whole residual inside the projected occupancy, slot headroom, and
+        the linearized memory budget."""
+        if p.fuse_key != self.fuse_key:
+            return False
+        if now + duration > self.projected_end + 1e-9:
+            return False
+        if p.slots > self.slot_headroom:
+            return False
+        return self.cost(p) <= self.mem_budget + 1e-9
+
+    def cost(self, p: FusionProfile) -> float:
+        return self.k1 * p.tokens + self.k2 * p.rank_tokens
+
+
+@dataclasses.dataclass
+class FusedSchedule(Schedule):
+    """A Schedule whose vocabulary includes co-location: ``fused`` maps
+    task name -> host replica for tasks placed INTO replica slots (they
+    start at plan time and have no exclusive placement); ``placements``
+    covers only the exclusive remainder. ``makespan`` accounts for both:
+    max over exclusive ends and fused-host projected ends."""
+    fused: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def validate_fused(self, G: int,
+                       replicas: Sequence[ReplicaState]) -> None:
+        """Exclusive part validates as usual; every fused task's host must
+        be a known replica and no task may appear in both parts."""
+        self.validate(G)
+        by_host = {r.host: r for r in replicas}
+        placed = {p.task.name for p in self.placements}
+        for name, host in self.fused.items():
+            assert host in by_host, (name, host)
+            assert name not in placed, f"{name} both fused and placed"
+
+
+def lower_bound_fused(tasks: Sequence[TaskSpec], G: int,
+                      free_at: Sequence[float],
+                      replicas: Sequence[ReplicaState],
+                      profiles: Dict[str, FusionProfile],
+                      now: float = 0.0) -> float:
+    """Fusion-aware makespan lower bound. A task that could fuse into SOME
+    replica (individually — ignoring contention) may cost zero exclusive
+    GPU area and finish by that replica's projected end, so only the
+    provably un-fusable tasks contribute to the exclusive-space bound;
+    every fusable task still bounds from below via min(replica end it fits,
+    its exclusive completion). Sound by construction: every feasible
+    fusion-aware plan is feasible for this relaxation."""
+    exclusive: List[TaskSpec] = []
+    floor = max(now, 0.0)
+    for t in tasks:
+        p = profiles.get(t.name)
+        hosts = [r for r in replicas
+                 if p is not None and t.release <= now + 1e-9
+                 and r.fits(p, now, t.duration)]
+        if not hosts:
+            exclusive.append(t)
+        else:
+            # finishes no earlier than its own duration, wherever it lands
+            floor = max(floor, max(now, t.release) + t.duration)
+    return max(lower_bound(exclusive, G, free_at), floor)
+
+
+def plan_fused(tasks: Sequence[TaskSpec], G: int,
+               free_at: Sequence[float],
+               replicas: Sequence[ReplicaState],
+               profiles: Dict[str, FusionProfile],
+               now: float = 0.0, method: str = "cp",
+               bnb_max_n: int = 9) -> FusedSchedule:
+    """Fusion-aware residual solve: place tasks INTO replica slots first,
+    then solve the exclusive remainder over the GPU skyline.
+
+    Fusion assignment is greedy decreasing memory-cost (ties by name),
+    mirroring ``admit_cross_task``'s decreasing-width order; each
+    assignment decrements the replica's slot headroom and linearized
+    memory budget so contention is respected. Only tasks already released
+    (``release <= now``) fuse — a future arrival has no driver to attach.
+    The remainder goes through ``solve_residual`` (exact B&B for small
+    queues, LPT beyond ``bnb_max_n``).
+
+    The projected makespan of the returned plan is never worse than the
+    exclusive plan over the same queue: fused tasks leave the GPU skyline
+    untouched and never extend a replica's projected occupancy."""
+    budgets = {r.host: [r.slot_headroom, r.mem_budget] for r in replicas}
+    fused: Dict[str, str] = {}
+    def width(t: TaskSpec) -> float:
+        p = profiles.get(t.name)
+        return p.tokens + p.rank_tokens if p is not None else 0.0
+
+    order = sorted(tasks, key=lambda t: (-width(t), t.name))
+    for t in order:
+        p = profiles.get(t.name)
+        if p is None or t.release > now + 1e-9:
+            continue
+        for r in sorted(replicas, key=lambda r: r.projected_end):
+            slots_left, mem_left = budgets[r.host]
+            trial = dataclasses.replace(r, slot_headroom=slots_left,
+                                        mem_budget=mem_left)
+            if trial.fits(p, now, t.duration):
+                fused[t.name] = r.host
+                budgets[r.host][0] -= p.slots
+                budgets[r.host][1] -= r.cost(p)
+                break
+    rest = [t for t in tasks if t.name not in fused]
+    sched = solve_residual(rest, G, free_at, method, bnb_max_n)
+    mk = sched.makespan
+    for name, host in fused.items():
+        mk = max(mk, next(r.projected_end for r in replicas
+                          if r.host == host))
+    return FusedSchedule(sched.placements, mk, sched.optimal,
+                         sched.solve_time_s, fused=fused)
 
 
 def diff_schedules(old: Schedule, new: Schedule) -> List[PlacementDelta]:

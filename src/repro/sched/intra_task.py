@@ -28,6 +28,16 @@ footprint scales with its TRUE rank, not the padded r_max. A fitted
 requests that don't know their rank are charged r_max — the historical
 Z*r_max padded accounting, now the pessimistic fallback rather than the
 only option.
+
+Layer contract: this module is the single source of truth for "does this
+adapter set fit this replica" — ``MemoryModel.fits_ranked`` (k0 + k1*tokens
++ k2*rank_tokens <= capacity*safety_margin) is the invariant every
+admission path checks: intra-task backfill (``ExecutorSlots``), cross-task
+fusion (``admit_cross_task``), and — linearized into
+``ReplicaState.mem_budget`` — the fusion-aware inter-task planner
+(``plan_fused`` in inter_task.py). The three layers budgeting the same
+quantity is what makes a plan-level fusion decision realizable at
+admission time.
 """
 from __future__ import annotations
 

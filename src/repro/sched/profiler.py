@@ -10,6 +10,13 @@ On this CPU container, two estimators coexist:
   * ``analytic_step_time``: roofline-based estimate from FLOPs and the
     target-hardware constants (used for production-scale what-if schedules
     and the scheduler benchmarks).
+
+Layer contract: estimates produced here are UPPER BOUNDS that only shrink
+as observation replaces analysis (the ProfileStore feedback loop) — the
+elastic runtime's adoption rule and the fusion anomaly guard both assume
+residual durations never grow, and a replica's projected end must be
+recomputed from live residuals whenever a guest departs (eviction,
+migration, cancel), never reused from admission time.
 """
 from __future__ import annotations
 

@@ -12,8 +12,10 @@ from repro.sched.cluster import (ElasticClusterRuntime, SimulatedTaskDriver,
                                  execute_static, sim_colo_spec,
                                  sim_task_spec)
 from repro.sched.events import EventKind, ProgressEvent
-from repro.sched.inter_task import (TaskSpec, diff_schedules, list_schedule,
-                                    solve, solve_residual)
+from repro.sched.inter_task import (FusionProfile, ReplicaState, TaskSpec,
+                                    diff_schedules, list_schedule,
+                                    lower_bound_fused, plan_fused, solve,
+                                    solve_residual)
 
 
 def make_task(name, *, K, Z, total, warm, step_time, gpus, exits):
@@ -684,6 +686,220 @@ def test_property_ranklocal_colocation_never_worse_than_static(seed, G):
     plan = solve(specs, G, "cp")
     static = execute_static(plan, G, {s.name: f for s, f, _ in tasks})
     rt = ElasticClusterRuntime(G, colocate=True)
+    for s, f, c in tasks:
+        rt.submit(s, f, colo=c)
+    rep = rt.run(initial=plan)
+    assert rep.makespan <= static.makespan + 1e-9
+    rep.realized.validate(G)
+    assert set(rep.results) == {s.name for s, _, _ in tasks}
+
+
+# ---------------------------------------------------------------------------
+# fusion-aware planning + slot-level preemption/migration
+# ---------------------------------------------------------------------------
+
+def test_plan_fused_places_into_replica_slots():
+    """plan_fused assigns a fitting task to a replica slot, leaves the
+    rest exclusive, and never projects worse than the exclusive plan."""
+    t_fit = TaskSpec("fit", duration=5.0, gpus=2)
+    t_big = TaskSpec("big", duration=20.0, gpus=2)
+    rep = ReplicaState(host="h", fuse_key=("k",), gpu_ids=(0, 1),
+                       projected_end=10.0, slot_headroom=2)
+    profiles = {"fit": FusionProfile(("k",), slots=1, tokens=64.0),
+                "big": FusionProfile(("k",), slots=1, tokens=64.0)}
+    sched = plan_fused([t_fit, t_big], 4, [0.0] * 4, [rep], profiles)
+    assert sched.fused == {"fit": "h"}          # fits inside projected end
+    assert {p.task.name for p in sched.placements} == {"big"}
+    sched.validate_fused(4, [rep])
+    excl = solve_residual([t_fit, t_big], 4, [0.0] * 4, "cp", 9)
+    assert sched.makespan <= excl.makespan + 1e-9
+    assert lower_bound_fused([t_fit, t_big], 4, [0.0] * 4, [rep],
+                             profiles) <= sched.makespan + 1e-9
+
+
+def test_plan_fused_respects_budgets():
+    """Each budget dimension independently blocks fusion: key mismatch,
+    slot headroom, token/rank memory budget, projected-end overhang."""
+    t = TaskSpec("t", duration=5.0, gpus=2)
+    prof = {"t": FusionProfile(("k",), slots=1, tokens=100.0,
+                               rank_tokens=400.0)}
+
+    def rep(**kw):
+        base = dict(host="h", fuse_key=("k",), gpu_ids=(0, 1),
+                    projected_end=10.0, slot_headroom=2,
+                    mem_budget=float("inf"), k1=0.0, k2=0.0)
+        base.update(kw)
+        return ReplicaState(**base)
+
+    assert plan_fused([t], 4, [0.0] * 4, [rep()], prof).fused == {"t": "h"}
+    for blocked in (rep(fuse_key=("other",)),        # key mismatch
+                    rep(slot_headroom=0),            # no slot
+                    rep(projected_end=3.0),          # would extend replica
+                    rep(mem_budget=50.0, k1=1.0),    # token budget
+                    rep(mem_budget=300.0, k2=1.0)):  # rank-token budget
+        assert plan_fused([t], 4, [0.0] * 4, [blocked], prof).fused == {}
+
+
+def fusionplan_workload(G=2):
+    return colo_workload(G)
+
+
+def run_fusionplan(tasks, G, fusion_planning, migrate=False):
+    specs = [s for s, _, _ in tasks]
+    plan = solve(specs, G, "cp")
+    static = execute_static(plan, G, {s.name: f for s, f, _ in tasks})
+    rt = ElasticClusterRuntime(G, colocate=True,
+                               fusion_planning=fusion_planning,
+                               migrate=migrate)
+    for s, f, c in tasks:
+        rt.submit(s, f, colo=c)
+    return plan, static, rt.run(initial=plan)
+
+
+def test_fusion_planning_fuses_and_matches_guarantee():
+    """With fusion_planning the solver itself assigns pending tasks to
+    replica slots; the result keeps elastic <= static and delivers every
+    task's result."""
+    G = 2
+    _, static, rep = run_fusionplan(fusionplan_workload(G), G,
+                                    fusion_planning=True, migrate=True)
+    assert rep.colocated == {"s1": "host", "s2": "host"}
+    assert EventKind.TASK_FUSED in {e.kind for e in rep.events}
+    assert rep.makespan <= static.makespan + 1e-9
+    assert set(rep.results) == {"host", "hog", "s1", "s2"}
+    rep.realized.validate(G)
+
+
+def _mig_task(rt, name, *, K, Z, total, warm, gpus, exits=None, colo=True,
+              at=0.0, key=("arch", 2, "ce")):
+    spec, factory = make_task(name, K=K, Z=Z, total=total, warm=warm,
+                              step_time=1.0, gpus=gpus, exits=exits or {})
+    c = sim_colo_spec(key, K=K, Z=Z, replica_slots=8) if colo else None
+    rt.submit(spec, factory, at=at, colo=c)
+
+
+def test_migration_moves_guest_to_sibling_replica():
+    """A guest whose collapsed host would otherwise pin its GPUs migrates
+    to a same-fuse-key sibling replica, freeing the host's GPUs for the
+    queue — without delaying the guest."""
+    rt = ElasticClusterRuntime(4, fusion_planning=True, migrate=True,
+                               delay_delta=2.0)
+    _mig_task(rt, "a", K=8, Z=4, total=80, warm=10, gpus=2,
+              exits={j: 11 for j in range(8)})     # host collapses early
+    _mig_task(rt, "b", K=8, Z=4, total=80, warm=10, gpus=2)  # sibling
+    _mig_task(rt, "g", K=4, Z=4, total=60, warm=10, gpus=2)  # the guest
+    _mig_task(rt, "d", K=4, Z=2, total=30, warm=10, gpus=2,
+              colo=False, at=5.0)                  # queue pressure
+    rep = rt.run()
+    assert rep.migrations == 1
+    mig = [e for e in rep.events if e.kind is EventKind.TASK_MIGRATED]
+    assert [e.task for e in mig] == ["g"] and "a->b" in mig[0].detail
+    assert rep.colocated["g"] == "b"               # final host updated
+    # the freed GPUs went to the queued task at the migration instant
+    assert rep.task_starts["d"] == pytest.approx(mig[0].time)
+    # migration never delayed the guest: it finished with continuous
+    # progress (end - start == its solo duration under its exits)
+    assert set(rep.results) == {"a", "b", "g", "d"}
+
+    # baseline without migration: the queued task waits for the guest
+    rt0 = ElasticClusterRuntime(4, fusion_planning=True, migrate=False,
+                                delay_delta=2.0)
+    _mig_task(rt0, "a", K=8, Z=4, total=80, warm=10, gpus=2,
+              exits={j: 11 for j in range(8)})
+    _mig_task(rt0, "b", K=8, Z=4, total=80, warm=10, gpus=2)
+    _mig_task(rt0, "g", K=4, Z=4, total=60, warm=10, gpus=2)
+    _mig_task(rt0, "d", K=4, Z=2, total=30, warm=10, gpus=2,
+              colo=False, at=5.0)
+    rep0 = rt0.run()
+    assert rep.task_starts["d"] < rep0.task_starts["d"] - 1e-9
+    assert rep.makespan <= rep0.makespan + 1e-9
+    assert rep.task_ends["g"] <= rep0.task_ends["g"] + 1e-9
+
+
+def test_preemption_resumes_with_progress_intact():
+    """With no sibling replica, the overhanging guest is preempted and
+    resumed exclusively — continuing from its suspended progress, never
+    restarting, and never finishing later than staying fused."""
+    rt = ElasticClusterRuntime(4, fusion_planning=True, migrate=True,
+                               delay_delta=2.0)
+    _mig_task(rt, "a", K=8, Z=4, total=80, warm=10, gpus=2,
+              exits={j: 11 for j in range(8)})
+    _mig_task(rt, "c", K=2, Z=2, total=90, warm=10, gpus=2, colo=False)
+    _mig_task(rt, "g", K=4, Z=4, total=60, warm=10, gpus=2)
+    _mig_task(rt, "d", K=4, Z=2, total=30, warm=10, gpus=2,
+              colo=False, at=6.0)
+    rep = rt.run()
+    assert rep.preemptions == 1
+    pre = [e for e in rep.events if e.kind is EventKind.TASK_PREEMPTED]
+    assert [e.task for e in pre] == ["g"]
+    resumed = [e for e in rep.events
+               if e.kind is EventKind.TASK_STARTED and e.task == "g"
+               and "resumed" in e.detail]
+    assert len(resumed) == 1
+    # continuous progress: completion == resume point + suspended residual
+    assert rep.task_ends["g"] == pytest.approx(resumed[0].time + 40.0)
+    # task_starts keeps the ORIGINAL start (it fused at t=0)
+    assert rep.task_starts["g"] == pytest.approx(0.0)
+    assert set(rep.results) == {"a", "c", "g", "d"}
+
+
+def test_residual_refreshed_after_guest_departure():
+    """BUGFIX: a hosted guest's cancellation must immediately shrink the
+    host's projected-end residual — the anomaly guard and the skyline
+    must see post-departure occupancy, not the stale fused projection."""
+    G = 1
+    rt = ElasticClusterRuntime(G, colocate=True)
+    key = ("k", 1, "sft")
+    # host collapses early (all kept jobs exit at step 12 -> done ~t=22)
+    spec_h, fac_h = make_task("host", K=8, Z=4, total=100, warm=10,
+                              step_time=1.0, gpus=1,
+                              exits={j: 12 for j in range(8)})
+    # long guest pins the replica's projected end; short guest keeps the
+    # replica alive after the long one is cancelled
+    spec_g, fac_g = make_task("g", K=2, Z=2, total=90, warm=10,
+                              step_time=1.0, gpus=1, exits={})
+    spec_g2, fac_g2 = make_task("g2", K=2, Z=2, total=50, warm=10,
+                                step_time=1.0, gpus=1, exits={})
+    rt.submit(spec_h, fac_h, colo=sim_colo_spec(key, K=8, Z=4,
+                                                replica_slots=8))
+    rt.submit(spec_g, fac_g, colo=sim_colo_spec(key, K=2, Z=2))
+    rt.submit(spec_g2, fac_g2, colo=sim_colo_spec(key, K=2, Z=2))
+    rt.begin()
+    while rt.now < 30.0:                        # past the host's collapse
+        assert rt.step()
+    assert rt._hosted.get("g") == "host"        # guests fused at t=0
+    assert rt._hosted.get("g2") == "host"
+    before = rt._running["host"].residual       # pinned by g (ends ~90)
+    rt.cancel("g")
+    while not rt.is_cancelled("g"):
+        assert rt.step()
+    run = rt._running["host"]
+    est = run.driver.residual_estimate()        # g-free projection
+    assert run.residual == pytest.approx(min(est, before))
+    assert run.residual < before - 1e-9         # the long guest left
+    while rt.step():
+        pass
+    rep = rt.report()
+    assert {"host", "g2"} <= set(rep.results)
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 10_000), G=st.sampled_from([2, 4]))
+def test_property_fusion_planning_never_worse_than_static(seed, G):
+    """Acceptance property: fusion-AWARE elastic plans (planned fusion +
+    migration enabled) never exceed the static exclusive makespan."""
+    rng = np.random.default_rng(seed)
+    tasks = []
+    for i, (spec, factory) in enumerate(random_workload(rng, G)):
+        colo = None
+        if rng.random() < 0.7:
+            drv = factory()
+            colo = sim_colo_spec(("shared", spec.gpus), K=drv.K, Z=drv.Z)
+        tasks.append((spec, factory, colo))
+    specs = [s for s, _, _ in tasks]
+    plan = solve(specs, G, "cp")
+    static = execute_static(plan, G, {s.name: f for s, f, _ in tasks})
+    rt = ElasticClusterRuntime(G, fusion_planning=True, migrate=True)
     for s, f, c in tasks:
         rt.submit(s, f, colo=c)
     rep = rt.run(initial=plan)

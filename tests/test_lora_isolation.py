@@ -398,3 +398,80 @@ def test_ranklocal_slot_ranks_tracked(exec_env):
     for lc in (lc_a, lc_b):
         for mon in lc.monitors.values():
             assert mon.steps_trained == 2
+
+
+# ---------------------------------------------------------------------------
+# SlotSnapshot migration: suspend on one replica, resume on another
+# ---------------------------------------------------------------------------
+
+def _drive(ex, lcs, steps=None):
+    """Minimal coordinator (what run_colocated does, but stoppable mid-run
+    so a task can be suspended between boundaries)."""
+    done = 0
+    while any(not lc.done for lc in lcs):
+        live = [lc for lc in lcs if not lc.done]
+        n = max(min(min(lc.steps_until_boundary() for lc in live),
+                    ex.eval_every), 1)
+        ex.run_steps(n)
+        for lc in live:
+            lc.on_steps(n)
+        done += n
+        if steps is not None and done >= steps:
+            return
+
+
+def _hists(lc):
+    return {j: (tuple(m.val_hist), tuple(m.raw_train_hist))
+            for j, m in lc.monitors.items()}
+
+
+def test_migration_across_replicas_bitwise_equal(exec_env):
+    """The migration primitive end to end: a task mid-training on replica 1
+    is suspended (SlotSnapshot per resident job), restored on replica 2
+    that already hosts a DIFFERENT resident mix (so the physical slots
+    differ), and trained to completion — its train/val loss histories and
+    best-val result are bitwise identical to never migrating."""
+    cfg, params, ds_a, ds_b = exec_env
+    ds_c = make_task_dataset("task-c", cfg.vocab_size, seq_len=16,
+                             num_train=32, num_val=8, difficulty=0.4,
+                             seed=3)
+
+    def make_ex():
+        return SharedBackboneExecutor(cfg, params, Z=4, per_adapter_batch=2,
+                                      eval_every=2, seed=0)
+
+    # solo baseline: A never migrates (co-located with B throughout)
+    ex0 = make_ex()
+    a0 = _lifecycle(ex0, "A", ds_a, 3)
+    b0 = _lifecycle(ex0, "B", ds_b, 4)
+    run_colocated(ex0, [a0, b0])
+    ref = _hists(a0)
+
+    # migration run: A starts on replica 1 (with B), moves mid-continue to
+    # replica 2 where C is already mid-flight on different physical slots
+    ex1, ex2 = make_ex(), make_ex()
+    A = _lifecycle(ex1, "A", ds_a, 3)
+    B = _lifecycle(ex1, "B", ds_b, 4)
+    C = _lifecycle(ex2, "C", ds_c, 5)
+    ex2.add_task(C)
+    C.begin()
+    _drive(ex2, [C], steps=4)           # C occupies replica 2's low slots
+    ex1.add_task(A)
+    ex1.add_task(B)
+    A.begin()
+    B.begin()
+    _drive(ex1, [A, B], steps=4)        # A mid-flight on replica 1
+    slots_before = {j: s for j, (_, s) in A.resident.items()}
+    A.suspend()
+    assert ex2.can_admit_task(A)        # capacity check works while suspended
+    A.resume(ex2)
+    slots_after = {j: s for j, (_, s) in A.resident.items()}
+    assert set(slots_before.values()) != set(slots_after.values())
+    _drive(ex2, [A, C])
+    _drive(ex1, [B])
+    assert _hists(A) == ref             # bitwise: tuples of floats
+    assert A.result().best_val == a0.result().best_val
+    assert A.result().best_job == a0.result().best_job
+    # the bystanders were untouched too
+    assert np.isfinite(C.result().best_val)
+    assert np.isfinite(B.result().best_val)
