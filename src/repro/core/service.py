@@ -40,7 +40,7 @@ from repro.core.early_exit import EarlyExitConfig
 from repro.sched import profiler
 from repro.sched.cluster import (ColocationSpec, ElasticClusterRuntime,
                                  RuntimeReport, TaskDriver)
-from repro.sched.events import ProgressEvent
+from repro.sched.events import EventKind, ProgressEvent
 from repro.sched.inter_task import Schedule, TaskSpec
 
 
@@ -82,6 +82,7 @@ class _TaskMeta:
     profile_key: Optional[Tuple]
     driver: Optional[TaskDriver] = None
     tenant: str = "default"
+    colo: Optional[ColocationSpec] = None   # fuse key for serve metadata
 
 
 class TaskHandle:
@@ -175,7 +176,8 @@ class TuningService:
                  engine=None, colocate: bool = True,
                  fusion_planning: bool = True, migrate: bool = True,
                  profile_path: Optional[str] = None,
-                 max_tasks_per_tenant: Optional[int] = None):
+                 max_tasks_per_tenant: Optional[int] = None,
+                 serve_dir: Optional[str] = None):
         if profile_store is None and profile_path is not None:
             # persistence across sessions (ROADMAP service hardening):
             # feedback observed by earlier service processes seeds this one
@@ -206,6 +208,11 @@ class TuningService:
             colocate=colocate, fusion_planning=colocate and fusion_planning,
             migrate=colocate and migrate)
         self.max_tasks_per_tenant = max_tasks_per_tenant
+        # tune-to-serve: completed tasks' winning adapters are checkpointed
+        # under serve_dir and auto-published to an attached serving frontend
+        self.serve_dir = serve_dir
+        self.serving: Optional[Any] = None
+        self._ckpt_paths: Dict[str, str] = {}
         self._meta: Dict[str, _TaskMeta] = {}
         self._handles: Dict[str, TaskHandle] = {}
         self._recorded: set = set()
@@ -280,7 +287,7 @@ class TuningService:
                     profile_key, spec.duration))
         meta = _TaskMeta(spec=spec, unscaled_duration=unscaled,
                          submitted_at=max(at, self.now),
-                         profile_key=profile_key, tenant=tenant)
+                         profile_key=profile_key, tenant=tenant, colo=colo)
 
         def wrapped() -> TaskDriver:
             drv = driver_factory()
@@ -291,6 +298,26 @@ class TuningService:
         self._meta[name] = meta
         handle = TaskHandle(self, name)
         self._handles[name] = handle
+        return handle
+
+    def attach_serving(self, frontend, *, name: str = "serve/replica-0",
+                       gpus: int = 1, horizon_s: float = 3600.0,
+                       chunk_s: float = 60.0, at: float = 0.0) -> TaskHandle:
+        """Admit a serving replica as a first-class cluster resident: the
+        replica's GPUs enter the planner's ownership / projected-skyline
+        accounting as an ordinary task holding a finite serving lease
+        (``horizon_s`` virtual seconds; retire early via the handle's
+        ``cancel()``). Also registers ``frontend`` as the tune-to-serve
+        target: every completed task's winning adapter is auto-published
+        to it (from the durable ``serve_dir`` artifact when configured)."""
+        from repro.serve.driver import ServingReplicaDriver, serving_spec
+        spec = serving_spec(name, gpus, horizon_s, release=at)
+        handle = self.submit_spec(
+            spec,
+            lambda: ServingReplicaDriver(name, horizon_s=horizon_s,
+                                         chunk_s=chunk_s, frontend=frontend),
+            at=at, profile_key=None, scale_duration=False)
+        self.serving = frontend
         return handle
 
     def cancel(self, name: str, at: Optional[float] = None) -> bool:
@@ -369,6 +396,7 @@ class TuningService:
                 continue
             self._recorded.add(name)
             meta = self._meta[name]
+            self._tune_to_serve(name, meta)
             if meta.profile_key is None:
                 continue
             wall = wall_tok = None
@@ -385,6 +413,58 @@ class TuningService:
                 estimated_duration=meta.unscaled_duration,
                 wall_step_time_s=wall,
                 wall_token_time_s=wall_tok)
+
+    # ------------------------------------------------------- tune-to-serve
+    def _tune_to_serve(self, name: str, meta: _TaskMeta) -> None:
+        """On task completion: checkpoint the winning adapter to a durable
+        artifact under ``serve_dir`` (rank + fuse key + spec version in the
+        metadata) and auto-publish it to the attached serving frontend —
+        publish loads from the artifact, not live executor state, so a
+        killed pod can replay its serve set from disk."""
+        if self.serve_dir is None and self.serving is None:
+            return
+        res = self._results().get(name)
+        best_job = getattr(res, "best_job", None)
+        if best_job is None:
+            return
+        jr = res.job_results.get(best_job)
+        if jr is None or getattr(jr, "adapter", None) is None:
+            return
+        from repro.serve.pool import SPEC_VERSION
+        rank = int(jr.config.lora_rank)
+        fuse_key = list(meta.colo.fuse_key) if meta.colo is not None else None
+        path = None
+        if self.serve_dir is not None:
+            import os
+
+            from repro.checkpoint.checkpoint import save_pytree
+            path = os.path.join(self.serve_dir,
+                                name.replace("/", "_") + ".npz")
+            save_pytree(path, jr.adapter, meta={
+                "adapter_id": name, "task": name, "job": best_job,
+                "rank": rank,
+                "arch": fuse_key[0] if fuse_key else None,
+                "fuse_key": fuse_key, "spec_version": SPEC_VERSION,
+                "best_val": float(res.best_val)})
+            self._ckpt_paths[name] = path
+        if self.serving is None:
+            return
+        from repro.serve.frontend import AdmissionError
+        from repro.serve.pool import PoolFull
+        try:
+            if path is not None:
+                self.serving.publish_checkpoint(path, adapter_id=name)
+            else:
+                self.serving.publish(name, jr.adapter, rank,
+                                     meta={"task": name, "job": best_job})
+            reason, detail = "published", (
+                f"rank={rank} slot={self.serving.pool.slot_of(name)}"
+                + (" from=checkpoint" if path else " from=live"))
+        except (AdmissionError, PoolFull) as e:
+            reason, detail = "refused", str(e)   # artifact still on disk
+        self._runtime.annotate(ProgressEvent(
+            kind=EventKind.ADAPTER_PUBLISHED, task=name, job=best_job,
+            reason=reason, detail=detail))
 
     # ------------------------------------------------------------ status
     def status(self, name: str) -> TaskStatus:

@@ -1,12 +1,15 @@
 """Batched multi-adapter serving driver (decode path).
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
-        --reduced --requests 8 --max-new 16
+        --reduced --requests 8 --max-new 16 --seed 3 --ranks 2,4,8
 
-Loads (or inits) a base model + a slot-stacked adapter set, then serves a
-batch of requests through prefill + greedy decode using the same
-serve_step the dry-run lowers for decode_32k / long_500k. ``--ring`` uses
-the sliding-window ring cache (the long_500k sub-quadratic path).
+Thin CLI over the serving tier (``repro.serve``): publishes a set of
+adapters into an ``AdapterPool`` (per-slot TRUE ranks via ``--ranks``),
+then drives prefill + greedy decode for a batch of requests through the
+``ServingReplica``/``ServingFrontend`` continuous-batching path — the
+same rank-bound serve step the dry-run lowers for decode_32k /
+long_500k. ``--ring`` uses the sliding-window ring cache (the long_500k
+sub-quadratic path).
 """
 from __future__ import annotations
 
@@ -20,9 +23,20 @@ import numpy as np
 
 from repro.configs.registry import ASSIGNED, get_arch
 from repro.core import lora as LORA
-from repro.core.steps import make_prefill_step, make_serve_step
 from repro.data.synthetic import make_task_dataset
 from repro.models import model as M
+from repro.serve import AdapterPool, ServingFrontend, ServingReplica
+
+
+def _parse_ranks(spec: str, Z: int, r_max: int) -> list:
+    """``--ranks 2,4,8``: one TRUE rank per slot (repeating the last entry
+    to fill); empty spec keeps the historical default min(8, r_max)."""
+    if not spec:
+        return [min(8, r_max)] * Z
+    vals = [int(v) for v in spec.split(",") if v]
+    assert vals and all(1 <= v <= r_max for v in vals), \
+        f"--ranks entries must be in [1, {r_max}]"
+    return (vals + [vals[-1]] * Z)[:Z]
 
 
 def main() -> None:
@@ -35,6 +49,11 @@ def main() -> None:
                     help="requests per adapter slot")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base-model + adapter init PRNG seed")
+    ap.add_argument("--ranks", default="",
+                    help="comma-separated per-slot TRUE ranks, e.g. 2,4,8 "
+                         "(default: uniform min(8, r_max))")
     ap.add_argument("--ring", action="store_true",
                     help="sliding-window ring cache (long-context mode)")
     args = ap.parse_args()
@@ -43,49 +62,42 @@ def main() -> None:
     if args.reduced:
         cfg = dataclasses.replace(cfg.reduced(), dtype="float32")
     Z, b, P = args.slots, args.requests, args.prompt_len
-    total = P + args.max_new
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     params = M.init_params(key, cfg)
-    ranks = jnp.full((Z,), min(8, cfg.lora.r_max), jnp.int32)
-    lora = LORA.init_lora_tree(key, cfg, Z, ranks, M.target_shapes(cfg))
+    ranks = _parse_ranks(args.ranks, Z, cfg.lora.r_max)
+
+    pool = AdapterPool(cfg, Z)
+    stack = LORA.init_lora_tree(key, cfg, Z, jnp.asarray(ranks, jnp.int32),
+                                M.target_shapes(cfg))
+    for z in range(Z):
+        adapter = jax.tree_util.tree_map(lambda x: x[:, z], stack)
+        pool.publish(f"adapter-{z}", adapter, ranks[z])
+
+    replica = ServingReplica(cfg, params, pool, lanes=b,
+                             max_len=P + args.max_new, ring=args.ring)
+    frontend = ServingFrontend(replica)
 
     ds = make_task_dataset("serve", cfg.vocab_size, seq_len=P,
-                           num_train=Z * b, difficulty=0.3)
-    prompts = jnp.asarray(
-        ds.train[:Z * b, :P].reshape(Z, b, P).astype(np.int32))
-
-    ring = args.ring and cfg.family != "ssm"
-    cache = M.init_cache(cfg, Z, b, total, ring=ring)
-    serve = jax.jit(make_serve_step(cfg))
+                           num_train=Z * b, difficulty=0.3,
+                           seed=args.seed)
+    prompts = ds.train[:Z * b, :P].astype(np.int32).reshape(Z, b, P)
+    rids = [[frontend.submit(f"adapter-{z}", prompts[z, i], args.max_new)
+             for i in range(b)] for z in range(Z)]
 
     t0 = time.time()
-    # prefill token-by-token through the serve step when using a ring cache
-    # (ring writes are per-position); block prefill otherwise
-    if ring or cfg.family in ("ssm", "hybrid"):
-        logits = None
-        for t in range(P):
-            logits, cache = serve(params, lora, cache, prompts[:, :, t])
-    else:
-        prefill = jax.jit(make_prefill_step(cfg))
-        logits, cache = prefill(params, lora, cache, {"tokens": prompts})
-    t_prefill = time.time() - t0
+    out = frontend.drain()
+    wall = time.time() - t0
 
-    out_tokens = [jnp.argmax(logits, axis=-1)]
-    t0 = time.time()
-    for _ in range(args.max_new - 1):
-        logits, cache = serve(params, lora, cache, out_tokens[-1])
-        out_tokens.append(jnp.argmax(logits, axis=-1))
-    jax.block_until_ready(logits)
-    t_decode = time.time() - t0
-    gen = np.stack([np.asarray(t) for t in out_tokens], axis=-1)
-
-    toks_per_s = Z * b * (args.max_new - 1) / max(t_decode, 1e-9)
-    print(f"arch={cfg.name} Z={Z} b={b} ring={ring}")
-    print(f"prefill {P} tokens: {t_prefill:.2f}s; "
-          f"decode {args.max_new - 1} steps: {t_decode:.2f}s "
+    stats = replica
+    toks_per_s = stats.total_generated / max(wall, 1e-9)
+    print(f"arch={cfg.name} Z={Z} b={b} ranks={ranks} seed={args.seed} "
+          f"ring={replica.ring}")
+    print(f"served {stats.total_generated} tokens in {wall:.2f}s over "
+          f"{stats.total_decode_steps} fused steps "
           f"({toks_per_s:.1f} tok/s aggregate)")
     for z in range(Z):
-        print(f"  adapter {z} req 0 continuation: {gen[z, 0][:12].tolist()}")
+        print(f"  adapter {z} (rank {ranks[z]}) req 0 continuation: "
+              f"{out[rids[z][0]][:12]}")
 
 
 if __name__ == "__main__":

@@ -1227,6 +1227,12 @@ class ElasticClusterRuntime:
             detail=f"host={host} residual={g_res:.3f}"))
 
     # ---------------------------------------------------------- observability
+    def annotate(self, event: ProgressEvent) -> None:
+        """Append an out-of-band audit event (stamped at the current
+        virtual time) to the log — e.g. the service's tune-to-serve hook
+        recording an ``ADAPTER_PUBLISHED`` alongside the capacity trail."""
+        self._events.append(event.stamped(self.now))
+
     @property
     def event_log(self) -> List[ProgressEvent]:
         return self._events

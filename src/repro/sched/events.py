@@ -46,6 +46,7 @@ class EventKind(enum.Enum):
     TASK_COMPLETED = "task_completed"
     TASK_CANCELLED = "task_cancelled"       # tenant cancel (frees capacity)
     REPLAN = "replan"                       # runtime re-solved the queue
+    ADAPTER_PUBLISHED = "adapter_published"  # winner pushed to serving tier
 
 # Kinds that can shrink a task's residual duration and therefore trigger
 # a replan of the pending queue.

@@ -1,0 +1,20 @@
+"""Tune-to-serve: the multi-LoRA serving tier on the shared backbone.
+
+``AdapterPool`` (hot publish/retire into backbone slots) +
+``ServingReplica`` (round-based continuous batching through the
+rank-local decode path) + ``ServingFrontend`` (queueing, routing, §A.3+k2
+admission) + ``ServingReplicaDriver`` (the replica as a first-class
+cluster resident). See docs/ARCHITECTURE.md "Serving tier".
+"""
+from repro.serve.driver import ServingReplicaDriver, serving_spec
+from repro.serve.frontend import AdmissionError, ServingFrontend
+from repro.serve.pool import (SPEC_VERSION, AdapterPool, PoolFull,
+                              adapter_template)
+from repro.serve.replica import RoundStats, ServeRequest, ServingReplica
+
+__all__ = [
+    "AdapterPool", "PoolFull", "SPEC_VERSION", "adapter_template",
+    "ServingReplica", "ServeRequest", "RoundStats",
+    "ServingFrontend", "AdmissionError",
+    "ServingReplicaDriver", "serving_spec",
+]

@@ -1,0 +1,151 @@
+"""ServingFrontend: request queueing, per-adapter routing, admission.
+
+The tenant-facing edge of the serving tier. ``submit`` enqueues a decode
+request routed by adapter id; ``step_round`` packs the heads of every
+resident adapter's queue into one replica round (up to ``lanes``
+requests per adapter) and serves it; ``drain`` loops rounds until the
+queues are empty. ``publish``/``publish_checkpoint`` admit new adapters
+against the §A.3+k2 memory model: a resident adapter's serving working
+set is ``lanes x max_len`` tokens plus ``rank x lanes x max_len``
+rank-tokens (the rank-local LoRA footprint), and a publish that would
+push ``predict_ranked`` past the safety-margined capacity is refused —
+the serving-side mirror of training's rank-aware cross-task admission.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.sched.intra_task import MemoryModel
+from repro.serve.pool import AdapterPool
+from repro.serve.replica import ServeRequest, ServingReplica
+
+
+class AdmissionError(Exception):
+    """Publish or request refused by the frontend's admission checks."""
+
+
+class ServingFrontend:
+    """Queueing + routing + admission over one ``ServingReplica``."""
+
+    def __init__(self, replica: ServingReplica,
+                 mem: Optional[MemoryModel] = None):
+        self.replica = replica
+        self.pool: AdapterPool = replica.pool
+        self.mem = mem
+        self._queues: Dict[str, Deque[ServeRequest]] = \
+            collections.defaultdict(collections.deque)
+        self._done: Dict[str, ServeRequest] = {}
+        self._next_id = 0
+        self.publishes = 0
+        self.hot_publishes = 0      # publishes landing mid-decode (hook)
+        self.served_requests = 0
+
+    # ------------------------------------------------------------ admission
+    def _admission_tokens(self, extra_rank: int) -> Tuple[int, int]:
+        lanes, seq = self.replica.lanes, self.replica.max_len
+        toks = self.pool.occupied_tokens(lanes, seq) + lanes * seq
+        rtoks = self.pool.occupied_rank_tokens(lanes, seq) \
+            + extra_rank * lanes * seq
+        return toks, rtoks
+
+    def _check_publish(self, rank: int) -> None:
+        if not self.pool.free_slots():
+            raise AdmissionError("no free adapter slot")
+        if self.mem is None:
+            return
+        rank = self.mem.charged_rank(min(rank, self.pool.r_max))
+        toks, rtoks = self._admission_tokens(rank)
+        if not self.mem.fits_ranked(toks, rtoks):
+            raise AdmissionError(
+                f"publish would exceed memory budget: "
+                f"{self.mem.predict_ranked(toks, rtoks):.3e} B > "
+                f"{self.mem.capacity * self.mem.safety_margin:.3e} B")
+
+    # ------------------------------------------------------------ publishing
+    def publish(self, adapter_id: str, adapter: Dict, rank: int,
+                meta: Optional[Dict] = None) -> int:
+        self._check_publish(rank)
+        slot = self.pool.publish(adapter_id, adapter, rank, meta=meta)
+        self.publishes += 1
+        return slot
+
+    def publish_checkpoint(self, path: str,
+                           adapter_id: Optional[str] = None) -> str:
+        """Admit an adapter from a durable checkpoint artifact (the
+        tune-to-serve path). Returns the adapter id."""
+        import json
+
+        # peek rank for admission without mutating the pool
+        data = np.load(path if path.endswith(".npz") else path + ".npz",
+                       allow_pickle=False)
+        meta = json.loads(str(data["__meta__"]))
+        self._check_publish(int(meta["rank"]))
+        aid, _ = self.pool.publish_checkpoint(path, adapter_id=adapter_id)
+        self.publishes += 1
+        return aid
+
+    def retire(self, adapter_id: str) -> int:
+        assert not self._queues.get(adapter_id), \
+            f"adapter {adapter_id!r} has queued requests"
+        self._queues.pop(adapter_id, None)
+        return self.pool.retire(adapter_id)
+
+    # ------------------------------------------------------------ requests
+    def submit(self, adapter_id: str, prompt, max_new: int) -> str:
+        """Enqueue a decode request; returns its request id."""
+        if adapter_id not in self.pool.resident():
+            raise AdmissionError(f"adapter {adapter_id!r} not resident")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) < 1 or len(prompt) + max_new > self.replica.max_len:
+            raise AdmissionError(
+                f"prompt({len(prompt)}) + max_new({max_new}) exceeds "
+                f"max_len={self.replica.max_len}")
+        rid = f"req-{self._next_id}"
+        self._next_id += 1
+        self._queues[adapter_id].append(
+            ServeRequest(request_id=rid, adapter_id=adapter_id,
+                         prompt=prompt, max_new=max_new))
+        return rid
+
+    def queued(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def step_round(self, on_step: Optional[Callable[[int], None]] = None
+                   ) -> int:
+        """Serve one round over the head of every adapter's queue (up to
+        ``lanes`` requests each). Returns requests completed; 0 = idle."""
+        batch: List[ServeRequest] = []
+        for adapter_id in list(self._queues):
+            if adapter_id not in self.pool.resident():
+                continue            # retired with queued work: re-check later
+            q = self._queues[adapter_id]
+            for _ in range(min(len(q), self.replica.lanes)):
+                batch.append(q.popleft())
+        if not batch:
+            return 0
+        hot_before = self.pool.version
+        self.replica.serve_round(batch, on_step=on_step)
+        if on_step is not None and self.pool.version > hot_before:
+            self.hot_publishes += self.pool.version - hot_before
+        for r in batch:
+            self._done[r.request_id] = r
+        self.served_requests += len(batch)
+        return len(batch)
+
+    def drain(self, on_step: Optional[Callable[[int], None]] = None
+              ) -> Dict[str, List[int]]:
+        """Serve rounds until every queue is empty; returns
+        ``{request_id: generated tokens}`` for everything completed."""
+        while self.queued():
+            served = self.step_round(on_step=on_step)
+            on_step = None          # hooks fire on the first round only
+            if served == 0:
+                break               # only retired-adapter queues remain
+        return {rid: list(r.tokens) for rid, r in self._done.items()}
+
+    def result(self, request_id: str) -> List[int]:
+        assert request_id in self._done, f"request {request_id!r} not done"
+        return list(self._done[request_id].tokens)

@@ -1,0 +1,175 @@
+"""AdapterPool: hot publish/retire of adapters into backbone slots.
+
+The serving-side counterpart of training's ``SlotManager``: one frozen
+backbone holds ``Z`` adapter slots, and adapters are published into /
+retired from those slots *between decode steps* — no replica restart, no
+recompile (slot shapes are static at ``r_max`` capacity; TRUE ranks ride
+the same ``slot_ranks`` binding the rank-local training path uses). This
+is the rtp-llm ``add_lora``/``lora_ids``-per-forward idiom: the pool's
+``lora`` tree + ``ranks`` vector are inputs to every forward, so a
+publish is visible on the very next step and resident slots are
+untouched bit-for-bit (slot isolation).
+
+Publishes load either from a live adapter tree (``publish``) or from a
+durable ``checkpoint/checkpoint.py`` artifact (``publish_checkpoint``)
+written by the service's tune-to-serve hook — the crash-safe path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import extract_slot, load_pytree
+from repro.configs.base import ModelConfig
+from repro.core import lora as LORA
+from repro.models import model as M
+
+# Version stamp written into / checked against checkpoint metadata so a
+# pool never loads an adapter whose on-disk layout predates the current
+# slot-stacked tree format.
+SPEC_VERSION = 1
+
+
+def adapter_template(cfg: ModelConfig) -> Dict:
+    """Zero single-adapter tree ``{target: {"A": [L,din,r], "B": ...}}`` —
+    the ``like`` structure checkpoint loads restore into."""
+    zero = jnp.zeros((1,), jnp.int32)
+    lt = LORA.init_lora_tree(jax.random.PRNGKey(0), cfg, 1, zero,
+                             M.target_shapes(cfg))
+    return extract_slot(lt, 0)
+
+
+def _mask_adapter(adapter: Dict, rank: int, r_max: int) -> Dict:
+    """Zero the padded rank region of a single adapter ([L,din,r] A /
+    [L,r,dout] B): published slots keep the training invariant that the
+    region beyond the TRUE rank is exactly zero."""
+    keep = (jnp.arange(r_max) < rank)
+
+    def mask(name: str, x: jnp.ndarray) -> jnp.ndarray:
+        if name == "A":                      # [L, d_in, r]
+            return x * keep[None, None, :].astype(x.dtype)
+        return x * keep[None, :, None].astype(x.dtype)     # B: [L, r, d_out]
+
+    return {t: {m: mask(m, jnp.asarray(ab[m])) for m in ("A", "B")}
+            for t, ab in adapter.items()}
+
+
+class PoolFull(Exception):
+    """Raised by ``publish`` when no free slot is available."""
+
+
+class AdapterPool:
+    """``Z`` hot-swappable adapter slots over one frozen backbone."""
+
+    def __init__(self, cfg: ModelConfig, Z: int):
+        assert Z >= 1
+        self.cfg = cfg
+        self.Z = Z
+        self.r_max = cfg.lora.r_max
+        self._template = adapter_template(cfg)
+        zeros = jnp.zeros((Z,), jnp.int32)
+        self.lora = LORA.init_lora_tree(jax.random.PRNGKey(0), cfg, Z,
+                                        zeros, M.target_shapes(cfg))
+        self.slot_adapter: List[Optional[str]] = [None] * Z
+        self.slot_rank: List[int] = [0] * Z
+        self.version = 0                       # bumps on publish/retire
+        self.publish_latencies_s: List[float] = []
+        self._meta: Dict[str, Dict] = {}       # adapter_id -> publish meta
+
+    # ------------------------------------------------------------ queries
+    @property
+    def ranks(self) -> jnp.ndarray:
+        """[Z] int32 TRUE ranks (0 = empty slot) — a forward input."""
+        return jnp.asarray(self.slot_rank, jnp.int32)
+
+    def resident(self) -> Dict[str, int]:
+        return {a: s for s, a in enumerate(self.slot_adapter)
+                if a is not None}
+
+    def slot_of(self, adapter_id: str) -> int:
+        res = self.resident()
+        assert adapter_id in res, f"adapter {adapter_id!r} not resident"
+        return res[adapter_id]
+
+    def free_slots(self) -> List[int]:
+        return [s for s, a in enumerate(self.slot_adapter) if a is None]
+
+    def mixed_rank(self) -> bool:
+        return any(r != self.r_max for s, r in enumerate(self.slot_rank)
+                   if self.slot_adapter[s] is not None)
+
+    def meta_of(self, adapter_id: str) -> Dict:
+        return self._meta.get(adapter_id, {})
+
+    def occupied_tokens(self, lanes: int, seq_len: int) -> int:
+        """Serving token budget: every resident adapter's lanes decode at
+        up to ``seq_len`` positions (§A.3 token-linear accounting)."""
+        return len(self.resident()) * lanes * seq_len
+
+    def occupied_rank_tokens(self, lanes: int, seq_len: int) -> int:
+        return sum(self.slot_rank[s] for s in self.resident().values()) \
+            * lanes * seq_len
+
+    # ------------------------------------------------------------ mutation
+    def publish(self, adapter_id: str, adapter: Dict, rank: int,
+                slot: Optional[int] = None,
+                meta: Optional[Dict] = None) -> int:
+        """Insert a single adapter ([L,...] tree) into a free slot; visible
+        on the next decode step. Returns the slot index."""
+        assert adapter_id not in self.resident(), \
+            f"adapter {adapter_id!r} already resident"
+        free = self.free_slots()
+        if slot is None:
+            if not free:
+                raise PoolFull(f"no free slot for {adapter_id!r}")
+            slot = free[0]
+        assert slot in free, f"slot {slot} occupied"
+        rank = max(min(int(rank), self.r_max), 1)
+        t0 = time.perf_counter()
+        self.lora = LORA.slot_update(
+            self.lora, slot, _mask_adapter(adapter, rank, self.r_max))
+        jax.block_until_ready(self.lora)
+        self.publish_latencies_s.append(time.perf_counter() - t0)
+        self.slot_adapter[slot] = adapter_id
+        self.slot_rank[slot] = rank
+        self._meta[adapter_id] = dict(meta or {})
+        self.version += 1
+        return slot
+
+    def publish_checkpoint(self, path: str,
+                           adapter_id: Optional[str] = None,
+                           slot: Optional[int] = None) -> Tuple[str, int]:
+        """Publish from a durable artifact written by ``save_pytree``.
+        The checkpoint's meta must carry the TRUE ``rank``, a matching
+        ``spec_version``, and (when present) an ``arch`` equal to this
+        pool's backbone. Returns ``(adapter_id, slot)``."""
+        adapter, meta = load_pytree(path, self._template)
+        ver = meta.get("spec_version")
+        assert ver == SPEC_VERSION, \
+            f"checkpoint spec_version {ver} != pool {SPEC_VERSION}"
+        arch = meta.get("arch")
+        assert arch is None or arch == self.cfg.name, \
+            f"checkpoint arch {arch!r} != backbone {self.cfg.name!r}"
+        rank = int(meta["rank"])
+        aid = adapter_id or meta.get("adapter_id") or path
+        s = self.publish(aid, adapter, rank, slot=slot, meta=meta)
+        return aid, s
+
+    def retire(self, adapter_id: str) -> int:
+        """Zero the adapter's slot and free it; resident slots untouched."""
+        slot = self.slot_of(adapter_id)
+        self.lora = LORA.zero_slot(self.lora, slot)
+        self.slot_adapter[slot] = None
+        self.slot_rank[slot] = 0
+        self._meta.pop(adapter_id, None)
+        self.version += 1
+        return slot
+
+    def adapter_at(self, slot: int) -> Dict:
+        """Host copy of one slot's adapter ([L,...])."""
+        return jax.tree_util.tree_map(lambda x: np.asarray(x[:, slot]),
+                                      self.lora)

@@ -1,0 +1,189 @@
+"""ServingReplica: continuous-batching decode over one adapter pool.
+
+One frozen backbone serves every resident adapter of an ``AdapterPool``
+at once: in-flight requests map to ``(slot, lane)`` coordinates of the
+slot-stacked forward — slot = the request's adapter, lane = one of the
+replica's ``lanes`` decode streams per slot — so each decode step
+advances ``Z x lanes`` streams in a single fused kernel launch. Prefill
+and decode both run with the pool's ``ranks`` vector bound via
+``LORA.slot_ranks`` (per-slot TRUE ranks, the rank-local grouped-LoRA
+path on the Pallas backend; on the jnp backend the full-rank select is
+the identity, which keeps fused-vs-solo decode bitwise equal).
+
+Batching is ROUND-based: the decode cache keeps one *global* position
+scalar (``model.decode_step`` writes every lane at ``cache["pos"]``), so
+requests may only join when a fresh cache epoch starts — an idle lane's
+pad-token K/V at earlier positions would otherwise be attended by a
+late joiner. Within a round, prompts of different lengths stream
+token-by-token through the decode step (a lane still consuming its
+prompt feeds prompt tokens; shorter prompts start generating earlier),
+finished lanes re-feed their last token (lane caches never cross), and
+the cache is reset between rounds. Hot ``publish``/``retire`` on the
+pool between decode steps IS sound mid-round — slot isolation — and is
+exactly what the serving isolation tests pin down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import lora as LORA
+from repro.core.steps import make_prefill_step, make_serve_step
+from repro.models import model as M
+from repro.serve.pool import AdapterPool
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One decode request routed to a resident adapter."""
+    request_id: str
+    adapter_id: str
+    prompt: np.ndarray            # [P] int32 token ids, P >= 1
+    max_new: int
+    tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new
+
+
+@dataclasses.dataclass
+class RoundStats:
+    """One cache epoch's accounting."""
+    requests: int
+    generated: int                # tokens produced this round
+    decode_steps: int             # fused step invocations (incl. prefill
+                                  # steps when streaming token-by-token)
+    wall_s: float
+    logits: List[Tuple[int, np.ndarray]]   # (position, [Z,lanes,V]) when
+                                           # recording is on
+
+
+class ServingReplica:
+    """Round-based continuous batching over ``pool.Z`` x ``lanes`` streams."""
+
+    def __init__(self, cfg: ModelConfig, params, pool: AdapterPool, *,
+                 lanes: int = 4, max_len: int = 64, ring: bool = False):
+        assert lanes >= 1 and max_len >= 2
+        self.cfg = cfg
+        self.params = params
+        self.pool = pool
+        self.lanes = lanes
+        self.max_len = max_len
+        self.ring = ring and cfg.family != "ssm"
+        # block prefill writes the whole prompt in one forward; ring caches
+        # and recurrent families need per-position writes (launch parity)
+        self._block_prefill = (not self.ring
+                               and cfg.family not in ("ssm", "hybrid"))
+        prefill = make_prefill_step(cfg)
+        serve = make_serve_step(cfg)
+
+        def ranked_prefill(params, lora, cache, batch, ranks):
+            with LORA.slot_ranks(ranks):
+                return prefill(params, lora, cache, batch)
+
+        def ranked_decode(params, lora, cache, tokens, ranks):
+            with LORA.slot_ranks(ranks):
+                return serve(params, lora, cache, tokens)
+
+        self._prefill = jax.jit(ranked_prefill)
+        self._decode = jax.jit(ranked_decode)
+        self.total_generated = 0
+        self.total_decode_steps = 0
+        self.total_wall_s = 0.0
+        self.rounds = 0
+
+    # ------------------------------------------------------------ packing
+    def pack(self, requests: List[ServeRequest]
+             ) -> Dict[Tuple[int, int], ServeRequest]:
+        """Assign requests to (slot, lane); every adapter must be resident
+        and get at most ``lanes`` requests in one round."""
+        lane_req: Dict[Tuple[int, int], ServeRequest] = {}
+        used: Dict[int, int] = {}
+        for r in requests:
+            s = self.pool.slot_of(r.adapter_id)
+            lane = used.get(s, 0)
+            assert lane < self.lanes, \
+                f"adapter {r.adapter_id!r}: > {self.lanes} requests/round"
+            assert len(r.prompt) >= 1
+            assert len(r.prompt) + r.max_new <= self.max_len, \
+                f"request {r.request_id!r} exceeds max_len={self.max_len}"
+            used[s] = lane + 1
+            lane_req[(s, lane)] = r
+        return lane_req
+
+    # ------------------------------------------------------------ serving
+    def serve_round(self, requests: List[ServeRequest],
+                    on_step: Optional[Callable[[int], None]] = None,
+                    record_logits: bool = False) -> RoundStats:
+        """Drive one cache epoch: streamed prefill + greedy decode until
+        every request has ``max_new`` tokens. ``on_step(i)`` fires before
+        the i-th fused step — a hook may hot publish/retire adapters on
+        the pool there (visible next step, resident slots untouched)."""
+        assert requests, "empty round"
+        lane_req = self.pack(requests)
+        pool = self.pool
+        Z, b = pool.Z, self.lanes
+        cache = M.init_cache(self.cfg, Z, b, self.max_len, ring=self.ring)
+        cur = np.zeros((Z, b), np.int32)
+        lens = {len(r.prompt) for r in lane_req.values()}
+        logits = None
+        logits_log: List[Tuple[int, np.ndarray]] = []
+        steps = 0
+        t0 = time.perf_counter()
+        if self._block_prefill and len(lens) == 1 and min(lens) > 1:
+            P0 = lens.pop()
+            prompts = np.zeros((Z, b, P0), np.int32)
+            for (s, lane), r in lane_req.items():
+                prompts[s, lane] = r.prompt
+            logits, cache = self._prefill(
+                self.params, pool.lora, cache,
+                {"tokens": jnp.asarray(prompts)}, pool.ranks)
+            t = P0 - 1                 # logits for position P0-1 in hand
+        else:
+            for (s, lane), r in lane_req.items():
+                cur[s, lane] = r.prompt[0]
+            t = -1                     # nothing consumed yet
+        generated = 0
+        while True:
+            if logits is not None:
+                nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                if record_logits:
+                    logits_log.append((t, np.asarray(logits)))
+                for (s, lane), r in lane_req.items():
+                    P = len(r.prompt)
+                    if t < P - 1:
+                        cur[s, lane] = r.prompt[t + 1]
+                    else:
+                        tok = int(nxt[s, lane])
+                        if not r.done:
+                            r.tokens.append(tok)
+                            generated += 1
+                        cur[s, lane] = tok
+                if all(r.done for r in lane_req.values()):
+                    break
+            if on_step is not None:
+                on_step(steps)
+            logits, cache = self._decode(self.params, pool.lora, cache,
+                                         jnp.asarray(cur), pool.ranks)
+            steps += 1
+            t += 1
+        jax.block_until_ready(logits)
+        wall = time.perf_counter() - t0
+        self.total_generated += generated
+        self.total_decode_steps += steps
+        self.total_wall_s += wall
+        self.rounds += 1
+        return RoundStats(requests=len(requests), generated=generated,
+                          decode_steps=steps, wall_s=wall,
+                          logits=logits_log)
+
+    @property
+    def aggregate_tok_s(self) -> float:
+        return self.total_generated / max(self.total_wall_s, 1e-9)

@@ -425,6 +425,97 @@ def _hists(lc):
             for j, m in lc.monitors.items()}
 
 
+def _serve_env_build(exec_env):
+    """Adapters + prompts for the inference-path isolation tests."""
+    cfg, params, _, _ = exec_env
+    key = jax.random.PRNGKey(2)
+    ranks = [4, 8, 2]
+    stack = LORA.init_lora_tree(key, cfg, 3, jnp.asarray(ranks),
+                                M.target_shapes(cfg))
+    stack = jax.tree_util.tree_map(
+        lambda x: x + 0.01 * jax.random.normal(key, x.shape), stack)
+    stack = LORA.mask_lora_tree(stack, jnp.asarray(ranks), cfg.lora.r_max)
+    adapters = {z: jax.tree_util.tree_map(lambda x: np.asarray(x[:, z]),
+                                          stack) for z in range(3)}
+    rng = np.random.default_rng(11)
+    prompts = {z: [rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+                   for _ in range(2)] for z in range(3)}
+    return cfg, params, adapters, ranks, prompts
+
+
+@pytest.fixture(scope="module")
+def serve_env(exec_env):
+    return _serve_env_build(exec_env)
+
+
+def _serve_run(cfg, params, adapters, ranks, prompts, publish,
+               on_step=None):
+    """One serving round on a Z=3 pool with the given slots published;
+    returns per-request token streams + recorded per-step logits."""
+    from repro.serve import AdapterPool, ServeRequest, ServingReplica
+    pool = AdapterPool(cfg, 3)
+    for z in publish:
+        pool.publish(f"a{z}", adapters[z], ranks[z], slot=z)
+    rep = ServingReplica(cfg, params, pool, lanes=2, max_len=24)
+    reqs = [ServeRequest(f"r{z}{i}", f"a{z}", prompts[z][i], 8)
+            for z in publish for i in range(2)]
+    stats = rep.serve_round(
+        reqs, on_step=(on_step(pool) if on_step else None),
+        record_logits=True)
+    return {r.request_id: tuple(r.tokens) for r in reqs}, stats.logits, pool
+
+
+def test_fused_decode_bitwise_equal_solo(serve_env):
+    """The training-side isolation invariant lifted to the INFERENCE path:
+    N adapters fused on one serving replica produce, for every request,
+    decode logits (and therefore greedy continuations) bitwise identical
+    to serving that adapter alone on the same-capacity replica — the
+    other slots' contents never leak into a request's stream."""
+    cfg, params, adapters, ranks, prompts = serve_env
+    fused_toks, fused_log, _ = _serve_run(cfg, params, adapters, ranks,
+                                          prompts, publish=[0, 1, 2])
+    for z in range(3):
+        solo_toks, solo_log, _ = _serve_run(cfg, params, adapters, ranks,
+                                            prompts, publish=[z])
+        for i in range(2):
+            assert fused_toks[f"r{z}{i}"] == solo_toks[f"r{z}{i}"]
+        assert len(fused_log) == len(solo_log)
+        for (tf, lf), (ts, ls) in zip(fused_log, solo_log):
+            assert tf == ts
+            np.testing.assert_array_equal(lf[z], ls[z])   # bitwise
+
+
+def test_hot_publish_retire_mid_decode_leaves_residents_unchanged(serve_env):
+    """Hot publish into a free slot (and retire of another slot) BETWEEN
+    decode steps of an in-flight round: the resident requests' logits and
+    token streams do not move a bit, and the pool ends with the expected
+    adapter set — serving's slot-isolation counterpart of the training
+    suspend/resume guarantees."""
+    cfg, params, adapters, ranks, prompts = serve_env
+
+    def hook(pool):
+        def on_step(step):
+            if step == 3:
+                pool.publish("a1", adapters[1], ranks[1], slot=1)
+            if step == 6:
+                pool.retire("a1")
+                pool.publish("a2", adapters[2], ranks[2], slot=2)
+        return on_step
+
+    base_toks, base_log, _ = _serve_run(cfg, params, adapters, ranks,
+                                        prompts, publish=[0])
+    hot_toks, hot_log, pool = _serve_run(cfg, params, adapters, ranks,
+                                         prompts, publish=[0],
+                                         on_step=hook)
+    assert base_toks == hot_toks
+    assert len(base_log) == len(hot_log)
+    for (tb, lb), (th, lh) in zip(base_log, hot_log):
+        assert tb == th
+        np.testing.assert_array_equal(lb[0], lh[0])       # bitwise
+    assert pool.resident() == {"a0": 0, "a2": 2}
+    assert pool.version == 4        # 1 initial + hot publish/retire/publish
+
+
 def test_migration_across_replicas_bitwise_equal(exec_env):
     """The migration primitive end to end: a task mid-training on replica 1
     is suspended (SlotSnapshot per resident job), restored on replica 2

@@ -1,0 +1,339 @@
+"""Serving tier (src/repro/serve/): hot publish/retire, routing +
+admission, cluster residency, and the tune-to-serve loop.
+
+The bitwise decode-isolation properties (fused-vs-solo, hot publish
+mid-decode) live with the other isolation invariants in
+tests/test_lora_isolation.py; this file covers the subsystem mechanics:
+AdapterPool slot bookkeeping, checkpoint round-trips, frontend queueing
+and §A.3+k2 admission, the serving lease as a first-class planner
+resident, and TuningService.submit() -> early exit -> served query.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import save_pytree
+from repro.core import lora as LORA
+from repro.models import model as M
+from repro.sched.intra_task import MemoryModel
+from repro.serve import (SPEC_VERSION, AdapterPool, AdmissionError,
+                         PoolFull, ServingFrontend, ServingReplica)
+from tests.conftest import reduced_f32
+
+
+@pytest.fixture(scope="module")
+def env():
+    cfg = reduced_f32("paper-llama-tiny", num_layers=2, d_model=64,
+                      vocab=128)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    ranks = [4, 8, 2]
+    stack = LORA.init_lora_tree(key, cfg, 3, jnp.asarray(ranks),
+                                M.target_shapes(cfg))
+    stack = jax.tree_util.tree_map(
+        lambda x: x + 0.01 * jax.random.normal(key, x.shape), stack)
+    stack = LORA.mask_lora_tree(stack, jnp.asarray(ranks), cfg.lora.r_max)
+    adapters = {z: jax.tree_util.tree_map(lambda x: np.asarray(x[:, z]),
+                                          stack) for z in range(3)}
+    return cfg, params, adapters, ranks
+
+
+def _prompt(rng, cfg, n):
+    return rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# AdapterPool
+# ---------------------------------------------------------------------------
+
+def test_pool_publish_retire_semantics(env):
+    cfg, params, adapters, ranks = env
+    pool = AdapterPool(cfg, 3)
+    assert pool.free_slots() == [0, 1, 2]
+    s0 = pool.publish("a0", adapters[0], ranks[0])
+    s1 = pool.publish("a1", adapters[1], ranks[1])
+    assert (s0, s1) == (0, 1)
+    assert pool.resident() == {"a0": 0, "a1": 1}
+    assert pool.slot_rank == [4, 8, 0]
+    assert pool.mixed_rank()
+    assert len(pool.publish_latencies_s) == 2
+    # duplicate publish and occupied-slot publish are rejected
+    with pytest.raises(AssertionError):
+        pool.publish("a0", adapters[0], 4)
+    with pytest.raises(AssertionError):
+        pool.publish("a2", adapters[2], 2, slot=1)
+    # retire zeroes the slot and frees it; resident slots untouched
+    before = pool.adapter_at(1)
+    pool.retire("a0")
+    assert pool.free_slots() == [0, 2]
+    for t, ab in pool.adapter_at(0).items():
+        assert float(np.abs(ab["A"]).max()) == 0.0
+        assert float(np.abs(ab["B"]).max()) == 0.0
+    after = pool.adapter_at(1)
+    for t in before:
+        np.testing.assert_array_equal(before[t]["A"], after[t]["A"])
+        np.testing.assert_array_equal(before[t]["B"], after[t]["B"])
+    # freed slot is reusable; pool-full raises
+    pool.publish("a2", adapters[2], ranks[2])
+    pool.publish("b0", adapters[0], 4, slot=2)
+    with pytest.raises(PoolFull):
+        pool.publish("b1", adapters[1], 8)
+    # published adapters keep the padded rank region exactly zero
+    a2 = pool.adapter_at(pool.slot_of("a2"))
+    for t, ab in a2.items():
+        assert float(np.abs(ab["A"][:, :, 2:]).max()) == 0.0
+        assert float(np.abs(ab["B"][:, 2:, :]).max()) == 0.0
+
+
+def test_pool_checkpoint_roundtrip(env, tmp_path):
+    """publish_checkpoint loads the durable artifact bitwise and honors /
+    validates its metadata (rank, arch, spec_version)."""
+    cfg, params, adapters, ranks = env
+    path = str(tmp_path / "winner.npz")
+    save_pytree(path, adapters[1],
+                meta={"adapter_id": "ckpt-a", "rank": 8, "arch": cfg.name,
+                      "fuse_key": [cfg.name, 1, "sft"],
+                      "spec_version": SPEC_VERSION})
+    pool = AdapterPool(cfg, 2)
+    aid, slot = pool.publish_checkpoint(path)
+    assert aid == "ckpt-a" and slot == 0
+    assert pool.slot_rank[0] == 8
+    assert pool.meta_of("ckpt-a")["fuse_key"] == [cfg.name, 1, "sft"]
+    got = pool.adapter_at(0)
+    for t in adapters[1]:
+        np.testing.assert_array_equal(got[t]["A"],
+                                      np.asarray(adapters[1][t]["A"]))
+        np.testing.assert_array_equal(got[t]["B"],
+                                      np.asarray(adapters[1][t]["B"]))
+    # wrong arch / spec version are refused before touching the pool
+    bad_arch = str(tmp_path / "bad_arch.npz")
+    save_pytree(bad_arch, adapters[0],
+                meta={"rank": 4, "arch": "other-arch",
+                      "spec_version": SPEC_VERSION})
+    with pytest.raises(AssertionError):
+        pool.publish_checkpoint(bad_arch)
+    bad_ver = str(tmp_path / "bad_ver.npz")
+    save_pytree(bad_ver, adapters[0],
+                meta={"rank": 4, "arch": cfg.name, "spec_version": -1})
+    with pytest.raises(AssertionError):
+        pool.publish_checkpoint(bad_ver)
+    assert pool.resident() == {"ckpt-a": 0}
+
+
+# ---------------------------------------------------------------------------
+# ServingFrontend: routing, rounds, admission
+# ---------------------------------------------------------------------------
+
+def test_frontend_routing_multi_round_deterministic(env):
+    """More requests than lanes: the frontend serves multiple rounds, every
+    request completes with exactly max_new tokens, and re-serving the same
+    prompt in a later round reproduces the same continuation (rounds are
+    independent cache epochs)."""
+    cfg, params, adapters, ranks = env
+    pool = AdapterPool(cfg, 3)
+    for z in range(3):
+        pool.publish(f"a{z}", adapters[z], ranks[z])
+    rep = ServingReplica(cfg, params, pool, lanes=2, max_len=24)
+    fe = ServingFrontend(rep)
+    rng = np.random.default_rng(7)
+    prompts = {z: [_prompt(rng, cfg, int(rng.integers(3, 9)))
+                   for _ in range(3)] for z in range(3)}
+    rids = {(z, i): fe.submit(f"a{z}", prompts[z][i], 6)
+            for z in range(3) for i in range(3)}
+    out = fe.drain()
+    assert fe.queued() == 0 and rep.rounds == 2      # 3 reqs over 2 lanes
+    assert all(len(out[r]) == 6 for r in rids.values())
+    # replay determinism across rounds
+    replay = fe.submit("a1", prompts[1][0], 6)
+    fe.drain()
+    assert fe.result(replay) == out[rids[(1, 0)]]
+    # unknown adapter and over-length requests are refused
+    with pytest.raises(AdmissionError):
+        fe.submit("nope", prompts[0][0], 4)
+    with pytest.raises(AdmissionError):
+        fe.submit("a0", prompts[0][0], 99)
+
+
+def test_frontend_publish_admission_memory_model(env):
+    """Publish admission against the §A.3+k2 model: rank-tokens are billed
+    at TRUE rank, a publish over budget is refused, retiring an adapter
+    frees its charge."""
+    cfg, params, adapters, ranks = env
+    pool = AdapterPool(cfg, 3)
+    rep = ServingReplica(cfg, params, pool, lanes=2, max_len=16)
+    lane_toks = 2 * 16                      # lanes x max_len per adapter
+    # capacity fits two adapters (rank 4 + rank 8), not a third rank-2
+    cap = (2 * lane_toks * 1.0 + (4 + 8) * lane_toks * 0.5) / 0.9 + 1.0
+    mem = MemoryModel(k0=0.0, k1=1.0, seq_len=16, capacity=cap,
+                      k2=0.5, r_max=cfg.lora.r_max)
+    fe = ServingFrontend(rep, mem=mem)
+    fe.publish("a0", adapters[0], 4)
+    fe.publish("a1", adapters[1], 8)
+    with pytest.raises(AdmissionError):
+        fe.publish("a2", adapters[2], 2)
+    assert "a2" not in pool.resident()      # refused before pool mutation
+    fe.retire("a1")                         # rank-8 charge freed
+    fe.publish("a2", adapters[2], 2)        # rank-2 now fits
+    assert set(pool.resident()) == {"a0", "a2"}
+    assert fe.publishes == 3
+
+
+# ---------------------------------------------------------------------------
+# Serving replicas are first-class cluster residents
+# ---------------------------------------------------------------------------
+
+def test_serving_lease_holds_gpus_in_planner():
+    """A serving lease occupies planner-visible GPUs: on a 2-GPU cluster
+    with a 1-GPU lease of 100s, two 40s 1-GPU training tasks must
+    serialize on the remaining GPU (makespan 100) instead of running in
+    parallel (makespan 40) — the planner genuinely accounts the replica."""
+    from repro.core.service import TuningService
+    from repro.sched.cluster import SimulatedTaskDriver, sim_task_spec
+
+    def sim(name):
+        spec = sim_task_spec(name, K=1, Z=1, total_steps=40,
+                             warmup_steps=1, step_time_s=1.0, gpus=1)
+
+        def factory():
+            return SimulatedTaskDriver(name, K=1, Z=1, total_steps=40,
+                                       warmup_steps=1, step_time_s=1.0)
+        return spec, factory
+
+    svc = TuningService(total_gpus=2)
+    sh = svc.attach_serving(None, gpus=1, horizon_s=100.0, chunk_s=10.0)
+    handles = []
+    for n in ("t1", "t2"):
+        spec, fac = sim(n)
+        handles.append(svc.submit_spec(spec, fac, scale_duration=False))
+    report = svc.run_until_idle()
+    ends = report.task_ends
+    assert ends["serve/replica-0"] == pytest.approx(100.0)
+    assert max(ends["t1"], ends["t2"]) >= 80.0 - 1e-6   # serialized
+    assert report.makespan == pytest.approx(100.0)
+    lease = sh.result()
+    assert lease["kind"] == "serving_replica"
+    # GPU-seconds: lease held one GPU its whole horizon
+    assert sum(report.runtime.gpu_busy) >= 100.0 + 80.0 - 1e-6
+
+
+def test_serving_lease_cancel_frees_gpus():
+    """Retiring the replica early (cancel) releases its GPUs to pending
+    training work — teardown needs no new runtime mechanics."""
+    from repro.core.service import TuningService
+    from repro.sched.cluster import SimulatedTaskDriver, sim_task_spec
+
+    svc = TuningService(total_gpus=1)
+    sh = svc.attach_serving(None, gpus=1, horizon_s=500.0, chunk_s=10.0)
+    spec = sim_task_spec("t1", K=1, Z=1, total_steps=20, warmup_steps=1,
+                         step_time_s=1.0, gpus=1)
+    h = svc.submit_spec(
+        spec, lambda: SimulatedTaskDriver("t1", K=1, Z=1, total_steps=20,
+                                          warmup_steps=1, step_time_s=1.0),
+        scale_duration=False)
+    sh.cancel(at=50.0)
+    h.result()
+    report = svc.run_until_idle()
+    assert report.task_starts["t1"] >= 50.0 - 1e-6     # waited on the lease
+    assert report.task_ends["t1"] == pytest.approx(70.0)
+    assert "serve/replica-0" in report.cancelled
+
+
+# ---------------------------------------------------------------------------
+# Tune-to-serve end to end
+# ---------------------------------------------------------------------------
+
+def test_tune_to_serve_end_to_end(env, tmp_path):
+    """TuningService.submit() -> early exit -> winning adapter checkpointed
+    (rank + fuse key + spec version) -> auto-published from the durable
+    artifact -> a served query answers with the winner's continuation."""
+    from repro.core import engine as alto
+    from repro.core.early_exit import EarlyExitConfig
+    from repro.core.service import TuningService
+    from repro.data.synthetic import make_task_dataset
+    from repro.sched.events import EventKind
+
+    cfg, params, adapters, _ = env
+    ds = make_task_dataset("t2s", cfg.vocab_size, seq_len=16, num_train=32,
+                           num_val=8, difficulty=0.2)
+    serve_dir = str(tmp_path / "serve")
+    svc = TuningService(total_gpus=2, eval_every=2, serve_dir=serve_dir)
+    pool = AdapterPool(cfg, 2)
+    rep = ServingReplica(cfg, params, pool, lanes=2, max_len=16)
+    fe = ServingFrontend(rep)
+    svc.attach_serving(fe, gpus=1, horizon_s=10_000.0)
+    task = alto.Task(model=cfg, dataset=ds, num_gpus=1, max_steps=6,
+                     num_slots=2, name="tenant-a",
+                     search_space={"lr": [1e-3, 3e-3], "rank": [4]})
+    res = svc.submit(task, early_exit=EarlyExitConfig(
+        warmup_ratio=0.2, select_ratio=0.5)).result()
+    # early exit really happened (warmup selection dropped a job)
+    assert res.samples_saved_frac > 0.0
+    # durable artifact with full publish metadata
+    path = svc._ckpt_paths["tenant-a"]
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    jr = res.job_results[res.best_job]
+    assert meta["rank"] == jr.config.lora_rank
+    assert meta["spec_version"] == SPEC_VERSION
+    assert meta["arch"] == cfg.name
+    assert meta["fuse_key"] == [cfg.name, 1, "sft"]
+    assert meta["job"] == res.best_job
+    # hot-published (no replica restart) with an audit event
+    assert pool.resident() == {"tenant-a": 0}
+    assert pool.slot_rank[0] == jr.config.lora_rank
+    evs = [e for e in svc._runtime_events()
+           if e.kind is EventKind.ADAPTER_PUBLISHED]
+    assert len(evs) == 1 and evs[0].reason == "published"
+    assert "from=checkpoint" in evs[0].detail
+    # the served query is answered by the WINNING adapter: publishing the
+    # raw best-job adapter from the result into a fresh pool reproduces
+    # the continuation token-for-token
+    prompt = np.arange(5, dtype=np.int32) % cfg.vocab_size
+    rid = fe.submit("tenant-a", prompt, 6)
+    fe.drain()
+    pool2 = AdapterPool(cfg, 2)
+    pool2.publish("tenant-a", jr.adapter, jr.config.lora_rank)
+    rep2 = ServingReplica(cfg, params, pool2, lanes=2, max_len=16)
+    fe2 = ServingFrontend(rep2)
+    rid2 = fe2.submit("tenant-a", prompt, 6)
+    fe2.drain()
+    assert fe.result(rid) == fe2.result(rid2)
+
+
+def test_tune_to_serve_pool_full_keeps_artifact(env, tmp_path):
+    """When the pool has no free slot the publish is refused (audit event,
+    reason=refused) but the checkpoint artifact survives for a later
+    publish — durable state outlives admission pressure."""
+    from repro.core import engine as alto
+    from repro.core.early_exit import EarlyExitConfig
+    from repro.core.service import TuningService
+    from repro.data.synthetic import make_task_dataset
+    from repro.sched.events import EventKind
+
+    cfg, params, adapters, ranks = env
+    ds = make_task_dataset("t2s2", cfg.vocab_size, seq_len=16, num_train=32,
+                           num_val=8, difficulty=0.3)
+    serve_dir = str(tmp_path / "serve")
+    svc = TuningService(total_gpus=2, eval_every=2, serve_dir=serve_dir)
+    pool = AdapterPool(cfg, 1)
+    pool.publish("squatter", adapters[0], 4)        # pool already full
+    rep = ServingReplica(cfg, params, pool, lanes=1, max_len=16)
+    fe = ServingFrontend(rep)
+    svc.attach_serving(fe, gpus=1, horizon_s=10_000.0)
+    task = alto.Task(model=cfg, dataset=ds, num_gpus=1, max_steps=4,
+                     num_slots=1, name="tenant-b",
+                     search_space={"lr": [1e-3]})
+    svc.submit(task, early_exit=EarlyExitConfig(
+        warmup_ratio=0.25, select_ratio=1.0)).result()
+    evs = [e for e in svc._runtime_events()
+           if e.kind is EventKind.ADAPTER_PUBLISHED]
+    assert len(evs) == 1 and evs[0].reason == "refused"
+    assert "tenant-b" not in pool.resident()
+    # the durable artifact is still publishable once capacity frees up
+    fe.retire("squatter")
+    aid = fe.publish_checkpoint(svc._ckpt_paths["tenant-b"])
+    assert aid == "tenant-b" and pool.resident() == {"tenant-b": 0}
