@@ -28,6 +28,7 @@ from repro.core.early_exit import EarlyExitConfig
 from repro.core.executor import BatchedExecutor, TaskResult
 from repro.data.synthetic import TaskDataset, make_task_dataset
 from repro.models import model as M
+from repro.sched import fitted as fitted_models
 from repro.sched import profiler
 from repro.sched.cluster import ColocationSpec, ExecutorTaskDriver
 from repro.sched.events import ProgressEvent
@@ -105,11 +106,18 @@ class EngineReport:
 class Engine:
     def __init__(self, strategy: str = "adapter_parallel",
                  total_gpus: int = 8, eval_every: int = 5,
-                 profile_store: Optional[profiler.ProfileStore] = None):
+                 profile_store: Optional[profiler.ProfileStore] = None,
+                 fitted: bool = False):
         assert strategy in ("adapter_parallel", "single_gpu")
         self.strategy = strategy
         self.total_gpus = total_gpus
         self.eval_every = eval_every
+        # fitted=True: admission budgets (memory_model -> ColocationSpec.mem
+        # -> admit_cross_task / backfill / plan_fused) swap to the
+        # profile-fitted (k0, k1, k2) models in sched/fitted.py once the
+        # ProfileStore holds enough step observations for the profile key;
+        # the analytic models stay the fallback below the guard.
+        self.fitted = fitted
         self.profile_store = (profile_store if profile_store is not None
                               else profiler.ProfileStore())
         self._param_cache: Dict[str, Dict] = {}
@@ -140,7 +148,18 @@ class Engine:
                 cfg, z, bsz, seq, task.num_gpus)) for z in (1, 2, 4, 8)]
             self._mem_cache[key] = fit_memory_model(
                 pts, seq, capacity=task.device_memory)
-        return self._mem_cache[key]
+        mem = self._mem_cache[key]
+        if self.fitted:
+            # swap in the profile-fitted rank-aware M_hat once the store
+            # has enough observed steps for this (arch, gpus); r_max frames
+            # the fit so rank-unknown requests stay pessimistically billed.
+            # (Not memoized here: fitted.py caches through the store's
+            # versioned spec cache, which record_step invalidates.)
+            frame = dataclasses.replace(
+                mem, r_max=task.model_config().lora.r_max)
+            return fitted_models.fitted_memory_model(
+                self.profile_store, self.profile_key(task), frame)
+        return mem
 
     def pick_slots(self, task: Task) -> int:
         """Admit the largest slot count whose total batch fits the memory

@@ -166,6 +166,14 @@ class TuningService:
     at admission; ``migrate`` (default on) additionally lets the runtime
     evict or migrate a live guest whose replica regrew under it, moves
     that never delay the guest past its in-place projection.
+
+    ``fitted=True`` swaps admission budgeting (the engine's memory model,
+    hence ``admit_cross_task``/backfill/``plan_fused``) onto the
+    profile-fitted (k0, k1, k2) cost models in ``sched/fitted.py`` once
+    enough fused-step observations accumulate for a profile key —
+    ``_feedback`` records one raw ``StepObservation`` per completed task
+    either way, so a session budgets analytically until measurement can
+    take over.
     """
 
     def __init__(self, total_gpus: Optional[int] = None,
@@ -177,7 +185,8 @@ class TuningService:
                  fusion_planning: bool = True, migrate: bool = True,
                  profile_path: Optional[str] = None,
                  max_tasks_per_tenant: Optional[int] = None,
-                 serve_dir: Optional[str] = None):
+                 serve_dir: Optional[str] = None,
+                 fitted: Optional[bool] = None):
         if profile_store is None and profile_path is not None:
             # persistence across sessions (ROADMAP service hardening):
             # feedback observed by earlier service processes seeds this one
@@ -187,7 +196,8 @@ class TuningService:
             engine = Engine(strategy=strategy or "adapter_parallel",
                             total_gpus=total_gpus or 8,
                             eval_every=eval_every or 5,
-                            profile_store=profile_store)
+                            profile_store=profile_store,
+                            fitted=bool(fitted))
         else:
             # an explicit engine carries its own configuration; reject
             # conflicting explicit args instead of silently ignoring them
@@ -199,6 +209,8 @@ class TuningService:
             if eval_every is not None and eval_every != engine.eval_every:
                 raise ValueError("eval_every conflicts with "
                                  "engine.eval_every")
+            if fitted is not None and bool(fitted) != engine.fitted:
+                raise ValueError("fitted conflicts with engine.fitted")
         self.engine = engine
         self.profile_store = engine.profile_store
         self.total_gpus = engine.total_gpus
@@ -413,6 +425,24 @@ class TuningService:
                 estimated_duration=meta.unscaled_duration,
                 wall_step_time_s=wall,
                 wall_token_time_s=wall_tok)
+            # raw step observation: the training set for the fitted
+            # (k0, k1, k2) step-time/memory models (sched/fitted.py).
+            # Always recorded (cheap, FIFO-capped per key); consumed only
+            # under fitted=True. Peak memory uses the admission model's
+            # rank-aware prediction — the CPU container's stand-in for
+            # the platform's measured peak, same framing as profiling.
+            if wall is not None and meta.colo is not None:
+                colo = meta.colo
+                tokens = float(colo.slots_needed * colo.per_adapter_batch
+                               * colo.seq_len)
+                rank = colo.lora_rank or (
+                    colo.mem.charged_rank(None) if colo.mem else 1)
+                peak = (colo.mem.predict_ranked(tokens, tokens * rank)
+                        if colo.mem is not None else None)
+                self.profile_store.record_step(
+                    meta.profile_key, tokens=tokens,
+                    rank_tokens=tokens * rank, wall_s=wall,
+                    peak_memory=peak)
 
     # ------------------------------------------------------- tune-to-serve
     def _tune_to_serve(self, name: str, meta: _TaskMeta) -> None:

@@ -21,6 +21,7 @@ import numpy as np
 from repro.kernels.grouped_lora import grouped_lora as K
 from repro.kernels.grouped_lora import ragged as R
 from repro.kernels.grouped_lora import ranklocal as RL
+from repro.kernels.grouped_lora.autotune import DEFAULT_PLAN, TilePlan
 
 _LANE = 128   # TPU lane width; last-dim tile multiple
 _SUB = 8      # sublane multiple
@@ -82,44 +83,47 @@ def _pad_bwd(x, A, B, s, dy):
     return xp, Ap, Bp, sp, dyp
 
 
-def _fwd_impl(x, A, B, scale, y_base, interpret):
+def _fwd_impl(x, A, B, scale, y_base, interpret, plan=DEFAULT_PLAN):
     T, dout = x.shape[1], B.shape[2]
     xp, Ap, Bp, yb = _pad_fwd(x, A, B, y_base)
-    s = K.xa(xp, Ap, interpret=interpret)
-    y = K.sb_add(s, Bp, scale, yb, interpret=interpret)
+    s = K.xa(xp, Ap, bm=plan.bm, bk=plan.bk, interpret=interpret)
+    y = K.sb_add(s, Bp, scale, yb, bm=plan.bm, bn=plan.bn,
+                 interpret=interpret)
     return y[:, :T, :dout], s[:, :T, :]      # s padded on r only
 
 
-def _bwd_impl(x, A, B, scale, s, dy, interpret):
+def _bwd_impl(x, A, B, scale, s, dy, interpret, plan=DEFAULT_PLAN):
     T, din = x.shape[1], x.shape[2]
     r, dout = B.shape[1], B.shape[2]
     xp, Ap, Bp, sp, dyp = _pad_bwd(x, A, B, s, dy)
-    ds_ = K.ds(dyp, Bp, scale, interpret=interpret)
-    dx_ = K.dx(ds_, Ap, interpret=interpret)
-    dA_ = K.da(xp, ds_, interpret=interpret)
-    dB_ = K.db(sp, dyp, scale, interpret=interpret)
+    ds_ = K.ds(dyp, Bp, scale, bm=plan.bm, bk=plan.bk, interpret=interpret)
+    dx_ = K.dx(ds_, Ap, bm=plan.bm, bn=plan.bn, interpret=interpret)
+    dA_ = K.da(xp, ds_, bd=plan.bn, bt=plan.bt, interpret=interpret)
+    dB_ = K.db(sp, dyp, scale, bn=plan.bn, bt=plan.bt, interpret=interpret)
     return (dx_[:, :T, :din], dA_[:, :din, :r], dB_[:, :r, :dout])
 
 
 # ---------------------------------------------------------------------------
-# custom_vjp variants (cached per (interpret, has_base))
+# custom_vjp variants (cached per (interpret, has_base, plan) — TilePlan is
+# frozen/hashable, so tuned plans get their own traced variant and the
+# default plan keeps hitting the original cache entries)
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _make_fn(interpret: bool, has_base: bool):
+def _make_fn(interpret: bool, has_base: bool, plan: TilePlan = DEFAULT_PLAN):
     if has_base:
         @jax.custom_vjp
         def f(x, A, B, scale, y_base):
-            y, _ = _fwd_impl(x, A, B, scale, y_base, interpret)
+            y, _ = _fwd_impl(x, A, B, scale, y_base, interpret, plan)
             return y
 
         def f_fwd(x, A, B, scale, y_base):
-            y, s = _fwd_impl(x, A, B, scale, y_base, interpret)
+            y, s = _fwd_impl(x, A, B, scale, y_base, interpret, plan)
             return y, (x, A, B, scale, s)
 
         def f_bwd(res, dy):
             x, A, B, scale, s = res
-            dx_, dA_, dB_ = _bwd_impl(x, A, B, scale, s, dy, interpret)
+            dx_, dA_, dB_ = _bwd_impl(x, A, B, scale, s, dy, interpret, plan)
             dscale = jnp.zeros_like(scale)   # scale is a hyperparam
             return dx_, dA_, dB_, dscale, dy
 
@@ -128,16 +132,16 @@ def _make_fn(interpret: bool, has_base: bool):
 
     @jax.custom_vjp
     def g(x, A, B, scale):
-        y, _ = _fwd_impl(x, A, B, scale, None, interpret)
+        y, _ = _fwd_impl(x, A, B, scale, None, interpret, plan)
         return y
 
     def g_fwd(x, A, B, scale):
-        y, s = _fwd_impl(x, A, B, scale, None, interpret)
+        y, s = _fwd_impl(x, A, B, scale, None, interpret, plan)
         return y, (x, A, B, scale, s)
 
     def g_bwd(res, dy):
         x, A, B, scale, s = res
-        dx_, dA_, dB_ = _bwd_impl(x, A, B, scale, s, dy, interpret)
+        dx_, dA_, dB_ = _bwd_impl(x, A, B, scale, s, dy, interpret, plan)
         return dx_, dA_, dB_, jnp.zeros_like(scale)
 
     g.defvjp(g_fwd, g_bwd)
@@ -147,12 +151,17 @@ def _make_fn(interpret: bool, has_base: bool):
 def grouped_lora(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
                  scale: jnp.ndarray,
                  y_base: Optional[jnp.ndarray] = None, *,
-                 interpret: bool = False) -> jnp.ndarray:
+                 interpret: bool = False,
+                 plan: Optional[TilePlan] = None) -> jnp.ndarray:
     """Differentiable grouped LoRA: scale*(x@A)@B (+ y_base).
 
     x: [Z,T,din]; A: [Z,din,r]; B: [Z,r,dout]; scale: [Z].
+    ``plan`` (an autotuned ``TilePlan``) overrides the static block
+    constants; None keeps the defaults. Tuned plans re-tile only parallel
+    grid dims, so outputs are bitwise identical to the default plan.
     """
-    fn = _make_fn(bool(interpret), y_base is not None)
+    fn = _make_fn(bool(interpret), y_base is not None,
+                  plan if plan is not None else DEFAULT_PLAN)
     if y_base is not None:
         return fn(x, A, B, scale, y_base)
     return fn(x, A, B, scale)
@@ -162,22 +171,27 @@ def grouped_lora(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
 # ragged variant: per-slot token-row counts (heterogeneous batch widths)
 # ---------------------------------------------------------------------------
 
-def _ragged_fwd_impl(x, A, B, scale, rows, y_base, interpret):
+def _ragged_fwd_impl(x, A, B, scale, rows, y_base, interpret,
+                     plan=DEFAULT_PLAN):
     T, dout = x.shape[1], B.shape[2]
     xp, Ap, Bp, yb = _pad_fwd(x, A, B, y_base)
-    s = R.xa(xp, Ap, rows, interpret=interpret)
-    y = R.sb_add(s, Bp, scale, rows, yb, interpret=interpret)
+    s = R.xa(xp, Ap, rows, bm=plan.bm, bk=plan.bk, interpret=interpret)
+    y = R.sb_add(s, Bp, scale, rows, yb, bm=plan.bm, bn=plan.bn,
+                 interpret=interpret)
     return y[:, :T, :dout], s[:, :T, :]
 
 
-def _ragged_bwd_impl(x, A, B, scale, rows, s, dy, interpret):
+def _ragged_bwd_impl(x, A, B, scale, rows, s, dy, interpret,
+                     plan=DEFAULT_PLAN):
     T, din = x.shape[1], x.shape[2]
     r, dout = B.shape[1], B.shape[2]
     xp, Ap, Bp, sp, dyp = _pad_bwd(x, A, B, s, dy)
-    ds_ = R.ds(dyp, Bp, scale, rows, interpret=interpret)
-    dx_ = R.dx(ds_, Ap, rows, interpret=interpret)
-    dA_ = R.da(xp, ds_, rows, interpret=interpret)
-    dB_ = R.db(sp, dyp, scale, rows, interpret=interpret)
+    ds_ = R.ds(dyp, Bp, scale, rows, bm=plan.bm, bk=plan.bk,
+               interpret=interpret)
+    dx_ = R.dx(ds_, Ap, rows, bm=plan.bm, bn=plan.bn, interpret=interpret)
+    dA_ = R.da(xp, ds_, rows, bd=plan.bn, bt=plan.bt, interpret=interpret)
+    dB_ = R.db(sp, dyp, scale, rows, bn=plan.bn, bt=plan.bt,
+               interpret=interpret)
     return (dx_[:, :T, :din], dA_[:, :din, :r], dB_[:, :r, :dout])
 
 
@@ -187,21 +201,24 @@ def _rows_cotangent(rows):
 
 
 @functools.lru_cache(maxsize=None)
-def _make_ragged_fn(interpret: bool, has_base: bool):
+def _make_ragged_fn(interpret: bool, has_base: bool,
+                    plan: TilePlan = DEFAULT_PLAN):
     if has_base:
         @jax.custom_vjp
         def f(x, A, B, scale, rows, y_base):
-            y, _ = _ragged_fwd_impl(x, A, B, scale, rows, y_base, interpret)
+            y, _ = _ragged_fwd_impl(x, A, B, scale, rows, y_base, interpret,
+                                    plan)
             return y
 
         def f_fwd(x, A, B, scale, rows, y_base):
-            y, s = _ragged_fwd_impl(x, A, B, scale, rows, y_base, interpret)
+            y, s = _ragged_fwd_impl(x, A, B, scale, rows, y_base, interpret,
+                                    plan)
             return y, (x, A, B, scale, rows, s)
 
         def f_bwd(res, dy):
             x, A, B, scale, rows, s = res
             dx_, dA_, dB_ = _ragged_bwd_impl(x, A, B, scale, rows, s, dy,
-                                             interpret)
+                                             interpret, plan)
             return (dx_, dA_, dB_, jnp.zeros_like(scale),
                     _rows_cotangent(rows), dy)
 
@@ -210,17 +227,17 @@ def _make_ragged_fn(interpret: bool, has_base: bool):
 
     @jax.custom_vjp
     def g(x, A, B, scale, rows):
-        y, _ = _ragged_fwd_impl(x, A, B, scale, rows, None, interpret)
+        y, _ = _ragged_fwd_impl(x, A, B, scale, rows, None, interpret, plan)
         return y
 
     def g_fwd(x, A, B, scale, rows):
-        y, s = _ragged_fwd_impl(x, A, B, scale, rows, None, interpret)
+        y, s = _ragged_fwd_impl(x, A, B, scale, rows, None, interpret, plan)
         return y, (x, A, B, scale, rows, s)
 
     def g_bwd(res, dy):
         x, A, B, scale, rows, s = res
         dx_, dA_, dB_ = _ragged_bwd_impl(x, A, B, scale, rows, s, dy,
-                                         interpret)
+                                         interpret, plan)
         return (dx_, dA_, dB_, jnp.zeros_like(scale),
                 _rows_cotangent(rows))
 
@@ -231,7 +248,8 @@ def _make_ragged_fn(interpret: bool, has_base: bool):
 def ragged_grouped_lora(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
                         scale: jnp.ndarray, rows: jnp.ndarray,
                         y_base: Optional[jnp.ndarray] = None, *,
-                        interpret: bool = False) -> jnp.ndarray:
+                        interpret: bool = False,
+                        plan: Optional[TilePlan] = None) -> jnp.ndarray:
     """Differentiable RAGGED grouped LoRA: slot z applies its adapter to
     only the first ``rows[z]`` token rows of its lane; padded rows get a
     zero delta (y_base passes through) and zero gradients.
@@ -239,8 +257,10 @@ def ragged_grouped_lora(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
     x: [Z,T,din]; A: [Z,din,r]; B: [Z,r,dout]; scale: [Z]; rows: [Z] int.
     ``rows == T`` everywhere reproduces ``grouped_lora`` exactly — the
     executor dispatches dense for homogeneous mixes, ragged otherwise.
+    ``plan`` overrides the static block constants (see ``grouped_lora``).
     """
-    fn = _make_ragged_fn(bool(interpret), y_base is not None)
+    fn = _make_ragged_fn(bool(interpret), y_base is not None,
+                         plan if plan is not None else DEFAULT_PLAN)
     if y_base is not None:
         return fn(x, A, B, scale, rows, y_base)
     return fn(x, A, B, scale, rows)
@@ -250,43 +270,55 @@ def ragged_grouped_lora(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
 # rank-local variant: per-slot true ranks (composes with ragged rows)
 # ---------------------------------------------------------------------------
 
-def _ranklocal_fwd_impl(x, A, B, scale, ranks, rows, y_base, interpret):
+def _ranklocal_fwd_impl(x, A, B, scale, ranks, rows, y_base, interpret,
+                        plan=DEFAULT_PLAN):
+    # plan.br applies only where rank is an OUTPUT axis (xa; and ds/da/db
+    # below) — sb_add/dx contract over rank, so they keep the default BR
+    # grouping to preserve bitwise identity with the static constants.
     T, dout = x.shape[1], B.shape[2]
     xp, Ap, Bp, yb = _pad_fwd(x, A, B, y_base)
-    s = RL.xa(xp, Ap, rows, ranks, interpret=interpret)
-    y = RL.sb_add(s, Bp, scale, rows, ranks, yb, interpret=interpret)
+    s = RL.xa(xp, Ap, rows, ranks, bm=plan.bm, bk=plan.bk, br=plan.br,
+              interpret=interpret)
+    y = RL.sb_add(s, Bp, scale, rows, ranks, yb, bm=plan.bm, bn=plan.bn,
+                  br=RL.BR, interpret=interpret)
     return y[:, :T, :dout], s[:, :T, :]
 
 
-def _ranklocal_bwd_impl(x, A, B, scale, ranks, rows, s, dy, interpret):
+def _ranklocal_bwd_impl(x, A, B, scale, ranks, rows, s, dy, interpret,
+                        plan=DEFAULT_PLAN):
     T, din = x.shape[1], x.shape[2]
     r, dout = B.shape[1], B.shape[2]
     xp, Ap, Bp, sp, dyp = _pad_bwd(x, A, B, s, dy)
-    ds_ = RL.ds(dyp, Bp, scale, rows, ranks, interpret=interpret)
-    dx_ = RL.dx(ds_, Ap, rows, ranks, interpret=interpret)
-    dA_ = RL.da(xp, ds_, rows, ranks, interpret=interpret)
-    dB_ = RL.db(sp, dyp, scale, rows, ranks, interpret=interpret)
+    ds_ = RL.ds(dyp, Bp, scale, rows, ranks, bm=plan.bm, bk=plan.bk,
+                br=plan.br, interpret=interpret)
+    dx_ = RL.dx(ds_, Ap, rows, ranks, bm=plan.bm, bn=plan.bn, br=RL.BR,
+                interpret=interpret)
+    dA_ = RL.da(xp, ds_, rows, ranks, bd=plan.bn, bt=plan.bt, br=plan.br,
+                interpret=interpret)
+    dB_ = RL.db(sp, dyp, scale, rows, ranks, bn=plan.bn, bt=plan.bt,
+                br=plan.br, interpret=interpret)
     return (dx_[:, :T, :din], dA_[:, :din, :r], dB_[:, :r, :dout])
 
 
 @functools.lru_cache(maxsize=None)
-def _make_ranklocal_fn(interpret: bool, has_base: bool):
+def _make_ranklocal_fn(interpret: bool, has_base: bool,
+                       plan: TilePlan = DEFAULT_PLAN):
     if has_base:
         @jax.custom_vjp
         def f(x, A, B, scale, ranks, rows, y_base):
             y, _ = _ranklocal_fwd_impl(x, A, B, scale, ranks, rows, y_base,
-                                       interpret)
+                                       interpret, plan)
             return y
 
         def f_fwd(x, A, B, scale, ranks, rows, y_base):
             y, s = _ranklocal_fwd_impl(x, A, B, scale, ranks, rows, y_base,
-                                       interpret)
+                                       interpret, plan)
             return y, (x, A, B, scale, ranks, rows, s)
 
         def f_bwd(res, dy):
             x, A, B, scale, ranks, rows, s = res
             dx_, dA_, dB_ = _ranklocal_bwd_impl(x, A, B, scale, ranks, rows,
-                                                s, dy, interpret)
+                                                s, dy, interpret, plan)
             return (dx_, dA_, dB_, jnp.zeros_like(scale),
                     _rows_cotangent(ranks), _rows_cotangent(rows), dy)
 
@@ -296,18 +328,18 @@ def _make_ranklocal_fn(interpret: bool, has_base: bool):
     @jax.custom_vjp
     def g(x, A, B, scale, ranks, rows):
         y, _ = _ranklocal_fwd_impl(x, A, B, scale, ranks, rows, None,
-                                   interpret)
+                                   interpret, plan)
         return y
 
     def g_fwd(x, A, B, scale, ranks, rows):
         y, s = _ranklocal_fwd_impl(x, A, B, scale, ranks, rows, None,
-                                   interpret)
+                                   interpret, plan)
         return y, (x, A, B, scale, ranks, rows, s)
 
     def g_bwd(res, dy):
         x, A, B, scale, ranks, rows, s = res
         dx_, dA_, dB_ = _ranklocal_bwd_impl(x, A, B, scale, ranks, rows,
-                                            s, dy, interpret)
+                                            s, dy, interpret, plan)
         return (dx_, dA_, dB_, jnp.zeros_like(scale),
                 _rows_cotangent(ranks), _rows_cotangent(rows))
 
@@ -328,7 +360,8 @@ def ranklocal_grouped_lora(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
                            scale: jnp.ndarray, ranks: jnp.ndarray,
                            rows: Optional[jnp.ndarray] = None,
                            y_base: Optional[jnp.ndarray] = None, *,
-                           interpret: bool = False) -> jnp.ndarray:
+                           interpret: bool = False,
+                           plan: Optional[TilePlan] = None) -> jnp.ndarray:
     """Differentiable RANK-LOCAL grouped LoRA: slot z applies only the
     first ``ranks[z]`` rank columns/rows of its adapter (and, with
     ``rows``, only its first rows[z] token rows). Dead rank tiles skip
@@ -339,18 +372,23 @@ def ranklocal_grouped_lora(x: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
     Concrete ``ranks`` >= r everywhere dispatch to the dense/ragged path
     (identical tiling => bitwise-equal; rank-tiled accumulation would
     only regroup the same fp32 sums), mirroring the executor's per-step
-    dense-vs-ragged dispatch.
+    dense-vs-ragged dispatch. ``plan`` (an autotuned ``TilePlan``)
+    overrides the static block constants on whichever path dispatch picks;
+    tuned-vs-default outputs are bitwise identical (parallel-dim re-tiling
+    only — the autotuner pins every contraction grouping).
     """
     r = A.shape[2]
     cmin = _concrete_min(ranks)
     if cmin is not None and cmin >= r:
         if rows is None:
-            return grouped_lora(x, A, B, scale, y_base, interpret=interpret)
+            return grouped_lora(x, A, B, scale, y_base, interpret=interpret,
+                                plan=plan)
         return ragged_grouped_lora(x, A, B, scale, rows, y_base,
-                                   interpret=interpret)
+                                   interpret=interpret, plan=plan)
     if rows is None:
         rows = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
-    fn = _make_ranklocal_fn(bool(interpret), y_base is not None)
+    fn = _make_ranklocal_fn(bool(interpret), y_base is not None,
+                            plan if plan is not None else DEFAULT_PLAN)
     if y_base is not None:
         return fn(x, A, B, scale, ranks, rows, y_base)
     return fn(x, A, B, scale, ranks, rows)

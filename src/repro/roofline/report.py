@@ -6,14 +6,18 @@ nominate hillclimb candidates.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 from typing import Dict, List
 
 from repro.roofline.analysis import (HEADER, Roofline, load_all,
                                      ranklocal_savings)
+from repro.sched.profiler import PEAK_FLOPS_BF16
 
 DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "experiments", "dryrun")
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
+DEFAULT_AUTOTUNE = os.path.join(_REPO_ROOT, "BENCH_autotune.json")
 
 # the rank-sweep tuning mix the rank-local bench trains (r = 4..64)
 RANK_SWEEP = (4, 8, 16, 32, 64)
@@ -41,6 +45,55 @@ def print_ranklocal(archs: List[str], tokens_per_slot: int = 4096,
     else:
         for r in rows:
             print("  " + r.row())
+
+
+def print_autotune_gap(path: str, md: bool = False,
+                       mfu: float = 0.4) -> None:
+    """Tuned-vs-default-vs-ceiling gap per autotuned shape key, from the
+    bench artifact (``benchmarks/bench_autotune.py`` -> BENCH_autotune.json).
+    Three columns of headroom: what the tile-plan autotuner already
+    reclaimed over the static constants (tuned/default), and what remains
+    between the tuned kernels and the roofline ceiling (the target MFU
+    fraction of peak MXU throughput) — the gap left for Mosaic-level
+    tuning to chase. Harness note: the artifact's timings come from
+    whatever backend produced it (interpret mode on this CPU container, so
+    absolute ceiling gaps are astronomical; the tuned/default ratio is the
+    portable signal)."""
+    if not os.path.exists(path):
+        print(f"\n(no autotune artifact at {path}; run "
+              "benchmarks/bench_autotune.py to populate the gap section)")
+        return
+    with open(path) as f:
+        bench = json.load(f)
+    ceiling = PEAK_FLOPS_BF16 * mfu
+    sweeps = bench.get("kernel_sweeps", [])
+    print(f"\nTile-plan autotune gap (ceiling = {mfu:.0%} of peak MXU, "
+          f"{ceiling/1e12:.1f} TFLOP/s; backend: "
+          f"{bench.get('backend', 'unknown')}):")
+    if md:
+        print("| key | default GF/s | tuned GF/s | tuned/default | "
+              "bitwise | x to ceiling |")
+        print("|---|---|---|---|---|---|")
+    for s in sweeps:
+        key = (f"d{s['d_in']}x{s['d_out']} r{s['r_max']} Z{s['Z']} "
+               f"T{s['tokens']}")
+        dflt = s["default_flops_per_s"]
+        tuned = s["tuned_flops_per_s"]
+        gap = ceiling / max(tuned, 1e-12)
+        if md:
+            print(f"| {key} | {dflt/1e9:.3f} | {tuned/1e9:.3f} | "
+                  f"x{s['speedup']:.2f} | {s['bitwise_equal']} | "
+                  f"x{gap:.3g} |")
+        else:
+            print(f"  {key:28s} default {dflt/1e9:8.3f} GF/s  tuned "
+                  f"{tuned/1e9:8.3f} GF/s  x{s['speedup']:.2f}  "
+                  f"bitwise={s['bitwise_equal']}  ceiling-gap x{gap:.3g}")
+    fit = bench.get("fitted_model")
+    if fit:
+        print(f"  fitted step model: rel err {fit['fitted_rel_error']:.4f} "
+              f"vs analytic {fit['analytic_rel_error']:.4f} on "
+              f"{fit['heldout_points']} held-out points "
+              f"({fit['observations']} training observations)")
 
 
 def pick_hillclimb(rows: List[Roofline]) -> Dict[str, Roofline]:
@@ -73,6 +126,9 @@ def main() -> None:
     ap.add_argument("--mesh", default="pod16x16",
                     help="mesh for the main table (roofline is single-pod)")
     ap.add_argument("--md", action="store_true", help="markdown output")
+    ap.add_argument("--autotune", default=DEFAULT_AUTOTUNE,
+                    help="BENCH_autotune.json for the tuned-vs-default-vs-"
+                         "ceiling gap section")
     args = ap.parse_args()
 
     rl = load_all(args.dir)
@@ -99,6 +155,7 @@ def main() -> None:
         print(f"  {why:24s} -> {r.arch} x {r.shape} "
               f"(dominant={r.dominant}, MFU<={r.mfu_bound:.3f})")
     print_ranklocal(sorted({r.arch for r in rows}), md=args.md)
+    print_autotune_gap(args.autotune, md=args.md)
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ import dataclasses
 import json
 import os
 import time
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 
@@ -111,18 +111,31 @@ _CACHE: Dict[Tuple, TaskProfile] = {}
 
 
 def measure_throughput(step_fn: Callable, args: tuple, total_batch: int,
-                       warmup: int = 1, iters: int = 3) -> TaskProfile:
-    """Wall-clock a jitted step function (real, CPU-scale models)."""
-    out = None
-    for _ in range(warmup):
-        out = step_fn(*args)
+                       warmup: int = 1, iters: int = 3,
+                       repeats: int = 3) -> TaskProfile:
+    """Wall-clock a jitted step function (real, CPU-scale models).
+
+    ``warmup`` iterations run first (compile + caches land outside the
+    timed region) and the timed loop runs ``repeats`` times, reporting the
+    MEDIAN per-step time — a single timing is at the mercy of a GC pause
+    or a noisy neighbor, and the autotuner picks tile-plan winners off
+    these numbers, so one outlier must not crown a candidate."""
     import jax
-    jax.block_until_ready(out)
-    t0 = time.time()
-    for _ in range(iters):
+    out = None
+    for _ in range(max(warmup, 1)):
         out = step_fn(*args)
     jax.block_until_ready(out)
-    dt = (time.time() - t0) / iters
+    samples = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.time()
+        for _ in range(iters):
+            out = step_fn(*args)
+        jax.block_until_ready(out)
+        samples.append((time.time() - t0) / iters)
+    samples.sort()
+    dt = samples[len(samples) // 2] if len(samples) % 2 else (
+        samples[len(samples) // 2 - 1] + samples[len(samples) // 2]) / 2
+    dt = max(dt, 1e-12)
     return TaskProfile(samples_per_s=total_batch / dt, step_time_s=dt,
                        peak_memory=0.0)
 
@@ -200,10 +213,26 @@ class ProfileRecord:
     observations: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class StepObservation:
+    """One observed fused step: its real token load, rank-weighted token
+    load, wall seconds, and (when the platform reports it) peak memory.
+    The raw points — not an EMA — because the fitted cost model
+    (``sched/fitted.py``) least-squares (k0, k1, k2) over them, and a
+    smoothed scalar cannot recover per-coefficient structure."""
+    tokens: float
+    rank_tokens: float
+    wall_s: float
+    peak_memory: Optional[float] = None
+
+
+MAX_STEP_OBSERVATIONS = 512      # per key; oldest evicted first
+
+
 class ProfileStore:
     """Session-scoped feedback store closing the profiler loop.
 
-    Two layers:
+    Four layers:
 
       * **Observed records** keyed by an arch-level profile key (e.g.
         ``(cfg.name, gpus)``): every completed task reports its realized
@@ -212,11 +241,20 @@ class ProfileStore:
         they are scheduled from observed rather than analytic estimates
         (early exits make worst-case analytic durations systematically
         pessimistic — paper Fig. 9 reports 72-83% sample savings).
+      * **Step observations** (``record_step``): raw per-step (tokens,
+        rank_tokens, wall_s, peak_memory) points per key, the training
+        set for the fitted (k0, k1, k2) step-time / memory models in
+        ``sched/fitted.py``. Persisted.
       * **Spec cache** keyed by ``(task_name, early-exit signature)``:
         ``Engine.schedule`` and ``Engine.batched_execution`` profile the
         same tasks back to back; the cache de-duplicates that work. Cache
         entries are versioned — any new observation invalidates previously
         computed specs so feedback takes effect immediately.
+      * **Durable specs** (``put_spec(..., durable=True)``): entries that
+        are NOT derived from observations — tile-plan autotune winners —
+        so they survive version bumps and are JSON-persisted by ``save``
+        (later sessions skip the sweep entirely). Durable specs must be
+        JSON-representable.
     """
 
     def __init__(self, ema: float = 0.5):
@@ -224,6 +262,8 @@ class ProfileStore:
         self.ema = ema
         self._records: Dict[Tuple, ProfileRecord] = {}
         self._specs: Dict[Tuple, Tuple[int, object]] = {}
+        self._durable_specs: Dict[Tuple, object] = {}
+        self._steps: Dict[Tuple, List[StepObservation]] = {}
         self._version = 0
 
     # ---- observed records --------------------------------------------------
@@ -296,24 +336,64 @@ class ProfileStore:
         rec = self._records.get(key)
         return rec.observations if rec is not None else 0
 
+    # ---- raw step observations (fitted cost model's training set) ----------
+    def record_step(self, key: Tuple, *, tokens: float, rank_tokens: float,
+                    wall_s: float, peak_memory: Optional[float] = None
+                    ) -> None:
+        """Log one observed fused step. Unlike ``record``, points are kept
+        raw (bounded FIFO per key) — ``sched/fitted.py`` least-squares the
+        (k0, k1, k2) step-time and memory models over them, which needs
+        the per-point (tokens, rank_tokens) structure an EMA destroys."""
+        obs = self._steps.setdefault(key, [])
+        obs.append(StepObservation(tokens=float(tokens),
+                                   rank_tokens=float(rank_tokens),
+                                   wall_s=float(wall_s),
+                                   peak_memory=(None if peak_memory is None
+                                                else float(peak_memory))))
+        if len(obs) > MAX_STEP_OBSERVATIONS:
+            del obs[:len(obs) - MAX_STEP_OBSERVATIONS]
+        self._version += 1              # fitted specs must re-derive
+
+    def step_observations(self, key: Tuple) -> List[StepObservation]:
+        return list(self._steps.get(key, ()))
+
+    def step_observation_count(self, key: Tuple) -> int:
+        return len(self._steps.get(key, ()))
+
     # ---- spec cache --------------------------------------------------------
     def get_spec(self, key: Tuple):
+        if key in self._durable_specs:
+            return self._durable_specs[key]
         hit = self._specs.get(key)
         if hit is None or hit[0] != self._version:
             return None
         return hit[1]
 
-    def put_spec(self, key: Tuple, spec) -> None:
-        self._specs[key] = (self._version, spec)
+    def put_spec(self, key: Tuple, spec, durable: bool = False) -> None:
+        """Cache a derived spec. ``durable=True`` marks the entry as NOT
+        observation-derived (tile-plan autotune winners): it survives
+        version bumps and is JSON-persisted by ``save`` — such specs must
+        be JSON-representable values."""
+        if durable:
+            json.dumps(spec)            # fail fast, not at save() time
+            self._durable_specs[key] = spec
+        else:
+            self._specs[key] = (self._version, spec)
 
     # ---- persistence (service sessions survive process restarts) -----------
     def save(self, path: str) -> None:
-        """JSON-persist the observed records (the spec cache is derived
-        state tied to in-process objects and is not saved). Keys must be
+        """JSON-persist the observed records, raw step observations, and
+        durable specs (the versioned spec cache is derived state tied to
+        in-process objects and is not saved). Keys must be
         JSON-representable tuples — which the engine's (arch, gpus) keys
-        are."""
+        and the autotuner's plan keys are.
+
+        The write is ATOMIC: the document lands in a same-directory tmp
+        file first and is ``os.replace``d into place, so a crash mid-save
+        leaves the previous profile intact instead of a truncated JSON the
+        next session cannot load."""
         data = {
-            "version": 1,
+            "version": 2,
             "ema": self.ema,
             "records": [
                 {"key": list(k),
@@ -323,9 +403,25 @@ class ProfileStore:
                  "observations": r.observations}
                 for k, r in sorted(self._records.items(),
                                    key=lambda kv: repr(kv[0]))],
+            "steps": [
+                {"key": list(k),
+                 "observations": [
+                     {"tokens": o.tokens, "rank_tokens": o.rank_tokens,
+                      "wall_s": o.wall_s, "peak_memory": o.peak_memory}
+                     for o in obs]}
+                for k, obs in sorted(self._steps.items(),
+                                     key=lambda kv: repr(kv[0]))],
+            "durable_specs": [
+                {"key": list(k), "spec": spec}
+                for k, spec in sorted(self._durable_specs.items(),
+                                      key=lambda kv: repr(kv[0]))],
         }
-        with open(path, "w") as f:
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
             json.dump(data, f, indent=2)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
 
     @classmethod
     def load(cls, path: str) -> "ProfileStore":
@@ -341,6 +437,17 @@ class ProfileStore:
                                    if rec.get("wall_token_time_s") is None
                                    else float(rec["wall_token_time_s"])),
                 observations=int(rec.get("observations", 1)))
+        for entry in data.get("steps", []):
+            store._steps[tuple(entry["key"])] = [
+                StepObservation(
+                    tokens=float(o["tokens"]),
+                    rank_tokens=float(o["rank_tokens"]),
+                    wall_s=float(o["wall_s"]),
+                    peak_memory=(None if o.get("peak_memory") is None
+                                 else float(o["peak_memory"])))
+                for o in entry["observations"]]
+        for entry in data.get("durable_specs", []):
+            store._durable_specs[tuple(entry["key"])] = entry["spec"]
         return store
 
     @classmethod

@@ -1,0 +1,192 @@
+"""Profile-fitted cost models: (k0, k1, k2) recovery from synthetic
+observations, minimum-observation/degeneracy guards with analytic
+fallback, spec-cache freshness, and the Engine/TuningService fitted=True
+wiring."""
+import numpy as np
+import pytest
+
+from repro.sched import fitted as F
+from repro.sched.intra_task import MemoryModel
+from repro.sched.profiler import (MAX_STEP_OBSERVATIONS, ProfileStore,
+                                  StepObservation)
+
+KEY = ("arch", 1)
+K0, K1, K2 = 0.02, 3e-6, 5e-8
+
+
+def _seed_store(n=32, noise=1e-5, seed=0, mem=True):
+    rng = np.random.default_rng(seed)
+    store = ProfileStore()
+    for _ in range(n):
+        t = float(rng.integers(256, 8192))
+        r = float(rng.integers(4, 64))
+        store.record_step(
+            KEY, tokens=t, rank_tokens=t * r,
+            wall_s=K0 + K1 * t + K2 * t * r + rng.normal(0.0, noise),
+            peak_memory=(1e9 + 1e4 * t + 100.0 * t * r) if mem else None)
+    return store
+
+
+# ---------------------------------------------------------------------------
+# fit recovery
+# ---------------------------------------------------------------------------
+
+def test_step_model_recovers_known_coefficients():
+    m = F.fitted_step_model(_seed_store(), KEY)
+    assert m is not None
+    assert m.k0 == pytest.approx(K0, rel=0.05)
+    assert m.k1 == pytest.approx(K1, rel=0.05)
+    assert m.k2 == pytest.approx(K2, rel=0.05)
+    assert m.rms_rel_error < 0.01
+    assert m.observations == 32
+    # slot interface == flat interface
+    assert m.step_time([1000.0, 1000.0], [8.0, 16.0]) == pytest.approx(
+        m.predict(2000.0, 1000.0 * 8 + 1000.0 * 16))
+
+
+def test_memory_model_recovers_known_coefficients():
+    frame = MemoryModel(k0=0.0, k1=0.0, seq_len=64, capacity=16 * 2 ** 30,
+                        safety_margin=0.8, r_max=32)
+    mm = F.fitted_memory_model(_seed_store(), KEY, frame)
+    assert mm is not frame
+    assert mm.k0 == pytest.approx(1e9, rel=0.05)
+    assert mm.k1 == pytest.approx(1e4, rel=0.05)
+    assert mm.k2 == pytest.approx(100.0, rel=0.05)
+    # device facts come from the frame, not the fit
+    assert (mm.capacity, mm.safety_margin, mm.seq_len, mm.r_max) == \
+        (frame.capacity, frame.safety_margin, frame.seq_len, frame.r_max)
+
+
+def test_nonnegative_clamp_preserves_safety_direction():
+    # rank term anti-correlated with wall time => OLS would fit k2 < 0
+    # ("more rank is free"); the column-drop refit must zero it instead
+    rng = np.random.default_rng(1)
+    obs = []
+    for _ in range(24):
+        t = float(rng.integers(256, 8192))
+        r = float(rng.integers(4, 64))
+        obs.append(StepObservation(tokens=t, rank_tokens=t * r,
+                                   wall_s=0.01 + K1 * t - 1e-9 * t * r))
+    m = F.fit_step_model(obs)
+    assert m is not None and m.k2 == 0.0 and m.k1 > 0
+
+
+# ---------------------------------------------------------------------------
+# guards + fallback
+# ---------------------------------------------------------------------------
+
+def test_min_observations_guard():
+    store = _seed_store(n=F.MIN_OBSERVATIONS - 1)
+    assert F.fitted_step_model(store, KEY) is None
+    frame = MemoryModel(k0=1.0, k1=1.0, seq_len=64, capacity=1e9)
+    assert F.fitted_memory_model(store, KEY, frame) is frame  # fallback
+
+
+def test_degenerate_design_falls_back():
+    # every step at one rank: rank_tokens is collinear with tokens, the
+    # fit cannot separate k1 from k2 — analytic must win
+    store = ProfileStore()
+    for i in range(20):
+        t = 100.0 * (i + 1)
+        store.record_step(KEY, tokens=t, rank_tokens=8 * t,
+                          wall_s=0.01 + 1e-5 * t)
+    assert F.fitted_step_model(store, KEY) is None
+
+
+def test_fitted_fused_step_time_fallback_matches_analytic():
+    from repro.configs.registry import get_arch
+    from repro.sched import profiler
+    cfg = get_arch("paper-llama-tiny")
+    analytic = profiler.fused_step_time(cfg, [512.0] * 2, [8.0, 16.0], 1)
+    # no store/key -> analytic; empty store -> analytic
+    assert F.fitted_fused_step_time(cfg, [512.0] * 2, [8.0, 16.0], 1) == \
+        pytest.approx(analytic)
+    assert F.fitted_fused_step_time(cfg, [512.0] * 2, [8.0, 16.0], 1,
+                                    store=ProfileStore(), key=KEY) == \
+        pytest.approx(analytic)
+    # seeded store -> the fitted prediction, not the roofline
+    m = F.fitted_step_model(store := _seed_store(), KEY)
+    assert F.fitted_fused_step_time(cfg, [512.0] * 2, [8.0, 16.0], 1,
+                                    store=store, key=KEY) == \
+        pytest.approx(m.step_time([512.0] * 2, [8.0, 16.0]))
+
+
+def test_spec_cache_invalidation_on_new_observation():
+    store = _seed_store()
+    m1 = F.fitted_step_model(store, KEY)
+    assert F.fitted_step_model(store, KEY) is m1          # cached
+    store.record_step(KEY, tokens=100.0, rank_tokens=800.0, wall_s=0.05)
+    m2 = F.fitted_step_model(store, KEY)
+    assert m2 is not m1                                    # re-derived
+
+
+def test_observation_cap_fifo():
+    store = ProfileStore()
+    for i in range(MAX_STEP_OBSERVATIONS + 10):
+        store.record_step(KEY, tokens=float(i), rank_tokens=0.0, wall_s=1.0)
+    obs = store.step_observations(KEY)
+    assert len(obs) == MAX_STEP_OBSERVATIONS
+    assert obs[0].tokens == 10.0                           # oldest evicted
+
+
+def test_observations_persist_through_save_load(tmp_path):
+    store = _seed_store(n=10)
+    path = tmp_path / "p.json"
+    store.save(str(path))
+    reloaded = ProfileStore.load(str(path))
+    assert reloaded.step_observations(KEY) == store.step_observations(KEY)
+    assert F.fitted_step_model(reloaded, KEY) is not None
+
+
+# ---------------------------------------------------------------------------
+# Engine / TuningService wiring
+# ---------------------------------------------------------------------------
+
+def _tiny_task():
+    from repro.core.engine import Task
+    return Task(model="paper-llama-tiny", dataset="fit-wire",
+                search_space={"lr": [1e-3], "rank": [4]}, max_steps=4)
+
+
+def test_engine_fitted_flag_swaps_memory_model():
+    from repro.core.engine import Engine
+    task = _tiny_task()
+    plain = Engine(fitted=False)
+    base = plain.memory_model(task)
+    eng = Engine(fitted=True)
+    # below the observation guard: analytic coefficients, r_max framed in
+    mem = eng.memory_model(task)
+    assert (mem.k0, mem.k1) == (base.k0, base.k1)
+    assert mem.r_max == task.model_config().lora.r_max
+    # seed enough observations: the fitted coefficients take over
+    key = eng.profile_key(task)
+    rng = np.random.default_rng(0)
+    for _ in range(F.MIN_OBSERVATIONS + 4):
+        t = float(rng.integers(256, 8192))
+        r = float(rng.integers(4, 32))
+        eng.profile_store.record_step(key, tokens=t, rank_tokens=t * r,
+                                      wall_s=0.01,
+                                      peak_memory=1e9 + 1e4 * t + 50 * t * r)
+    fitted_mem = eng.memory_model(task)
+    assert fitted_mem.k0 == pytest.approx(1e9, rel=0.05)
+    assert fitted_mem.k2 == pytest.approx(50.0, rel=0.05)
+    # the default engine is untouched by the same data
+    plain.profile_store = eng.profile_store
+    assert plain.memory_model(task).k0 == base.k0
+
+
+def test_service_records_step_observations_and_fitted_conflict():
+    from repro.core.engine import Engine
+    from repro.core.service import TuningService
+    svc = TuningService(total_gpus=2, fitted=True)
+    assert svc.engine.fitted is True
+    task = _tiny_task()
+    h = svc.submit(task)
+    h.result()
+    key = svc.engine.profile_key(task)
+    assert svc.profile_store.step_observation_count(key) >= 1
+    obs = svc.profile_store.step_observations(key)[0]
+    assert obs.tokens > 0 and obs.wall_s > 0
+    assert obs.rank_tokens >= obs.tokens          # rank >= 1 charged
+    with pytest.raises(ValueError):
+        TuningService(engine=Engine(fitted=False), fitted=True)
