@@ -104,9 +104,55 @@ def make_prefill_step(cfg: ModelConfig) -> Callable:
 
 
 def make_serve_step(cfg: ModelConfig) -> Callable:
-    """serve_step(params, lora, cache, tokens[Z,b]) -> (logits, cache')."""
+    """serve_step(params, lora, cache, tokens[Z,b], active=None)
+    -> (logits, cache').
 
-    def serve_step(params, lora, cache, tokens):
-        return M.decode_step(cfg, params, lora, cache, tokens)
+    ``active`` ([Z, b] bool) is the per-lane continuous-batching mask:
+    inactive lanes neither write their cache nor advance their position
+    (idle lanes stay bitwise frozen while live lanes decode). Requires a
+    per-lane cache (``init_cache(..., per_lane=True)``)."""
+
+    def serve_step(params, lora, cache, tokens, active=None):
+        return M.decode_step(cfg, params, lora, cache, tokens,
+                             active=active)
 
     return serve_step
+
+
+def make_lane_prefill_step(cfg: ModelConfig) -> Callable:
+    """lane_prefill(params, lora, cache, tokens[Z,b,P], lane_mask[Z,b],
+    plens[Z,b]) -> (last-token logits, cache') — block prefill of a
+    subset of lanes of a live per-lane cache (ragged prompt lengths via
+    ``plens``, tokens right-padded to P); every other lane bitwise
+    untouched."""
+
+    def lane_prefill(params, lora, cache, tokens, lane_mask, plens):
+        return M.prefill_lanes(cfg, params, lora, cache, tokens,
+                               lane_mask, plens)
+
+    return lane_prefill
+
+
+def make_join_decode_step(cfg: ModelConfig) -> Callable:
+    """join_decode(params, lora, cache, tokens[Z,b,P], lane_mask[Z,b],
+    plens[Z,b], cur[Z,b], active[Z,b]) -> (prefill_greedy, logits,
+    decode_greedy, cache') — block-prefill the masked lanes AND run one
+    fused decode step over (active | joined) lanes in a SINGLE launch.
+
+    Each joiner's first token is its greedy prefill argmax, chosen
+    on-device and fed straight into the decode — no host round-trip
+    between the prefill and the step that consumes its first token.
+    Greedy joiners only (a sampled first token needs the host)."""
+
+    def join_decode(params, lora, cache, tokens, lane_mask, plens, cur,
+                    active):
+        p_logits, cache = M.prefill_lanes(cfg, params, lora, cache,
+                                          tokens, lane_mask, plens)
+        p_greedy = jnp.argmax(p_logits, axis=-1)
+        cur = jnp.where(lane_mask, p_greedy.astype(cur.dtype), cur)
+        live = jnp.logical_or(active, lane_mask)
+        logits, cache = M.decode_step(cfg, params, lora, cache, cur,
+                                      active=live)
+        return p_greedy, logits, jnp.argmax(logits, axis=-1), cache
+
+    return join_decode

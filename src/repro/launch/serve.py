@@ -56,6 +56,16 @@ def main() -> None:
                          "(default: uniform min(8, r_max))")
     ap.add_argument("--ring", action="store_true",
                     help="sliding-window ring cache (long-context mode)")
+    ap.add_argument("--mode", default="continuous",
+                    choices=["continuous", "round"],
+                    help="continuous = per-lane positions, zero join "
+                         "barrier; round = legacy epoch batching")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, the default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for sampling (0 = full vocab)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="replica-level PRNG seed for sampling")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -74,14 +84,17 @@ def main() -> None:
         pool.publish(f"adapter-{z}", adapter, ranks[z])
 
     replica = ServingReplica(cfg, params, pool, lanes=b,
-                             max_len=P + args.max_new, ring=args.ring)
-    frontend = ServingFrontend(replica)
+                             max_len=P + args.max_new, ring=args.ring,
+                             sample_seed=args.sample_seed)
+    frontend = ServingFrontend(replica, mode=args.mode)
 
     ds = make_task_dataset("serve", cfg.vocab_size, seq_len=P,
                            num_train=Z * b, difficulty=0.3,
                            seed=args.seed)
     prompts = ds.train[:Z * b, :P].astype(np.int32).reshape(Z, b, P)
-    rids = [[frontend.submit(f"adapter-{z}", prompts[z, i], args.max_new)
+    rids = [[frontend.submit(f"adapter-{z}", prompts[z, i], args.max_new,
+                             temperature=args.temperature,
+                             top_k=args.top_k, seed=z * b + i)
              for i in range(b)] for z in range(Z)]
 
     t0 = time.time()
@@ -91,7 +104,8 @@ def main() -> None:
     stats = replica
     toks_per_s = stats.total_generated / max(wall, 1e-9)
     print(f"arch={cfg.name} Z={Z} b={b} ranks={ranks} seed={args.seed} "
-          f"ring={replica.ring}")
+          f"ring={replica.ring} mode={args.mode} "
+          f"temperature={args.temperature} top_k={args.top_k}")
     print(f"served {stats.total_generated} tokens in {wall:.2f}s over "
           f"{stats.total_decode_steps} fused steps "
           f"({toks_per_s:.1f} tok/s aggregate)")

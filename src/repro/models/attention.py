@@ -77,11 +77,21 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     """Causal GQA attention.
 
     q:      [Z, b, Sq, H, hd]
+    q_pos:  [Sq] — or [Z, b, Sq] for PER-LANE positions (each (Z, b)
+            decode stream carries its own absolute position, the
+            continuous-batching cache layout)
     k, v:   [Z, b, Sk, KV, hd]   (H = KV * G)
-    q_pos:  [Sq]; k_pos: [Sk] absolute positions
+    k_pos:  [Sk] absolute positions, or [Z, b, Sk] per lane (ring caches
+            whose lanes wrap independently)
     window: sliding window size (0 = full causal)
-    kv_valid_len: optional scalar; keys at index >= len are masked
+    kv_valid_len: optional scalar — or [Z, b] per lane — keys at
+            index >= len are masked
     returns [Z, b, Sq, H, hd]
+
+    When any of q_pos / k_pos / kv_valid_len carries lane dims the bias
+    is built per lane ([Z, b, Sq, Sk]) so an idle or freshly-joined
+    lane's stale K/V is never visible to that lane's queries — and lanes
+    never read each other's K/V at all (the batch dims are independent).
     """
     Z, b, Sq, H, hd = q.shape
     KV = k.shape[3]
@@ -115,12 +125,27 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
     mode = _pick_mode(H, KV)
     kv_index = jnp.arange(k.shape[2], dtype=jnp.int32)
+    vlen = None if kv_valid_len is None else jnp.asarray(kv_valid_len)
 
     def bias_for(pos_c):
         bias = causal_mask_bias(pos_c, k_pos, window)
-        if kv_valid_len is not None:
-            bias = bias + jnp.where(kv_index[None, :] < kv_valid_len,
-                                    0.0, -jnp.inf)
+        if vlen is not None:
+            if vlen.ndim:                       # per-lane [Z, b]
+                bias = bias + jnp.where(
+                    kv_index < vlen[..., None, None], 0.0, -jnp.inf)
+            else:
+                bias = bias + jnp.where(kv_index[None, :] < vlen,
+                                        0.0, -jnp.inf)
+        return bias
+
+    def headed(bias, n_head_dims):
+        """Insert broadcast head dims into a per-lane [Z, b, Sq, Sk] bias
+        so it lines up with [Z, b, <heads...>, Sq, Sk] scores; a plain
+        [Sq, Sk] bias already broadcasts from the trailing dims."""
+        if bias.ndim == 2:
+            return bias
+        for _ in range(n_head_dims):
+            bias = bias[:, :, None]
         return bias
 
     if mode == "repeat":
@@ -132,7 +157,7 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             scores = jnp.einsum("zbqhd,zbshd->zbhqs", q_c, k,
                                 preferred_element_type=jnp.float32)
             scores = _dims(scores, "data", "pod", "model")
-            p = _softmax_chunk(scores, bias_for(pos_c))
+            p = _softmax_chunk(scores, headed(bias_for(pos_c), 1))
             out = jnp.einsum("zbhqs,zbshd->zbqhd", p.astype(v.dtype), v)
             return _dims(out, "data", "pod", None, "model")
 
@@ -147,7 +172,7 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         def chunk_attn(q_c, pos_c):
             scores = _gqa_scores(q_c, k)
             scores = _dims(scores, "data", "pod", None, None, None, "model")
-            p = _softmax_chunk(scores, bias_for(pos_c))
+            p = _softmax_chunk(scores, headed(bias_for(pos_c), 2))
             out = _gqa_combine(p, v)          # psum over model (Sk shards)
             return _dims(out, "data", "pod")
 
@@ -164,7 +189,7 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             scores = _gqa_scores(q_c, k)
             if mode == "grouped":
                 scores = _dims(scores, "data", "pod", "model")
-            p = _softmax_chunk(scores, bias_for(pos_c))
+            p = _softmax_chunk(scores, headed(bias_for(pos_c), 2))
             return _gqa_combine(p, v)
 
         reshape_out = True
@@ -172,6 +197,7 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     if Sq <= q_chunk:
         out = chunk_attn(q, q_pos)
     else:
+        assert q_pos.ndim == 1, "per-lane q_pos is single-chunk (decode)"
         assert Sq % q_chunk == 0, (Sq, q_chunk)
         n = Sq // q_chunk
         qs = jnp.moveaxis(

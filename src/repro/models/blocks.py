@@ -124,11 +124,23 @@ def attn_sublayer(x: jnp.ndarray, p: Dict, lora: Dict, cfg: ModelConfig,
 
     new_cache = None
     if cache is not None and write_index is not None:
-        # decode / cache-filling prefill: write new K/V at write_index
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), write_index, axis=2)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), write_index, axis=2)
+        if getattr(write_index, "ndim", 0) == 2:
+            # per-lane decode write: each (Z, b) stream scatters its one
+            # new K/V row at its OWN index (continuous batching — lanes
+            # at different positions advance in the same fused step)
+            assert S == 1, "per-lane cache writes are decode-only"
+            Sc = cache["k"].shape[2]
+            sel = (jnp.arange(Sc, dtype=jnp.int32)[None, None, :]
+                   == write_index[..., None])[..., None, None]
+            ck = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
+            cv = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+        else:
+            # global-position decode / cache-filling prefill: every lane
+            # writes the same slice starting at write_index
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), write_index, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), write_index, axis=2)
         new_cache = {"k": ck, "v": cv}
         k_all, v_all = ck, cv
         kp = k_pos if k_pos is not None else jnp.arange(

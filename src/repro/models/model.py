@@ -160,10 +160,15 @@ def forward(cfg: ModelConfig, params: Dict, lora: Dict, tokens: jnp.ndarray,
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     new_cache = None
     if cache is not None:
-        new_cache = {"layers": new_states, "pos": jnp.array(S, jnp.int32)}
+        per_lane = getattr(cache["pos"], "ndim", 0) == 2
+        new_pos = (jnp.full_like(cache["pos"], S) if per_lane
+                   else jnp.array(S, jnp.int32))
+        new_cache = {"layers": new_states, "pos": new_pos}
         if "k_pos" in cache:
-            new_cache["k_pos"] = jnp.arange(
-                cache["k_pos"].shape[0], dtype=jnp.int32)
+            kp = jnp.arange(cache["k_pos"].shape[-1], dtype=jnp.int32)
+            new_cache["k_pos"] = (
+                jnp.broadcast_to(kp, cache["k_pos"].shape) if per_lane
+                else kp)
     return x, aux, new_cache
 
 
@@ -213,9 +218,14 @@ def per_slot_xent(cfg: ModelConfig, params: Dict, hidden: jnp.ndarray,
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: ModelConfig, Z: int, bsz: int, max_len: int, *,
-               ring: bool = False) -> Dict:
+               ring: bool = False, per_lane: bool = False) -> Dict:
     """Build a decode cache. ``ring=True`` => sliding-window ring buffer of
-    size cfg.sliding_window (sub-quadratic long-context decode)."""
+    size cfg.sliding_window (sub-quadratic long-context decode).
+
+    ``per_lane=True`` => the decode position is a ``[Z, bsz]`` vector (and
+    the ring ``k_pos`` a ``[Z, bsz, Sc]`` tensor): every (slot, lane)
+    stream advances independently, so requests can join and leave
+    mid-decode with no epoch barrier (true continuous batching)."""
     dtype = dtype_of(cfg.dtype)
     L = cfg.num_layers
     KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
@@ -244,33 +254,79 @@ def init_cache(cfg: ModelConfig, Z: int, bsz: int, max_len: int, *,
     else:
         layers = {"attn": attn_state()}
 
-    cache: Dict[str, Any] = {"layers": layers,
-                             "pos": jnp.array(0, jnp.int32)}
+    if per_lane:
+        pos = jnp.zeros((Z, bsz), jnp.int32)
+    else:
+        pos = jnp.array(0, jnp.int32)
+    cache: Dict[str, Any] = {"layers": layers, "pos": pos}
     if ring and cfg.family not in ("ssm",):
-        cache["k_pos"] = jnp.full((Sc,), RING_INIT_POS, jnp.int32)
+        kp = jnp.full((Sc,), RING_INIT_POS, jnp.int32)
+        cache["k_pos"] = (jnp.broadcast_to(kp, (Z, bsz, Sc)) if per_lane
+                         else kp)
     return cache
 
 
+def _where_lanes(mask: jnp.ndarray, new_tree, old_tree, lead: int = 1):
+    """Per-lane tree select: take ``new`` where ``mask`` ([Z, b] bool),
+    keep ``old`` elsewhere. ``lead`` = leading dims before the (Z, b)
+    axes (1 for [L, Z, b, ...] layer-state leaves, 0 for [Z, b, ...]).
+    Untouched lanes stay bitwise identical (jnp.where is a select)."""
+
+    def sel(n, o):
+        m = mask.reshape((1,) * lead + mask.shape
+                         + (1,) * (n.ndim - lead - mask.ndim))
+        return jnp.where(m, n, o)
+
+    return jax.tree_util.tree_map(sel, new_tree, old_tree)
+
+
 def decode_step(cfg: ModelConfig, params: Dict, lora: Dict, cache: Dict,
-                tokens: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
-    """One decode step. tokens: [Z, b] int32 -> (logits [Z,b,V], cache')."""
+                tokens: jnp.ndarray,
+                active: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step. tokens: [Z, b] int32 -> (logits [Z,b,V], cache').
+
+    With a GLOBAL position cache (``cache["pos"]`` scalar) every lane
+    writes/reads at the same position — the historical round-batching
+    path. With a PER-LANE cache (``pos`` is [Z, b]) each (slot, lane)
+    stream carries its own position: K/V writes scatter at each lane's
+    own index, RoPE angles and the causal bias are built per lane, and a
+    lane never sees keys beyond its own position — so neighbors mid-join
+    or mid-retirement cannot perturb it. ``active`` ([Z, b] bool,
+    per-lane caches only) freezes idle lanes: their cache, position and
+    recurrent state stay bitwise untouched while live lanes advance."""
     Z, bsz = tokens.shape
     pos = cache["pos"]
+    per_lane = getattr(pos, "ndim", 0) == 2
+    assert active is None or per_lane, "active mask needs a per-lane cache"
     x = _embed(cfg, params, tokens[:, :, None], None)
-    positions = text_positions((), 1, cfg.rope, offset=pos)
+    if per_lane:
+        positions = pos[..., None]                     # [Z, b, 1]
+        if cfg.rope.is_mrope:
+            positions = jnp.broadcast_to(positions, (3, Z, bsz, 1))
+    else:
+        positions = text_positions((), 1, cfg.rope, offset=pos)
 
     ring = "k_pos" in cache
     ctx: Dict[str, Any] = {
         "angles": _angles(cfg, positions),
-        "q_pos": pos[None],
+        "q_pos": pos[..., None] if per_lane else pos[None],
     }
     new_kpos = None
     if cfg.family != "ssm":
         if ring:
             W = cfg.sliding_window
             widx = jnp.mod(pos, W)
-            new_kpos = jax.lax.dynamic_update_index_in_dim(
-                cache["k_pos"], pos, widx, axis=0)
+            if per_lane:
+                sel = jnp.arange(W, dtype=jnp.int32)[None, None, :] \
+                    == widx[..., None]                 # [Z, b, W]
+                new_kpos = jnp.where(sel, pos[..., None], cache["k_pos"])
+                if active is not None:
+                    new_kpos = jnp.where(active[..., None], new_kpos,
+                                         cache["k_pos"])
+            else:
+                new_kpos = jax.lax.dynamic_update_index_in_dim(
+                    cache["k_pos"], pos, widx, axis=0)
             ctx.update(write_index=widx, k_pos=new_kpos, window=W)
         else:
             ctx.update(write_index=pos,
@@ -282,7 +338,95 @@ def decode_step(cfg: ModelConfig, params: Dict, lora: Dict, cache: Dict,
         remat=False, need_state=True)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = _unembed(cfg, params, x[:, :, 0])
-    new_cache = {"layers": new_states, "pos": pos + 1}
+    new_pos = pos + 1
+    if active is not None:
+        new_states = _where_lanes(active, new_states, cache["layers"])
+        new_pos = jnp.where(active, new_pos, pos)
+    new_cache = {"layers": new_states, "pos": new_pos}
     if new_kpos is not None:
         new_cache["k_pos"] = new_kpos
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Lane lifecycle (continuous batching over a per-lane cache)
+# ---------------------------------------------------------------------------
+
+def reset_lanes(cfg: ModelConfig, cache: Dict,
+                lane_mask: jnp.ndarray) -> Dict:
+    """Return a cache with the masked lanes reset to the just-initialized
+    state (pos 0, zero K/V and recurrent state, ring slots pushed to the
+    far past) — a fresh request can join those lanes of a LIVE cache.
+    Unmasked lanes are bitwise untouched."""
+    assert cache["pos"].ndim == 2, "reset_lanes needs a per-lane cache"
+    layers = _where_lanes(
+        lane_mask,
+        jax.tree_util.tree_map(jnp.zeros_like, cache["layers"]),
+        cache["layers"])
+    out: Dict[str, Any] = {
+        "layers": layers,
+        "pos": jnp.where(lane_mask, 0, cache["pos"]).astype(jnp.int32),
+    }
+    if "k_pos" in cache:
+        out["k_pos"] = jnp.where(lane_mask[..., None],
+                                 jnp.int32(RING_INIT_POS), cache["k_pos"])
+    return out
+
+
+def prefill_lanes(cfg: ModelConfig, params: Dict, lora: Dict, cache: Dict,
+                  tokens: jnp.ndarray, lane_mask: jnp.ndarray,
+                  plens: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """Block-prefill a subset of lanes of a LIVE per-lane cache.
+
+    tokens: [Z, b, P] int32 (rows of non-joining lanes are ignored);
+    lane_mask: [Z, b] bool. The joining lanes' prompts are written into
+    their own lane caches at offsets 0..P-1 and their positions set to P
+    while every other lane — mid-decode or idle — stays bitwise
+    untouched. Returns (last-token logits [Z, b, V], merged cache).
+
+    ``plens`` ([Z, b] int32) serves RAGGED joins in one launch: each
+    joining lane's true prompt length, with ``tokens`` right-padded to
+    the common P. A lane's position is set to its own length and its
+    logits taken at ``plens - 1``. The padded tail beyond a lane's
+    length writes garbage K/V at indices >= len — harmless: causality
+    masks index i until the lane's position reaches i, and decode
+    rewrites index i (write-before-read) on the very step it first
+    becomes visible, so padded prefill stays bitwise identical to an
+    exact-length one.
+
+    Non-ring attention families only (ring and recurrent families join
+    by streaming the prompt through ``decode_step``)."""
+    assert cache["pos"].ndim == 2, "prefill_lanes needs a per-lane cache"
+    assert "k_pos" not in cache and cfg.family not in ("ssm", "hybrid"), \
+        "block lane prefill supports non-ring attention caches only"
+    Z, b, P = tokens.shape
+    work = reset_lanes(cfg, cache, lane_mask)
+    # forward writes ALL lanes at 0..P-1; only joining lanes are merged
+    x = _embed(cfg, params, tokens, None)
+    positions = text_positions((), P, cfg.rope)
+    ctx: Dict[str, Any] = {
+        "angles": _angles(cfg, positions),
+        "q_pos": jnp.arange(P, dtype=jnp.int32),
+        "window": _train_window(cfg),
+        "write_index": jnp.array(0, jnp.int32),
+    }
+    x, _, new_states = _scan_layers(
+        cfg, x, params, lora, ctx, work["layers"],
+        remat=False, need_state=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if plens is None:
+        last = x[:, :, -1]
+        new_pos = jnp.full_like(cache["pos"], P)
+    else:
+        idx = (plens.astype(jnp.int32) - 1)[:, :, None, None]
+        last = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (Z, b, 1, x.shape[-1])), axis=2
+        )[:, :, 0]
+        new_pos = plens.astype(jnp.int32)
+    logits = _unembed(cfg, params, last)
+    merged = {
+        "layers": _where_lanes(lane_mask, new_states, cache["layers"]),
+        "pos": jnp.where(lane_mask, new_pos, cache["pos"]).astype(jnp.int32),
+    }
+    return logits, merged

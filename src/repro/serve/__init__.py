@@ -1,20 +1,23 @@
 """Tune-to-serve: the multi-LoRA serving tier on the shared backbone.
 
-``AdapterPool`` (hot publish/retire into backbone slots) +
-``ServingReplica`` (round-based continuous batching through the
-rank-local decode path) + ``ServingFrontend`` (queueing, routing, §A.3+k2
-admission) + ``ServingReplicaDriver`` (the replica as a first-class
-cluster resident). See docs/ARCHITECTURE.md "Serving tier".
+``AdapterPool`` (hot publish/retire into backbone slots, batched via
+``publish_many``) + ``ServingReplica`` (continuous batching over
+per-lane cache positions — requests join/leave mid-decode with zero
+barrier — plus the legacy round-based baseline) + ``ServingFrontend``
+(queueing, routing, §A.3+k2 admission on actual per-request footprints)
++ ``ServingReplicaDriver`` (the replica as a first-class cluster
+resident). See docs/ARCHITECTURE.md "Serving tier".
 """
 from repro.serve.driver import ServingReplicaDriver, serving_spec
 from repro.serve.frontend import AdmissionError, ServingFrontend
 from repro.serve.pool import (SPEC_VERSION, AdapterPool, PoolFull,
                               adapter_template)
-from repro.serve.replica import RoundStats, ServeRequest, ServingReplica
+from repro.serve.replica import (RequestRecord, RoundStats, ServeRequest,
+                                 ServingReplica)
 
 __all__ = [
     "AdapterPool", "PoolFull", "SPEC_VERSION", "adapter_template",
-    "ServingReplica", "ServeRequest", "RoundStats",
+    "ServingReplica", "ServeRequest", "RoundStats", "RequestRecord",
     "ServingFrontend", "AdmissionError",
     "ServingReplicaDriver", "serving_spec",
 ]

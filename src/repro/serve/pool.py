@@ -79,12 +79,19 @@ class AdapterPool:
         self.version = 0                       # bumps on publish/retire
         self.publish_latencies_s: List[float] = []
         self._meta: Dict[str, Dict] = {}       # adapter_id -> publish meta
+        self._ranks_cache: Optional[jnp.ndarray] = None
+        self._ranks_version = -1
 
     # ------------------------------------------------------------ queries
     @property
     def ranks(self) -> jnp.ndarray:
-        """[Z] int32 TRUE ranks (0 = empty slot) — a forward input."""
-        return jnp.asarray(self.slot_rank, jnp.int32)
+        """[Z] int32 TRUE ranks (0 = empty slot) — a forward input.
+        Cached on device per pool version: the serving hot loop reads
+        this every fused step and must not re-upload each time."""
+        if self._ranks_version != self.version:
+            self._ranks_cache = jnp.asarray(self.slot_rank, jnp.int32)
+            self._ranks_version = self.version
+        return self._ranks_cache
 
     def resident(self) -> Dict[str, int]:
         return {a: s for s, a in enumerate(self.slot_adapter)
@@ -139,6 +146,51 @@ class AdapterPool:
         self._meta[adapter_id] = dict(meta or {})
         self.version += 1
         return slot
+
+    def publish_many(self, items: List[Tuple]) -> List[int]:
+        """Batched publish: insert N adapters with ONE fused slot update
+        per LoRA leaf (``x.at[:, slots].set(stacked)``) instead of N
+        sequential ``slot_update`` dispatches — amortizes the device
+        round-trip when the frontend drains a burst of pending publishes
+        between decode steps. ``items`` is a list of
+        ``(adapter_id, adapter, rank)`` or ``(adapter_id, adapter, rank,
+        meta)``. Returns the slot indices, in item order."""
+        if not items:
+            return []
+        free = self.free_slots()
+        if len(items) > len(free):
+            raise PoolFull(
+                f"{len(items)} publishes, {len(free)} free slots")
+        resident = self.resident()
+        norm = []
+        for it in items:
+            aid, adapter, rank = it[0], it[1], it[2]
+            meta = it[3] if len(it) > 3 else None
+            assert aid not in resident, f"adapter {aid!r} already resident"
+            assert all(aid != o[0] for o in norm), \
+                f"adapter {aid!r} listed twice"
+            norm.append((aid, adapter,
+                         max(min(int(rank), self.r_max), 1), meta))
+        slots = free[:len(norm)]
+        idx = jnp.asarray(slots, jnp.int32)
+        masked = [_mask_adapter(ad, rank, self.r_max)
+                  for _, ad, rank, _ in norm]
+        t0 = time.perf_counter()
+
+        def upd(old, *news):           # news: one [L, ...] leaf per adapter
+            return old.at[:, idx].set(
+                jnp.stack([n.astype(old.dtype) for n in news], axis=1))
+
+        self.lora = jax.tree_util.tree_map(upd, self.lora, *masked)
+        jax.block_until_ready(self.lora)
+        per = (time.perf_counter() - t0) / len(norm)
+        for slot, (aid, _, rank, meta) in zip(slots, norm):
+            self.publish_latencies_s.append(per)   # amortized per adapter
+            self.slot_adapter[slot] = aid
+            self.slot_rank[slot] = rank
+            self._meta[aid] = dict(meta or {})
+        self.version += len(norm)
+        return slots
 
     def publish_checkpoint(self, path: str,
                            adapter_id: Optional[str] = None,

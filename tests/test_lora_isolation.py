@@ -516,6 +516,46 @@ def test_hot_publish_retire_mid_decode_leaves_residents_unchanged(serve_env):
     assert pool.version == 4        # 1 initial + hot publish/retire/publish
 
 
+def test_mid_decode_join_leaves_residents_bitwise_unchanged(serve_env):
+    """The continuous-batching isolation invariant: requests JOINING free
+    lanes mid-decode (block prefill into their own lane caches — or, on a
+    ring cache, a k_pos-reset streamed join — while residents keep
+    decoding) must not move a resident lane's logits or tokens by a bit.
+    Covers same-slot lane reuse AND other-slot joins, non-ring and ring."""
+    from repro.serve import AdapterPool, ServeRequest, ServingReplica
+
+    cfg, params, adapters, ranks, prompts = serve_env
+
+    def run(join, ring):
+        pool = AdapterPool(cfg, 3)
+        for z in range(3):
+            pool.publish(f"a{z}", adapters[z], ranks[z], slot=z)
+        rep = ServingReplica(cfg, params, pool, lanes=2, max_len=24,
+                             ring=ring)
+        resident = ServeRequest("res", "a0", prompts[0][0], 10)
+        assert rep.try_join(resident)
+        for step in range(24):
+            if join and step == 4:          # mid-decode, lanes still live
+                for z, i in ((0, 1), (1, 0), (2, 1)):
+                    r = ServeRequest(f"j{z}{i}", f"a{z}", prompts[z][i], 6)
+                    assert rep.try_join(r)
+            rep.step_continuous(record_logits=True)
+            if resident.done:
+                break
+        assert resident.done
+        return (tuple(resident.tokens),
+                [(t, lg[0, 0]) for t, lg in rep.step_logits])
+
+    for ring in (False, True):
+        toks_solo, log_solo = run(join=False, ring=ring)
+        toks_join, log_join = run(join=True, ring=ring)
+        assert toks_solo == toks_join
+        assert len(log_solo) == len(log_join)
+        for (ts, ls), (tj, lj) in zip(log_solo, log_join):
+            assert ts == tj
+            np.testing.assert_array_equal(ls, lj)          # bitwise
+
+
 def test_migration_across_replicas_bitwise_equal(exec_env):
     """The migration primitive end to end: a task mid-training on replica 1
     is suspended (SlotSnapshot per resident job), restored on replica 2

@@ -138,7 +138,7 @@ def test_frontend_routing_multi_round_deterministic(env):
     for z in range(3):
         pool.publish(f"a{z}", adapters[z], ranks[z])
     rep = ServingReplica(cfg, params, pool, lanes=2, max_len=24)
-    fe = ServingFrontend(rep)
+    fe = ServingFrontend(rep, mode="round")
     rng = np.random.default_rng(7)
     prompts = {z: [_prompt(rng, cfg, int(rng.integers(3, 9)))
                    for _ in range(3)] for z in range(3)}
@@ -159,9 +159,11 @@ def test_frontend_routing_multi_round_deterministic(env):
 
 
 def test_frontend_publish_admission_memory_model(env):
-    """Publish admission against the §A.3+k2 model: rank-tokens are billed
-    at TRUE rank, a publish over budget is refused, retiring an adapter
-    frees its charge."""
+    """Round-mode publish admission against the §A.3+k2 model: rank-tokens
+    are billed at TRUE rank over the pessimistic ``lanes x max_len``
+    working set, a publish over budget is refused, retiring an adapter
+    frees its charge. (Continuous mode instead charges actual per-request
+    footprints at join time — covered below.)"""
     cfg, params, adapters, ranks = env
     pool = AdapterPool(cfg, 3)
     rep = ServingReplica(cfg, params, pool, lanes=2, max_len=16)
@@ -170,7 +172,7 @@ def test_frontend_publish_admission_memory_model(env):
     cap = (2 * lane_toks * 1.0 + (4 + 8) * lane_toks * 0.5) / 0.9 + 1.0
     mem = MemoryModel(k0=0.0, k1=1.0, seq_len=16, capacity=cap,
                       k2=0.5, r_max=cfg.lora.r_max)
-    fe = ServingFrontend(rep, mem=mem)
+    fe = ServingFrontend(rep, mem=mem, mode="round")
     fe.publish("a0", adapters[0], 4)
     fe.publish("a1", adapters[1], 8)
     with pytest.raises(AdmissionError):
@@ -180,6 +182,174 @@ def test_frontend_publish_admission_memory_model(env):
     fe.publish("a2", adapters[2], 2)        # rank-2 now fits
     assert set(pool.resident()) == {"a0", "a2"}
     assert fe.publishes == 3
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: per-lane positions, sampling, batched publish
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_round_greedy(env):
+    """Greedy continuous decode reproduces the round baseline token-for-
+    token — homogeneous prompts joining at t=0 AND a ragged-length backlog
+    whose round mode pads every stream to the slowest — while spending
+    strictly fewer fused decode steps on the ragged set (the per-lane
+    causal mask is exercised by every mid-decode lane reuse)."""
+    cfg, params, adapters, ranks = env
+    rng = np.random.default_rng(11)
+    cases = [
+        [5, 5, 5, 5, 5, 5],          # homogeneous, t=0 joiners
+        [3, 9, 4, 7, 5, 6, 8, 3],    # ragged backlog, mid-decode joins
+    ]
+    ragged_steps = {}
+    for lens in cases:
+        prompts = [_prompt(rng, cfg, n) for n in lens]
+        outs, steps = {}, {}
+        for mode in ("round", "continuous"):
+            pool = AdapterPool(cfg, 3)
+            for z in range(3):
+                pool.publish(f"a{z}", adapters[z], ranks[z])
+            rep = ServingReplica(cfg, params, pool, lanes=2, max_len=24)
+            fe = ServingFrontend(rep, mode=mode)
+            rids = [fe.submit(f"a{i % 3}", p, 6)
+                    for i, p in enumerate(prompts)]
+            res = fe.drain()
+            outs[mode] = [res[r] for r in rids]
+            steps[mode] = rep.total_decode_steps
+            if mode == "continuous":
+                assert len(rep.records) == len(prompts)
+                assert all(rec.new_tokens == 6 for rec in rep.records)
+                assert all(rec.total_s >= rec.queue_s + rec.prefill_s
+                           + rec.decode_s - 1e-6 for rec in rep.records)
+        assert outs["round"] == outs["continuous"]
+        ragged_steps = steps
+    # the ragged case must save fused steps (the zero-barrier win)
+    assert ragged_steps["continuous"] < ragged_steps["round"]
+
+
+def test_continuous_ring_per_lane_mask(env):
+    """Ring caches carry PER-LANE k_pos: a lane re-joined mid-decode on a
+    wrapped ring must not see its previous occupant's K/V (the join
+    resets k_pos so the window term masks stale slots). Continuous ring
+    decode must match the round-mode ring baseline token-for-token."""
+    cfg, params, adapters, ranks = env
+    rng = np.random.default_rng(13)
+    prompts = [_prompt(rng, cfg, n) for n in (3, 7, 4, 6, 5, 8)]
+    outs = []
+    for mode in ("round", "continuous"):
+        pool = AdapterPool(cfg, 3)
+        for z in range(3):
+            pool.publish(f"a{z}", adapters[z], ranks[z])
+        rep = ServingReplica(cfg, params, pool, lanes=2, max_len=24,
+                             ring=True)
+        assert rep.ring
+        fe = ServingFrontend(rep, mode=mode)
+        rids = [fe.submit(f"a{i % 3}", p, 6) for i, p in enumerate(prompts)]
+        res = fe.drain()
+        outs.append([res[r] for r in rids])
+    assert outs[0] == outs[1]
+
+
+def test_sampling_deterministic_under_fixed_seed(env):
+    """Per-request temperature/top_k sampling keys off
+    fold_in(fold_in(sample_seed, request.seed), token_index): two
+    identically-seeded runs produce identical streams, and the greedy
+    default stays independent of the replica's sample seed (the bitwise
+    path)."""
+    cfg, params, adapters, ranks = env
+    rng = np.random.default_rng(5)
+    prompt = _prompt(rng, cfg, 6)
+
+    def run(sample_seed, temperature):
+        pool = AdapterPool(cfg, 2)
+        pool.publish("a0", adapters[0], ranks[0])
+        pool.publish("a1", adapters[1], ranks[1])
+        rep = ServingReplica(cfg, params, pool, lanes=2, max_len=16,
+                             sample_seed=sample_seed)
+        fe = ServingFrontend(rep)
+        rids = [fe.submit(a, prompt, 8, temperature=temperature,
+                          top_k=16, seed=3) for a in ("a0", "a1")]
+        res = fe.drain()
+        return [res[r] for r in rids]
+
+    assert run(9, 0.7) == run(9, 0.7)           # deterministic
+    assert run(0, 0.0) == run(42, 0.0)          # greedy ignores the seed
+
+
+def test_continuous_join_admission_actual_tokens(env):
+    """Continuous-mode admission charges a request's ACTUAL footprint
+    (prompt + max_new tokens, rank-tokens at the adapter's charged rank)
+    against the in-flight sum — not the pessimistic lanes x max_len
+    reserve. A budget sized for one such request at a time still serves a
+    3-deep backlog by deferring joins until charges release, and a
+    request that can never fit is refused at submit."""
+    cfg, params, adapters, ranks = env
+    pool = AdapterPool(cfg, 3)
+    pool.publish("a0", adapters[0], 4)
+    rep = ServingReplica(cfg, params, pool, lanes=2, max_len=16)
+    # budget 36.0: one 8-token request costs 8 + 0.5*4*8 = 24, two = 48
+    mem = MemoryModel(k0=0.0, k1=1.0, seq_len=16, capacity=40.0,
+                      k2=0.5, r_max=cfg.lora.r_max)
+    fe = ServingFrontend(rep, mem=mem)
+    rng = np.random.default_rng(3)
+    rids = [fe.submit("a0", _prompt(rng, cfg, 4), 4) for _ in range(3)]
+    out = fe.drain()
+    assert all(len(out[r]) == 4 for r in rids)
+    assert fe.deferred_joins > 0        # lanes were free, memory was not
+    with pytest.raises(AdmissionError):  # 16 + 0.5*4*16 = 48 > 36: never fits
+        fe.submit("a0", _prompt(rng, cfg, 8), 8)
+
+
+def test_publish_many_batched(env):
+    """publish_many lands N adapters with one fused slot update,
+    bitwise-identical to N sequential publishes; an over-capacity batch
+    is refused atomically (no partial landing)."""
+    cfg, params, adapters, ranks = env
+    seq = AdapterPool(cfg, 3)
+    for z in range(3):
+        seq.publish(f"a{z}", adapters[z], ranks[z])
+    bat = AdapterPool(cfg, 3)
+    slots = bat.publish_many(
+        [(f"a{z}", adapters[z], ranks[z]) for z in range(3)])
+    assert slots == [0, 1, 2]
+    assert bat.resident() == seq.resident()
+    assert bat.slot_rank == seq.slot_rank
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)),
+        bat.lora, seq.lora)
+    assert bat.version == 3
+    assert len(bat.publish_latencies_s) == 3    # amortized, one per adapter
+    with pytest.raises(PoolFull):
+        bat.publish_many([("b0", adapters[0], 4)])
+    part = AdapterPool(cfg, 2)
+    with pytest.raises(PoolFull):
+        part.publish_many([(f"c{z}", adapters[z], ranks[z])
+                           for z in range(3)])
+    assert part.resident() == {}        # refused before any mutation
+
+
+def test_queue_publish_drains_between_steps(env):
+    """queue_publish defers adapters to the next continuous step boundary
+    and lands the burst as ONE batched publish_many; slot admission still
+    fails fast at queue time, counting the pending burst."""
+    cfg, params, adapters, ranks = env
+    pool = AdapterPool(cfg, 3)
+    rep = ServingReplica(cfg, params, pool, lanes=2, max_len=24)
+    fe = ServingFrontend(rep)
+    fe.publish("a0", adapters[0], ranks[0])
+    fe.queue_publish("a1", adapters[1], ranks[1])
+    fe.queue_publish("a2", adapters[2], ranks[2])
+    with pytest.raises(AdmissionError):  # 1 resident + 2 pending = full
+        fe.queue_publish("b0", adapters[0], 4)
+    assert pool.resident() == {"a0": 0}  # nothing landed yet
+    rng = np.random.default_rng(1)
+    rid = fe.submit("a0", _prompt(rng, cfg, 5), 4)
+    out = fe.drain()
+    assert len(out[rid]) == 4
+    assert set(pool.resident()) == {"a0", "a1", "a2"}
+    assert fe.publishes == 3 and pool.version == 3
+    rid2 = fe.submit("a2", _prompt(rng, cfg, 5), 4)  # fresh adapter serves
+    assert len(fe.drain()[rid2]) == 4
 
 
 # ---------------------------------------------------------------------------
