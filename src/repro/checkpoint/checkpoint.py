@@ -32,13 +32,31 @@ def _encode(arr: np.ndarray) -> np.ndarray:
     return arr
 
 
-def save_pytree(path: str, tree: Any, meta: Dict | None = None) -> None:
+def _atomic_savez(path: str, payload: Dict[str, Any]) -> None:
+    """Crash-safe npz write: tmp file + fsync + ``os.replace`` so a kill
+    mid-write can never leave a truncated artifact under ``path``."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def save_pytree(path: str, tree: Any, meta: Dict | None = None,
+                atomic: bool = False) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten_with_paths(tree)
     dtypes = {k: str(v.dtype) for k, v in flat.items()}
     flat = {k: _encode(v) for k, v in flat.items()}
-    np.savez(path, __meta__=json.dumps(meta or {}),
-             __dtypes__=json.dumps(dtypes), **flat)
+    payload = dict(__meta__=json.dumps(meta or {}),
+                   __dtypes__=json.dumps(dtypes), **flat)
+    if atomic:
+        if not path.endswith(".npz"):
+            path = path + ".npz"
+        _atomic_savez(path, payload)
+    else:
+        np.savez(path, **payload)
 
 
 def load_pytree(path: str, like: Any) -> Tuple[Any, Dict]:
@@ -60,6 +78,57 @@ def load_pytree(path: str, like: Any) -> Tuple[Any, Dict]:
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
         restored.append(jnp.asarray(arr, leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, restored), meta
+
+
+def save_state_tree(path: str, tree: Dict, meta: Dict | None = None) -> None:
+    """Free-form nested-dict checkpoint (always atomic).
+
+    Unlike ``save_pytree``, keys may contain ``/`` (job ids do: they are
+    ``task/label``) and no ``like`` template is needed to load — leaf
+    paths are stored as a JSON array alongside positional arrays. Dict
+    insertion order is preserved through a save/load round-trip, which
+    the lifecycle restore path relies on (resident order is semantic)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    paths: list = []
+    dtypes: list = []
+    arrays: Dict[str, np.ndarray] = {}
+
+    def walk(prefix: list, node: Any) -> None:
+        if isinstance(node, dict):
+            for k, v in node.items():
+                walk(prefix + [str(k)], v)
+        else:
+            arr = np.asarray(node)
+            dtypes.append(str(arr.dtype))
+            arrays[f"arr_{len(paths)}"] = _encode(arr)
+            paths.append(prefix)
+
+    walk([], tree)
+    _atomic_savez(path, dict(__meta__=json.dumps(meta or {}),
+                             __paths__=json.dumps(paths),
+                             __dtypes__=json.dumps(dtypes), **arrays))
+
+
+def load_state_tree(path: str) -> Tuple[Dict, Dict]:
+    """Inverse of ``save_state_tree``: ``(nested host tree, meta)``."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    paths = json.loads(str(data["__paths__"]))
+    dtypes = json.loads(str(data["__dtypes__"]))
+    tree: Dict = {}
+    for i, (p, dt) in enumerate(zip(paths, dtypes)):
+        arr = data[f"arr_{i}"]
+        if dt == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        node = tree
+        for k in p[:-1]:
+            node = node.setdefault(k, {})
+        node[p[-1]] = arr
+    return tree, meta
 
 
 def extract_slot(lora_tree: Dict, slot: int) -> Dict:

@@ -310,6 +310,21 @@ class Engine:
                 task.jobs(), task.max_steps, self.profiled_step_time(task))
         return factory
 
+    def resumed_driver_factory(self, task: Task,
+                               early_exit: EarlyExitConfig, state,
+                               start_chunk: int = 0):
+        """Driver factory continuing a task from a durable mid-task
+        checkpoint (``checkpoint/taskstate.py`` ``(tree, meta)`` state):
+        the fresh executor's lifecycle is restored to the saved step
+        before any chunk runs, so the replayed chunk stream is the
+        uninterrupted run's tail, bitwise."""
+        def factory():
+            return ExecutorTaskDriver(
+                task.task_name, self._make_executor(task, early_exit),
+                task.jobs(), task.max_steps, self.profiled_step_time(task),
+                resume_state=state, start_chunk=start_chunk)
+        return factory
+
     def batched_execution(self, tasks: Sequence[Task], schedule: Schedule,
                           early_exit: EarlyExitConfig = EarlyExitConfig(),
                           strategy: str = "elastic") -> EngineReport:

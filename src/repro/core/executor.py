@@ -890,6 +890,10 @@ class BatchedExecutor:
         self.seed = seed
         self._batcher = batcher
         self.slots = self.backbone.slots      # compat: direct slot access
+        # Optional durability hook, called as ``ckpt_hook(lc, chunk_i)``
+        # after every completed chunk while the lifecycle is still live —
+        # the service installs a checkpointer here (checkpoint/taskstate).
+        self.ckpt_hook = None
 
     # ------------------------------------------------------------------ run
     def run_task(self, task_name: str, jobs: Dict[str, TrainConfig],
@@ -917,16 +921,44 @@ class BatchedExecutor:
         ex.add_task(lc)
         ex.take_wall()
         lc.begin()
-        guard = 10 + 20 * total_steps * max(len(jobs), 1)
+        return (yield from self._drive_chunks(lc, 0))
+
+    def resume_task_chunks(self, task_name: str,
+                           jobs: Dict[str, TrainConfig], total_steps: int,
+                           state, start_chunk: int = 0):
+        """``run_task_chunks`` continued from a durable mid-task checkpoint
+        (``checkpoint/taskstate.py`` state). The restored lifecycle picks
+        up at its exact step — batch-stream cursors, PRNG key, monitors,
+        optimizer moments and per-slot rank/width all come from the
+        snapshot — so the remaining chunk stream is bitwise identical to
+        the uninterrupted run's tail."""
+        from repro.checkpoint.taskstate import restore_lifecycle
+        ex = self.backbone
+        batcher = (self._batcher if self._batcher is not None
+                   else SlotBatcher(self.dataset, self.Z, self.b,
+                                    seed=self.seed))
+        lc = restore_lifecycle(ex, task_name, jobs, total_steps, ee=self.ee,
+                               max_slots=self.Z, batcher=batcher, state=state)
+        ex.add_task(lc)
+        ex.take_wall()
+        ex.take_tokens()
+        return (yield from self._drive_chunks(lc, start_chunk))
+
+    def _drive_chunks(self, lc: TaskLifecycle, chunk_i: int):
+        ex = self.backbone
+        guard = 10 + 20 * lc.total_steps * max(len(lc.jobs), 1)
         while not lc.done and guard > 0:
             n = max(min(lc.steps_until_boundary(), self.eval_every), 1)
             ex.run_steps(n)
             guard -= n
             lc.on_steps(n)
+            chunk_i += 1
+            if self.ckpt_hook is not None and not lc.done:
+                self.ckpt_hook(lc, chunk_i)
             yield self._flush(lc, n)
-        assert guard > 0, f"task {task_name} stopped progressing"
+        assert guard > 0, f"task {lc.task_name} stopped progressing"
         yield self._flush(lc, 0)
-        ex.remove_task(task_name)
+        ex.remove_task(lc.task_name)
         return lc.result()
 
     def _flush(self, lc: TaskLifecycle, steps: int) -> ChunkReport:

@@ -34,14 +34,71 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import json
+import logging
+import os
+import threading
+import time
 from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 from repro.core.early_exit import EarlyExitConfig
 from repro.sched import profiler
 from repro.sched.cluster import (ColocationSpec, ElasticClusterRuntime,
                                  RuntimeReport, TaskDriver)
-from repro.sched.events import EventKind, ProgressEvent
+from repro.sched.events import EventKind, ProgressEvent, event_to_json
 from repro.sched.inter_task import Schedule, TaskSpec
+
+_log = logging.getLogger(__name__)
+
+
+def _task_record(task, early_exit: EarlyExitConfig) -> Optional[Dict]:
+    """JSON-able description of an ``engine.Task`` for the journal, or
+    ``None`` when the task is not serializable (in-memory ModelConfig /
+    TaskDataset objects) — recovery then needs the task re-supplied via
+    ``recover(tasks=...)``."""
+    if not isinstance(task.model, str) or not isinstance(task.dataset, str):
+        return None
+    rec = {"model": task.model, "dataset": task.dataset,
+           "search_space": task.search_space, "num_gpus": task.num_gpus,
+           "max_steps": task.max_steps, "num_slots": task.num_slots,
+           "seed": task.seed, "name": task.name,
+           "loss_kind": task.loss_kind,
+           "device_memory": task.device_memory,
+           "early_exit": dataclasses.asdict(early_exit)}
+    try:
+        json.dumps(rec)
+    except (TypeError, ValueError):
+        return None
+    return rec
+
+
+def _task_from_record(rec: Dict) -> Tuple[Any, EarlyExitConfig]:
+    from repro.core.engine import Task
+    task = Task(model=rec["model"], dataset=rec["dataset"],
+                search_space={k: list(v)
+                              for k, v in rec["search_space"].items()},
+                num_gpus=int(rec["num_gpus"]),
+                max_steps=int(rec["max_steps"]),
+                num_slots=int(rec["num_slots"]), seed=int(rec["seed"]),
+                name=rec["name"], loss_kind=rec["loss_kind"],
+                device_memory=int(rec["device_memory"]))
+    return task, EarlyExitConfig(**rec["early_exit"])
+
+
+class ServiceLoop:
+    """Handle for the wall-clock background pump (``run_forever``)."""
+
+    def __init__(self, thread: threading.Thread, stop: threading.Event):
+        self._thread = thread
+        self._stop = stop
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+    def stop(self, timeout: Optional[float] = 10.0) -> None:
+        self._stop.set()
+        self._thread.join(timeout)
 
 
 class TaskState(enum.Enum):
@@ -186,7 +243,9 @@ class TuningService:
                  profile_path: Optional[str] = None,
                  max_tasks_per_tenant: Optional[int] = None,
                  serve_dir: Optional[str] = None,
-                 fitted: Optional[bool] = None):
+                 fitted: Optional[bool] = None,
+                 state_dir: Optional[str] = None,
+                 ckpt_every: int = 1):
         if profile_store is None and profile_path is not None:
             # persistence across sessions (ROADMAP service hardening):
             # feedback observed by earlier service processes seeds this one
@@ -230,6 +289,32 @@ class TuningService:
         self._recorded: set = set()
         self._fb_seen = 0
         self._pre_cancels: List[Tuple[str, Optional[float]]] = []
+        # durability (crash recovery): a write-ahead event journal plus an
+        # in-flight SlotSnapshot checkpointer installed on every engine
+        # executor the service creates. Both live under state_dir.
+        self.state_dir = state_dir
+        self.ckpt_every = int(ckpt_every)
+        self._journal = None
+        self._ckpt = None
+        if state_dir is not None:
+            from repro.checkpoint.taskstate import TaskCheckpointer
+            from repro.sched.journal import EventJournal
+            self._journal = EventJournal(state_dir)
+            self._ckpt = TaskCheckpointer(state_dir, journal=self._journal,
+                                          every=self.ckpt_every)
+            self._journal.append({
+                "rec": "session", "total_gpus": engine.total_gpus,
+                "strategy": engine.strategy,
+                "eval_every": engine.eval_every,
+                "ckpt_every": self.ckpt_every, "serve_dir": serve_dir})
+        self._jrn_seen = 0
+        # wall-clock driving: submit/cancel/step are serialized under this
+        # lock so tenants can call into the service while run_forever pumps
+        self._lock = threading.RLock()
+        self._loop: Optional[ServiceLoop] = None
+        # TASK_RECOVERED / republish audit events buffered until the
+        # runtime session is live (annotate() needs a running event loop)
+        self._pending_annotations: List[ProgressEvent] = []
 
     # ------------------------------------------------------------ admission
     def active_tasks_of(self, tenant: str) -> int:
@@ -270,14 +355,18 @@ class TuningService:
         return self.submit_spec(
             spec, factory, at=at, profile_key=self.engine.profile_key(task),
             scale_duration=not explicit,
-            colo=self.engine.colocation_spec(task), tenant=tenant)
+            colo=self.engine.colocation_spec(task), tenant=tenant,
+            _journal_task=_task_record(task, early_exit),
+            _journal_kind="engine")
 
     def submit_spec(self, spec: TaskSpec,
                     driver_factory: Callable[[], TaskDriver],
                     at: float = 0.0, profile_key: Optional[Tuple] = None,
                     scale_duration: bool = True,
                     colo: Optional[ColocationSpec] = None,
-                    tenant: str = "default") -> TaskHandle:
+                    tenant: str = "default",
+                    _journal_task: Optional[Dict] = None,
+                    _journal_kind: Optional[str] = None) -> TaskHandle:
         """Low-level admission: any ``TaskDriver`` factory (simulated
         drivers for benchmarks / property tests). When ``profile_key`` is
         given and ``scale_duration`` is on, the estimated duration is
@@ -289,28 +378,51 @@ class TuningService:
         fuse key the moment cross-task admission accepts it — since the
         ragged refactor the key is width-free (arch/gpus/loss), so mixed
         batch-size submissions land on live replicas too."""
-        name = spec.name
-        assert name not in self._meta, f"duplicate task name {name}"
-        self._check_quota(tenant)
-        unscaled = spec.duration
-        if profile_key is not None and scale_duration:
-            spec = dataclasses.replace(
-                spec, duration=self.profile_store.scaled_duration(
-                    profile_key, spec.duration))
-        meta = _TaskMeta(spec=spec, unscaled_duration=unscaled,
-                         submitted_at=max(at, self.now),
-                         profile_key=profile_key, tenant=tenant, colo=colo)
+        with self._lock:
+            name = spec.name
+            assert name not in self._meta, f"duplicate task name {name}"
+            self._check_quota(tenant)
+            unscaled = spec.duration
+            if profile_key is not None and scale_duration:
+                spec = dataclasses.replace(
+                    spec, duration=self.profile_store.scaled_duration(
+                        profile_key, spec.duration))
+            meta = _TaskMeta(spec=spec, unscaled_duration=unscaled,
+                             submitted_at=max(at, self.now),
+                             profile_key=profile_key, tenant=tenant,
+                             colo=colo)
 
-        def wrapped() -> TaskDriver:
-            drv = driver_factory()
-            meta.driver = drv            # kept for wall-time feedback
-            return drv
+            def wrapped() -> TaskDriver:
+                drv = driver_factory()
+                meta.driver = drv        # kept for wall-time feedback
+                # chunk-boundary SlotSnapshot checkpointing: engine drivers
+                # expose their BatchedExecutor's hook; simulated drivers
+                # don't and simply skip durability
+                ex = getattr(drv, "executor", None)
+                if (self._ckpt is not None and ex is not None
+                        and hasattr(ex, "ckpt_hook")):
+                    ex.ckpt_hook = self._ckpt.on_chunk
+                return drv
 
-        self._runtime.submit(spec, wrapped, at=at, colo=colo)
-        self._meta[name] = meta
-        handle = TaskHandle(self, name)
-        self._handles[name] = handle
-        return handle
+            if self._journal is not None:
+                # write-ahead: the submission is durable before the runtime
+                # ever sees it, so a crash mid-admission still requeues it
+                self._journal.append({
+                    "rec": "submit", "name": name, "at": float(at),
+                    "tenant": tenant,
+                    "kind": _journal_kind or (
+                        "engine" if _journal_task is not None else "driver"),
+                    "spec": {"name": spec.name,
+                             "duration": float(spec.duration),
+                             "gpus": int(spec.gpus),
+                             "release": float(spec.release)},
+                    "unscaled_duration": float(unscaled),
+                    "task": _journal_task})
+            self._runtime.submit(spec, wrapped, at=at, colo=colo)
+            self._meta[name] = meta
+            handle = TaskHandle(self, name)
+            self._handles[name] = handle
+            return handle
 
     def attach_serving(self, frontend, *, name: str = "serve/replica-0",
                        gpus: int = 1, horizon_s: float = 3600.0,
@@ -333,13 +445,15 @@ class TuningService:
         return handle
 
     def cancel(self, name: str, at: Optional[float] = None) -> bool:
-        assert name in self._meta, f"unknown task {name}"
-        if not self._runtime._live:
-            # session not started: queue the cancellation — beginning the
-            # loop here would lock out a later run_until_idle(initial=...)
-            self._pre_cancels.append((name, at))
-            return True
-        return self._runtime.cancel(name, at=at)
+        with self._lock:
+            assert name in self._meta, f"unknown task {name}"
+            if not self._runtime._live:
+                # session not started: queue the cancellation — beginning
+                # the loop here would lock out a later
+                # run_until_idle(initial=...)
+                self._pre_cancels.append((name, at))
+                return True
+            return self._runtime.cancel(name, at=at)
 
     # ------------------------------------------------------------ the loop
     @property
@@ -352,14 +466,29 @@ class TuningService:
             pre, self._pre_cancels = self._pre_cancels, []
             for name, at in pre:
                 self._runtime.cancel(name, at=at)
+            notes, self._pending_annotations = self._pending_annotations, []
+            for e in notes:
+                self._runtime.annotate(e)
         else:
             assert initial is None, "session already live"
 
     def _step(self) -> bool:
-        self._ensure_live()
-        more = self._runtime.step()
-        self._feedback()
-        return more
+        with self._lock:
+            self._ensure_live()
+            more = self._runtime.step()
+            self._feedback()
+            self._journal_events()
+            return more
+
+    def _journal_events(self) -> None:
+        """Append runtime events (arrivals, replans/adoptions, progress,
+        completions, pod kills) to the write-ahead journal, once each."""
+        if self._journal is None:
+            return
+        evs = self._runtime_events()
+        for e in evs[self._jrn_seen:]:
+            self._journal.append({"rec": "event", "event": event_to_json(e)})
+        self._jrn_seen = len(evs)
 
     def _drive(self, done: Callable[[], bool]) -> None:
         self._ensure_live()
@@ -393,6 +522,203 @@ class TuningService:
         target = path or self.profile_path
         assert target, "no profile path configured"
         self.profile_store.save(target)
+
+    def run_forever(self, poll_s: float = 0.05,
+                    stall_timeout_s: float = 30.0) -> ServiceLoop:
+        """Wall-clock driver: a daemon thread pumps ``step()`` on real
+        time so submissions execute as they arrive instead of waiting for
+        an explicit ``run_until_idle()``. Virtual cluster time still
+        advances by profiled durations (it is the planning clock), while
+        wall-clock step observations keep flowing into the ProfileStore
+        through the usual ``_feedback`` path; checkpoints fire at the same
+        chunk boundaries as in batch driving. A stall watchdog logs a
+        warning when the runtime is busy but no event has fired within
+        ``stall_timeout_s`` real seconds. Returns a ``ServiceLoop``
+        handle — call ``.stop()`` to drain out."""
+        assert self._loop is None or not self._loop.alive, \
+            "service loop already running"
+        stop = threading.Event()
+
+        def pump() -> None:
+            seen = 0
+            last_change = time.monotonic()
+            idle_saved = True
+            while not stop.is_set():
+                try:
+                    with self._lock:
+                        more = self._step()
+                        busy = not self._runtime.idle()
+                        n = len(self._runtime_events())
+                except Exception:
+                    _log.exception("service loop crashed")
+                    return
+                nowm = time.monotonic()
+                if n != seen:
+                    seen, last_change = n, nowm
+                elif busy and nowm - last_change > stall_timeout_s:
+                    _log.warning(
+                        "service stall: no event for %.1fs "
+                        "(virtual now=%.3f)", nowm - last_change, self.now)
+                    last_change = nowm
+                if more:
+                    idle_saved = False
+                else:
+                    if not idle_saved and self.profile_path is not None:
+                        with self._lock:
+                            self.profile_store.save(self.profile_path)
+                        idle_saved = True
+                    stop.wait(poll_s)
+
+        t = threading.Thread(target=pump, name="tuning-service-loop",
+                             daemon=True)
+        t.start()
+        self._loop = ServiceLoop(t, stop)
+        return self._loop
+
+    # ------------------------------------------------------------ recovery
+    @classmethod
+    def recover(cls, state_dir: str, *, tasks=None, factories=None,
+                engine=None, serve_frontend=None,
+                **service_kw) -> "TuningService":
+        """Rebuild a service from a crashed session's ``state_dir``.
+
+        Replays the write-ahead journal: every journaled submission
+        without a terminal (completed/cancelled) event is re-admitted —
+        from its latest durable ``SlotSnapshot`` checkpoint when one
+        loads cleanly (the task resumes mid-flight, bitwise), and from
+        zero otherwise. Corrupt journal segments or checkpoints degrade
+        to requeue-from-zero with a warning rather than failing recovery.
+        Winner artifacts under ``serve_dir`` are re-published to
+        ``serve_frontend`` when given. Engine tasks whose record was not
+        serializable must be re-supplied via ``tasks`` (``Task`` or
+        ``(Task, EarlyExitConfig)`` entries, matched by ``task_name``);
+        plain driver submissions (benchmark simulations,
+        serving leases) need a fresh factory in ``factories`` or are
+        skipped. Emits one ``TASK_RECOVERED`` audit event per re-admitted
+        task once the new session goes live."""
+        from repro.checkpoint.taskstate import load_task_checkpoint
+        from repro.sched.journal import replay_journal
+        rep = replay_journal(state_dir)
+        session = rep.session() or {}
+        kw = dict(service_kw)
+        if engine is None:
+            for k in ("total_gpus", "strategy", "eval_every"):
+                if session.get(k) is not None:
+                    kw.setdefault(k, session[k])
+        kw.setdefault("serve_dir", session.get("serve_dir"))
+        kw.setdefault("ckpt_every", int(session.get("ckpt_every") or 1))
+        svc = cls(engine=engine, state_dir=state_dir, **kw)
+        ckpts = rep.checkpoints()
+        if rep.corrupt:
+            # a corrupt segment may have swallowed completions or newer
+            # checkpoint records: distrust all snapshots, requeue from zero
+            _log.warning("journal under %s has %d corrupt segment line(s);"
+                         " recovering by requeue-from-zero", state_dir,
+                         len(rep.corrupt))
+            ckpts = {}
+        terminal = rep.terminal_tasks()
+        task_by_name: Dict[str, Tuple[Any, Optional[EarlyExitConfig]]] = {}
+        for t in (tasks or []):
+            task, ee = t if isinstance(t, tuple) else (t, None)
+            task_by_name[task.task_name] = (task, ee)
+        factories = dict(factories or {})
+        for sub in rep.submits():
+            name = sub["name"]
+            if name in terminal:
+                continue
+            state = None
+            ck = ckpts.get(name)
+            if ck is not None:
+                state = load_task_checkpoint(ck["path"])  # None if corrupt
+            if sub.get("kind") == "engine":
+                trec = sub.get("task")
+                if name in task_by_name:
+                    task, ee = task_by_name[name]
+                    if ee is None:
+                        ee = (EarlyExitConfig(**trec["early_exit"]) if trec
+                              else EarlyExitConfig())
+                elif trec is not None:
+                    task, ee = _task_from_record(trec)
+                else:
+                    _log.warning("task %r was submitted with in-memory "
+                                 "model/dataset and is not in tasks=: "
+                                 "skipped", name)
+                    continue
+                if state is not None:
+                    tree_meta = state[1]
+                    chunk = int(tree_meta.get("chunk", 0))
+                    # residual spec: remaining-steps bound at profiled
+                    # step time stays a true upper bound for the planner
+                    dur = (max(int(tree_meta["remaining_steps_bound"]), 1)
+                           * svc.engine.profiled_step_time(task))
+                    spec = dataclasses.replace(
+                        svc.engine.profile_raw(task, ee), duration=dur)
+                    svc.submit_spec(
+                        spec,
+                        svc.engine.resumed_driver_factory(
+                            task, ee, state, start_chunk=chunk),
+                        at=0.0, profile_key=svc.engine.profile_key(task),
+                        scale_duration=False,
+                        colo=svc.engine.colocation_spec(task),
+                        _journal_task=trec, _journal_kind="engine")
+                    reason, detail = "resumed", f"chunk={chunk}"
+                else:
+                    svc.submit(task, at=0.0, early_exit=ee)
+                    reason, detail = "requeued", "from step 0"
+            else:
+                fac = factories.get(name)
+                if fac is None:
+                    _log.warning("driver task %r has no recovery factory: "
+                                 "skipped", name)
+                    continue
+                sp = sub["spec"]
+                svc.submit_spec(
+                    TaskSpec(name=name, duration=float(sp["duration"]),
+                             gpus=int(sp["gpus"]), release=0.0),
+                    fac, at=0.0, scale_duration=False)
+                reason, detail = "requeued", "driver task from zero"
+            svc._pending_annotations.append(ProgressEvent(
+                kind=EventKind.TASK_RECOVERED, task=name, reason=reason,
+                detail=detail))
+        if serve_frontend is not None:
+            svc.republish_served(serve_frontend)
+        return svc
+
+    def republish_served(self, frontend) -> List[str]:
+        """Crash recovery of the serving tier: re-publish every winner
+        artifact under ``serve_dir`` to ``frontend`` (publishes load from
+        disk, never live executor state). Corrupt or rejected artifacts
+        are skipped with a warning. Returns the published adapter ids."""
+        import glob
+        import zipfile
+
+        from repro.serve.frontend import AdmissionError
+        from repro.serve.pool import CorruptCheckpoint, PoolFull
+        self.serving = frontend
+        published: List[str] = []
+        if self.serve_dir is None:
+            return published
+        for path in sorted(glob.glob(os.path.join(self.serve_dir,
+                                                  "*.npz"))):
+            try:
+                aid = frontend.publish_checkpoint(path)
+                published.append(aid)
+                self._ckpt_paths.setdefault(aid, path)
+                self._pending_annotations.append(ProgressEvent(
+                    kind=EventKind.ADAPTER_PUBLISHED, task=aid,
+                    reason="republished", detail=f"from={path}"))
+            except (CorruptCheckpoint, OSError, ValueError, KeyError,
+                    zipfile.BadZipFile) as e:
+                # the frontend's admission peek reads the artifact before
+                # the pool does, so truncation can surface as a raw
+                # zip/KeyError there rather than as CorruptCheckpoint
+                _log.warning("serve artifact %s unreadable: %s", path, e)
+            except AssertionError as e:
+                # arch/spec_version mismatch or already resident
+                _log.warning("serve artifact %s rejected: %s", path, e)
+            except (AdmissionError, PoolFull) as e:
+                _log.warning("serve artifact %s refused: %s", path, e)
+        return published
 
     # ------------------------------------------------------------ feedback
     def _feedback(self) -> None:
@@ -465,22 +791,25 @@ class TuningService:
         fuse_key = list(meta.colo.fuse_key) if meta.colo is not None else None
         path = None
         if self.serve_dir is not None:
-            import os
-
             from repro.checkpoint.checkpoint import save_pytree
             path = os.path.join(self.serve_dir,
                                 name.replace("/", "_") + ".npz")
+            # atomic (tmp + fsync + os.replace): a crash mid-write never
+            # leaves a truncated winner artifact under serve_dir
             save_pytree(path, jr.adapter, meta={
                 "adapter_id": name, "task": name, "job": best_job,
                 "rank": rank,
                 "arch": fuse_key[0] if fuse_key else None,
                 "fuse_key": fuse_key, "spec_version": SPEC_VERSION,
-                "best_val": float(res.best_val)})
+                "best_val": float(res.best_val)}, atomic=True)
             self._ckpt_paths[name] = path
+            if self._journal is not None:
+                self._journal.append({"rec": "serve", "task": name,
+                                      "path": path})
         if self.serving is None:
             return
         from repro.serve.frontend import AdmissionError
-        from repro.serve.pool import PoolFull
+        from repro.serve.pool import CorruptCheckpoint, PoolFull
         try:
             if path is not None:
                 self.serving.publish_checkpoint(path, adapter_id=name)
@@ -490,7 +819,7 @@ class TuningService:
             reason, detail = "published", (
                 f"rank={rank} slot={self.serving.pool.slot_of(name)}"
                 + (" from=checkpoint" if path else " from=live"))
-        except (AdmissionError, PoolFull) as e:
+        except (AdmissionError, PoolFull, CorruptCheckpoint) as e:
             reason, detail = "refused", str(e)   # artifact still on disk
         self._runtime.annotate(ProgressEvent(
             kind=EventKind.ADAPTER_PUBLISHED, task=name, job=best_job,

@@ -341,6 +341,7 @@ class RuntimeReport:
     colocated: Dict[str, str] = dataclasses.field(default_factory=dict)
     preemptions: int = 0
     migrations: int = 0
+    pod_kills: int = 0
 
     def per_gpu_utilization(self) -> List[float]:
         mk = max(self.makespan, _EPS)
@@ -436,6 +437,22 @@ class ElasticClusterRuntime:
         self._push_ctrl(at, "cancel", name)
         return True
 
+    def inject_fault(self, name: str, at: Optional[float] = None,
+                     backoff: float = 0.0) -> None:
+        """Chaos injection: kill the pod running ``name`` at virtual time
+        ``at``. The task's driver is suspended at its last completed chunk
+        boundary (chunks are atomic — the virtual-time analogue of a
+        durable checkpoint), its GPUs are freed, and it rejoins the
+        pending queue after ``backoff`` seconds, resuming its suspended
+        driver through the PR 6 re-admission path. Killing a fused guest
+        kills its host replica (the pod), suspending every tenant with
+        it. Killing a task that is not running is a no-op at fire time."""
+        assert self._live, "inject_fault() requires a live session"
+        assert name in self._by_name, f"unknown task {name}"
+        at = self.now if at is None else max(at, self.now)
+        self._fault_backoffs.setdefault(name, []).append(float(backoff))
+        self._push_ctrl(at, "podkill", name)
+
     def _push_ctrl(self, at: float, kind: str, name: str) -> None:
         self._seq += 1
         heapq.heappush(self._ctrl, (at, self._seq, kind, name))
@@ -473,6 +490,8 @@ class ElasticClusterRuntime:
         self._suspended: Dict[str, _Suspended] = {}  # preempted guests
         self._preempted_n = 0
         self._migrated_n = 0
+        self._fault_backoffs: Dict[str, List[float]] = {}
+        self._pod_kills = 0
         self.now = 0.0
         self._live = True
 
@@ -555,6 +574,9 @@ class ElasticClusterRuntime:
             self._replan(T)
             self._admit(T)
             return
+        if kind == "podkill":
+            self._pod_kill(T, name)
+            return
         # cancel
         if name in self._results or name in self._cancel_set:
             return
@@ -608,6 +630,51 @@ class ElasticClusterRuntime:
         self._suspended.pop(name, None)
         self._replan(T)
         self._admit(T)
+
+    def _pod_kill(self, T: float, name: str) -> None:
+        """Execute an injected pod loss (``inject_fault``): suspend the
+        running driver at its last chunk boundary, free and bill its
+        GPUs, and requeue the task after its backoff. Driver progress is
+        never lost — chunks are atomic, so the kill lands exactly at the
+        boundary the in-flight work last committed (the wasted wall time
+        between boundary and kill is the recomputed-work cost)."""
+        backoffs = self._fault_backoffs.get(name, [])
+        backoff = backoffs.pop(0) if backoffs else 0.0
+        target = self._hosted.get(name, name)    # a guest dies with its pod
+        run = self._running.get(target)
+        if run is None or target in self._cancel_set:
+            return                                # nothing running: no pod
+        Tk = max(T, run.local_time)  # task clock may lead global time
+        self.now = max(self.now, Tk)
+        self._pod_kills += 1
+        self._events.append(ProgressEvent(
+            kind=EventKind.POD_KILLED, task=target, time=Tk,
+            detail=f"backoff={backoff:.3f}"))
+        for g in run.gpu_ids:
+            self._owner[g] = None
+            self._gpu_busy[g] += Tk - run.start
+        self._realized.append(Placement(
+            dataclasses.replace(run.spec, duration=Tk - run.start),
+            run.start, run.gpu_ids))
+        del self._running[target]
+        # suspend the WHOLE driver (a replica keeps its guests: all
+        # tenants resume together when the pod is re-placed)
+        est = run.driver.residual_estimate()
+        residual = max(0.0, min(est, run.residual))
+        self._suspended[target] = _Suspended(driver=run.driver,
+                                             residual=residual)
+        self._plan.pop(target, None)
+        self._bounds.pop(target, None)
+        re_at = Tk + backoff
+        sub = self._by_name[target]
+        self._by_name[target] = dataclasses.replace(
+            sub, spec=dataclasses.replace(
+                sub.spec, duration=max(residual, _EPS), release=re_at),
+            at=re_at)
+        self._future[target] = re_at
+        self._push_ctrl(re_at, "arrive", target)
+        self._replan(Tk)
+        self._admit(Tk)
 
     def _step_chunk(self) -> None:
         _, name = heapq.heappop(self._heap)
@@ -1274,7 +1341,8 @@ class ElasticClusterRuntime:
             cancelled=tuple(sorted(self._cancel_set)),
             colocated=dict(self._hosted),
             preemptions=self._preempted_n,
-            migrations=self._migrated_n)
+            migrations=self._migrated_n,
+            pod_kills=self._pod_kills)
 
     # ------------------------------------------------------------------ run
     def run(self, initial: Optional[Schedule] = None) -> RuntimeReport:
@@ -1559,12 +1627,17 @@ class ExecutorTaskDriver(TaskDriver):
     resident at a time instead of one per concurrently-scheduled task."""
 
     def __init__(self, name: str, executor, jobs, total_steps: int,
-                 step_time_s: float):
+                 step_time_s: float, resume_state=None, start_chunk: int = 0):
         self.name = name
         self.executor = executor
         self.jobs = jobs
         self.total_steps = total_steps
         self.step_time_s = step_time_s
+        # durable-recovery path: a (tree, meta) lifecycle checkpoint from
+        # checkpoint/taskstate.py — start() then continues the task from
+        # its exact saved step instead of from zero
+        self.resume_state = resume_state
+        self.start_chunk = start_chunk
         self._chunks: List[DriverChunk] = []
         self._bounds: List[int] = []
         self._slot_bounds: List[int] = []
@@ -1576,8 +1649,13 @@ class ExecutorTaskDriver(TaskDriver):
         self._tokens = 0
 
     def start(self, now: float) -> None:
-        gen = self.executor.run_task_chunks(
-            self.name, self.jobs, self.total_steps)
+        if self.resume_state is not None:
+            gen = self.executor.resume_task_chunks(
+                self.name, self.jobs, self.total_steps, self.resume_state,
+                start_chunk=self.start_chunk)
+        else:
+            gen = self.executor.run_task_chunks(
+                self.name, self.jobs, self.total_steps)
         while True:
             try:
                 report = next(gen)

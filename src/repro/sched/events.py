@@ -47,6 +47,9 @@ class EventKind(enum.Enum):
     TASK_CANCELLED = "task_cancelled"       # tenant cancel (frees capacity)
     REPLAN = "replan"                       # runtime re-solved the queue
     ADAPTER_PUBLISHED = "adapter_published"  # winner pushed to serving tier
+    REPLICA_FAILED = "replica_failed"       # injected chunk failure (chaos)
+    POD_KILLED = "pod_killed"               # pod loss: task requeued w/ backoff
+    TASK_RECOVERED = "task_recovered"       # restored from durable state
 
 # Kinds that can shrink a task's residual duration and therefore trigger
 # a replan of the pending queue.
@@ -74,6 +77,23 @@ class ProgressEvent:
 
     def stamped(self, time: float) -> "ProgressEvent":
         return dataclasses.replace(self, time=time)
+
+
+def event_to_json(event: ProgressEvent) -> Dict:
+    """JSON-able dict form of a ``ProgressEvent`` (journal line payload)."""
+    d = dataclasses.asdict(event)
+    d["kind"] = event.kind.value
+    d["dropped"] = list(event.dropped)
+    return d
+
+
+def event_from_json(d: Dict) -> ProgressEvent:
+    """Inverse of ``event_to_json`` (journal replay)."""
+    return ProgressEvent(
+        kind=EventKind(d["kind"]), task=d["task"],
+        time=float(d.get("time", 0.0)), job=d.get("job", ""),
+        reason=d.get("reason", ""), step=int(d.get("step", 0)),
+        dropped=tuple(d.get("dropped", ())), detail=d.get("detail", ""))
 
 
 @dataclasses.dataclass

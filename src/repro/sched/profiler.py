@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -425,30 +426,40 @@ class ProfileStore:
 
     @classmethod
     def load(cls, path: str) -> "ProfileStore":
-        with open(path) as f:
-            data = json.load(f)
-        store = cls(ema=float(data.get("ema", 0.5)))
-        for rec in data.get("records", []):
-            store._records[tuple(rec["key"])] = ProfileRecord(
-                duration_frac=float(rec["duration_frac"]),
-                wall_step_time_s=(None if rec.get("wall_step_time_s") is None
-                                  else float(rec["wall_step_time_s"])),
-                wall_token_time_s=(None
-                                   if rec.get("wall_token_time_s") is None
-                                   else float(rec["wall_token_time_s"])),
-                observations=int(rec.get("observations", 1)))
-        for entry in data.get("steps", []):
-            store._steps[tuple(entry["key"])] = [
-                StepObservation(
-                    tokens=float(o["tokens"]),
-                    rank_tokens=float(o["rank_tokens"]),
-                    wall_s=float(o["wall_s"]),
-                    peak_memory=(None if o.get("peak_memory") is None
-                                 else float(o["peak_memory"])))
-                for o in entry["observations"]]
-        for entry in data.get("durable_specs", []):
-            store._durable_specs[tuple(entry["key"])] = entry["spec"]
-        return store
+        """Load a persisted store. A corrupt/truncated file (crash
+        mid-write predating the atomic ``save``, disk damage) degrades to
+        a FRESH store with a warning — analytic profiles take over —
+        rather than refusing to start."""
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            store = cls(ema=float(data.get("ema", 0.5)))
+            for rec in data.get("records", []):
+                store._records[tuple(rec["key"])] = ProfileRecord(
+                    duration_frac=float(rec["duration_frac"]),
+                    wall_step_time_s=(
+                        None if rec.get("wall_step_time_s") is None
+                        else float(rec["wall_step_time_s"])),
+                    wall_token_time_s=(
+                        None if rec.get("wall_token_time_s") is None
+                        else float(rec["wall_token_time_s"])),
+                    observations=int(rec.get("observations", 1)))
+            for entry in data.get("steps", []):
+                store._steps[tuple(entry["key"])] = [
+                    StepObservation(
+                        tokens=float(o["tokens"]),
+                        rank_tokens=float(o["rank_tokens"]),
+                        wall_s=float(o["wall_s"]),
+                        peak_memory=(None if o.get("peak_memory") is None
+                                     else float(o["peak_memory"])))
+                    for o in entry["observations"]]
+            for entry in data.get("durable_specs", []):
+                store._durable_specs[tuple(entry["key"])] = entry["spec"]
+            return store
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            logging.getLogger(__name__).warning(
+                "profile store %s unreadable (%s): starting fresh", path, e)
+            return cls()
 
     @classmethod
     def load_or_new(cls, path: str) -> "ProfileStore":

@@ -17,6 +17,7 @@ written by the service's tune-to-serve hook — the crash-safe path.
 from __future__ import annotations
 
 import time
+import zipfile
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -60,6 +61,14 @@ def _mask_adapter(adapter: Dict, rank: int, r_max: int) -> Dict:
 
 class PoolFull(Exception):
     """Raised by ``publish`` when no free slot is available."""
+
+
+class CorruptCheckpoint(Exception):
+    """Raised by ``publish_checkpoint`` when the artifact on disk cannot
+    be read (truncated npz, missing keys, shape mismatch). Deliberately
+    distinct from the AssertionError raised for a *valid* artifact with
+    mismatched arch/spec_version: startup/recovery paths catch this, log
+    a warning, and skip the artifact instead of crashing."""
 
 
 class AdapterPool:
@@ -199,14 +208,18 @@ class AdapterPool:
         The checkpoint's meta must carry the TRUE ``rank``, a matching
         ``spec_version``, and (when present) an ``arch`` equal to this
         pool's backbone. Returns ``(adapter_id, slot)``."""
-        adapter, meta = load_pytree(path, self._template)
+        try:
+            adapter, meta = load_pytree(path, self._template)
+            rank = int(meta["rank"])
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile) as e:
+            raise CorruptCheckpoint(
+                f"checkpoint {path!r} unreadable: {e}") from e
         ver = meta.get("spec_version")
         assert ver == SPEC_VERSION, \
             f"checkpoint spec_version {ver} != pool {SPEC_VERSION}"
         arch = meta.get("arch")
         assert arch is None or arch == self.cfg.name, \
             f"checkpoint arch {arch!r} != backbone {self.cfg.name!r}"
-        rank = int(meta["rank"])
         aid = adapter_id or meta.get("adapter_id") or path
         s = self.publish(aid, adapter, rank, slot=slot, meta=meta)
         return aid, s
